@@ -1,0 +1,54 @@
+"""Measured wall-clock of the TPU-kernel implementations (interpret mode
+on CPU -- relative numbers only; the roofline section covers the TPU
+target).  Also times the functional PuD machine simulator."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import make_plan
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 1 << 18
+    for n_bits, chunks in [(8, 1), (16, 2), (32, 5)]:
+        plan = make_plan(n_bits, chunks)
+        vals = jnp.asarray(rng.integers(0, 1 << n_bits, n, dtype=np.uint32))
+        lut = ops.encode_lut(vals, plan)
+        lt, le = ops.resolve_indices(plan, 1 << (n_bits - 1))
+        us = _time(ops.compare_gt_scalar, lut, jnp.asarray(lt),
+                   jnp.asarray(le))
+        rows.append((f"kernel_clutch_merge_{n_bits}b", round(us, 1),
+                     round(n / us, 1)))  # elems/us
+        planes = ops.encode_bitplanes(vals, n_bits)
+        us = _time(lambda p: ops.bitserial_compare(p, 12345, n_bits),
+                   planes)
+        rows.append((f"kernel_bitserial_{n_bits}b", round(us, 1),
+                     round(n / us, 1)))
+    logits = jnp.asarray(rng.normal(size=(8, 32768)).astype(np.float32))
+    tau = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    us = _time(ops.sample_threshold_mask, logits, tau)
+    rows.append(("kernel_minp_mask_8x32k", round(us, 1),
+                 round(8 * 32768 / us, 1)))
+    addrs = jnp.asarray(rng.integers(0, 1 << 10, (256, 512), dtype=np.int32))
+    leaves = jnp.asarray(rng.normal(size=(512, 1 << 10)).astype(np.float32))
+    us = _time(ops.gbdt_leaf_sum, addrs, leaves)
+    rows.append(("kernel_leaf_gather_256x512", round(us, 1),
+                 round(256 * 512 / us, 1)))
+    return rows

@@ -1,0 +1,439 @@
+"""One benchmark per paper table/figure (Clutch, ICS'26).
+
+Every function returns a list of CSV rows ``(name, us_per_call, derived)``
+where ``us_per_call`` is the modeled (DRAM-command-level) or measured time
+per operation and ``derived`` carries the figure's headline quantity.
+Methodology follows the paper (§5): PuD latency/energy from the DRAM
+command sequence with bank-level parallelism; CPU/GPU baselines
+bandwidth-bound; both validated functionally by the machine simulator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.bitserial import bitserial_op_count, paper_bitserial_op_count
+from repro.core.clutch import clutch_op_count
+from repro.core.encoding import make_plan, min_chunks_for_budget
+from repro.core.machine import PuDArch, PuDOp
+
+M, U = PuDArch.MODIFIED, PuDArch.UNMODIFIED
+PRECISIONS = (8, 16, 32)
+KERNEL_CHUNKS = {8: 1, 16: 2, 32: 5}     # §5.1 (single subarray, native <)
+
+
+def _pud(method, n_bits, arch, sysconf, chunks=None):
+    chunks = chunks or KERNEL_CHUNKS[n_bits]
+    return cost.pud_compare_cost(method, n_bits, arch, sysconf,
+                                 chunks=chunks)
+
+
+# ------------------------------------------------------------------ #
+def fig6_breakdown():
+    """Execution-time breakdown of 32-bit bit-serial comparison: PuD ops
+    dominate (paper: 76% of latency)."""
+    rows = []
+    for arch in (U, M):
+        c = _pud("bitserial", 32, arch, cost.DESKTOP)
+        no_read = cost.pud_compare_cost("bitserial", 32, arch, cost.DESKTOP,
+                                        include_readout=False)
+        frac = no_read.time_ns / c.time_ns
+        rows.append((f"fig6_bitserial32_pudop_fraction_{arch.value}",
+                     c.time_ns / 1e3, round(frac, 3)))
+    return rows
+
+
+def fig9_tradeoff():
+    """Rows vs PuD ops per chunk count (Unmodified)."""
+    rows = []
+    for n_bits in (4, 8, 16, 32):
+        for c in range(1, min(n_bits, 8) + 1):
+            plan = make_plan(n_bits, c)
+            if plan.rows_required > 1016:
+                continue
+            rows.append((f"fig9_n{n_bits}_chunks{c}",
+                         clutch_op_count(c, U),
+                         plan.rows_required))
+    return rows
+
+
+def fig10_throughput():
+    """Vector-scalar comparison throughput, 6 systems x 3 precisions
+    (Giga-elems/s in `derived`)."""
+    rows = []
+    sysconf = cost.DESKTOP
+    n = sysconf.parallel_cols
+    for nb in PRECISIONS:
+        entries = {
+            "cpu_scan": cost.cpu_scan_cost(nb, n, sysconf),
+            "cpu_tree": cost.cpu_tree_cost(nb, n, sysconf),
+            "bitserial_U": _pud("bitserial", nb, U, sysconf),
+            "clutch_U": _pud("clutch", nb, U, sysconf),
+            "bitserial_M": _pud("bitserial", nb, M, sysconf),
+            "clutch_M": _pud("clutch", nb, M, sysconf),
+        }
+        for name, c in entries.items():
+            rows.append((f"fig10_{nb}b_{name}", c.time_ns / 1e3,
+                         round(c.throughput_geps, 2)))
+    return rows
+
+
+def fig11_energy():
+    rows = []
+    sysconf = cost.DESKTOP
+    n = sysconf.parallel_cols
+    for nb in PRECISIONS:
+        base = cost.cpu_scan_cost(nb, n, sysconf)
+        for name, c in [
+            ("cpu_scan", base),
+            ("bitserial_M", _pud("bitserial", nb, M, sysconf)),
+            ("clutch_M", _pud("clutch", nb, M, sysconf)),
+            ("bitserial_U", _pud("bitserial", nb, U, sysconf)),
+            ("clutch_U", _pud("clutch", nb, U, sysconf)),
+        ]:
+            rows.append((f"fig11_{nb}b_{name}", c.time_ns / 1e3,
+                         round(c.elems_per_uj / base.elems_per_uj, 2)))
+    return rows
+
+
+# ------------------------- GBDT (§6.1) ----------------------------- #
+
+GBDT_DATASETS = {"higgs": 13, "year": 28, "covtype": 54}  # feature counts
+GBDT_SIZES = {"small": 512, "medium": 1024, "large": 2048}
+
+
+def _gbdt_cost(n_feat, trees, depth, n_bits, arch, method, sysconf,
+               batch=1024, leaf_bits=16):
+    """End-to-end GBDT inference time model (per paper §6.1): PuD-side
+    comparisons + DRAM->host leaf-address row reads + CPU-side leaf sum."""
+    nodes = trees * depth
+    chunks = min_chunks_for_budget(
+        n_bits, 1016 - n_feat - 2).num_chunks if method == "clutch" else 0
+    if method == "clutch":
+        per_maj = 3 if arch is M else 4
+        ops_feat = clutch_op_count(chunks, arch) + 2 * per_maj + 1
+        counts_one = {"rowcopy": 1}
+        # build the op histogram for one instance
+        per = cost._pud_counts("clutch", n_bits, chunks, arch)
+        hist = {k: v * n_feat for k, v in per.items()}
+        extra_maj = 2 * n_feat  # mask AND + accumulate OR
+        if arch is M:
+            hist["rowcopy"] = hist.get("rowcopy", 0) + 2 * extra_maj + n_feat
+            hist["tra"] = hist.get("tra", 0) + extra_maj
+        else:
+            hist["rowcopy"] = hist.get("rowcopy", 0) + 2 * extra_maj + n_feat
+            hist["frac"] = hist.get("frac", 0) + extra_maj
+            hist["apa"] = hist.get("apa", 0) + extra_maj
+    else:
+        per = cost._pud_counts("bitserial", n_bits, 0, arch)
+        hist = {k: v * n_feat for k, v in per.items()}
+        extra_maj = 2 * n_feat
+        if arch is M:
+            hist["rowcopy"] = hist.get("rowcopy", 0) + 2 * extra_maj + n_feat
+            hist["tra"] = hist.get("tra", 0) + extra_maj
+        else:
+            hist["rowcopy"] = hist.get("rowcopy", 0) + 2 * extra_maj + n_feat
+            hist["frac"] = hist.get("frac", 0) + extra_maj
+            hist["apa"] = hist.get("apa", 0) + extra_maj
+    # batch maps one instance per bank -> waves of `total_banks`
+    waves = int(np.ceil(batch / sysconf.total_banks))
+    t_pud = cost.sequence_time_ns(hist, sysconf) * waves
+    e_pud = cost.sequence_energy_nj(hist, sysconf) * waves
+    # DRAM->host: one row (leaf-address bitmap) per bank per wave
+    addr_bytes = batch * nodes / 8
+    leaf_bytes = batch * trees * leaf_bits / 8
+    t_host = cost.transfer_time_ns(addr_bytes + leaf_bytes, sysconf)
+    # CPU leaf sum: bandwidth-bound on gathered leaves
+    e_host = cost.transfer_energy_nj(addr_bytes + leaf_bytes, sysconf) + \
+        sysconf.host_power_w * t_host
+    return cost.KernelCost(t_pud + t_host, e_pud + e_host +
+                           sysconf.host_idle_power_w * t_pud, batch)
+
+
+def _gbdt_cpu(n_feat, trees, depth, n_bits, sysconf, batch=1024,
+              cpns=0.35):
+    """Edge-CPU CatBoost model: `trees*depth` SIMD compares + leaf gather
+    per instance; compute-bound on the A53 (measured-scale constant)."""
+    ops = batch * trees * (depth * cpns + 2.0)
+    leaf_bytes = batch * trees * 2
+    t = ops + cost.transfer_time_ns(leaf_bytes, sysconf)
+    return cost.KernelCost(t, sysconf.host_power_w * t, batch)
+
+
+def fig14_gbdt():
+    rows = []
+    sysconf = cost.EDGE
+    for ds, nf in GBDT_DATASETS.items():
+        for nb in PRECISIONS:
+            cpu = _gbdt_cpu(nf, 2048, 10, nb, sysconf)
+            for name, arch, method in [("bitserial_M", M, "bitserial"),
+                                       ("clutch_M", M, "clutch"),
+                                       ("clutch_U", U, "clutch")]:
+                c = _gbdt_cost(nf, 2048, 10, nb, arch, method, sysconf)
+                rows.append((f"fig14_{ds}_{nb}b_{name}", c.time_ns / 1e3,
+                             round(cpu.time_ns / c.time_ns, 2)))
+    return rows
+
+
+def fig16_batch_sensitivity():
+    rows = []
+    sysconf = cost.EDGE
+    for batch in (64, 256, 1024, 4096):
+        cpu = _gbdt_cpu(13, 2048, 10, 32, sysconf, batch=batch,
+                        cpns=0.35 * (1.0 + 0.6 * (64 / batch) ** 0.5))
+        cl = _gbdt_cost(13, 2048, 10, 32, M, "clutch", sysconf, batch=batch)
+        rows.append((f"fig16_batch{batch}_clutchM", cl.time_ns / 1e3,
+                     round(cpu.time_ns / cl.time_ns, 2)))
+    return rows
+
+
+def fig17_model_size():
+    rows = []
+    sysconf = cost.EDGE
+    for size, trees in GBDT_SIZES.items():
+        for depth in (8, 10, 12):
+            cpu = _gbdt_cpu(13, trees, depth, 32, sysconf)
+            cl = _gbdt_cost(13, trees, depth, 32, M, "clutch", sysconf)
+            bs = _gbdt_cost(13, trees, depth, 32, M, "bitserial", sysconf)
+            rows.append((f"fig17_{size}_d{depth}_clutchM",
+                         cl.time_ns / 1e3,
+                         round(cpu.time_ns / cl.time_ns, 2)))
+            rows.append((f"fig17_{size}_d{depth}_bitserialM",
+                         bs.time_ns / 1e3,
+                         round(cpu.time_ns / bs.time_ns, 2)))
+    return rows
+
+
+def fig18_conversion_amortization():
+    """Instances needed before Clutch's effective throughput crosses the
+    CPU baseline (paper: ~5K instances)."""
+    rows = []
+    sysconf = cost.EDGE
+    cl = _gbdt_cost(13, 2048, 10, 32, M, "clutch", sysconf, batch=1024)
+    cpu = _gbdt_cpu(13, 2048, 10, 32, sysconf, batch=1024)
+    conv_ns = cost.conversion_cost_ns(2048 * 10, 32, 5, sysconf)
+    per_inst_cl = cl.time_ns / 1024
+    per_inst_cpu = cpu.time_ns / 1024
+    cross = conv_ns / max(per_inst_cpu - per_inst_cl, 1e-9)
+    rows.append(("fig18a_crossover_instances", conv_ns / 1e3,
+                 int(cross)))
+    # memory footprint (large model, 32-bit): Clutch vs binary baseline
+    plan = min_chunks_for_budget(32, 1016 - 13 - 2)
+    nodes = 2048 * 12
+    base_mb = (nodes * 32 / 8 + 2048 * (1 << 12) * 2 + nodes) / 1e6
+    clutch_mb = (nodes * plan.rows_required / 8 +
+                 2048 * (1 << 12) * 2 + nodes * 13 / 8) / 1e6
+    rows.append(("fig18b_footprint_mb_baseline", 0.0, round(base_mb, 1)))
+    rows.append(("fig18b_footprint_mb_clutch", 0.0, round(clutch_mb, 1)))
+    return rows
+
+
+# ---------------------- predicate eval (§6.2) ----------------------- #
+
+def _query_cost(n_bits, arch, method, sysconf, n_elems, num_preds=4,
+                reductions=3, readout=True):
+    """WHERE-clause cost: `num_preds` range predicates + in-DRAM bitmap
+    reductions + one result-bitmap readout, over sharded subarrays."""
+    if method == "clutch":
+        chunks = P.PAPER_PREDICATE_CHUNKS[(n_bits, arch)]
+        per = cost._pud_counts("clutch", n_bits, chunks, arch)
+    else:
+        per = cost._pud_counts("bitserial", n_bits, 0, arch)
+    hist = {k: v * num_preds for k, v in per.items()}
+    maj = reductions + num_preds  # save-copies + AND/OR merges
+    if arch is M:
+        hist["rowcopy"] = hist.get("rowcopy", 0) + 2 * maj
+        hist["tra"] = hist.get("tra", 0) + maj
+    else:
+        hist["rowcopy"] = hist.get("rowcopy", 0) + 2 * maj
+        hist["frac"] = hist.get("frac", 0) + maj
+        hist["apa"] = hist.get("apa", 0) + maj
+    waves = int(np.ceil(n_elems / sysconf.parallel_cols))
+    t = cost.sequence_time_ns(hist, sysconf) * waves
+    e = cost.sequence_energy_nj(hist, sysconf) * waves
+    if readout:
+        t += cost.transfer_time_ns(n_elems / 8, sysconf)
+        e += cost.transfer_energy_nj(n_elems / 8, sysconf)
+    e += sysconf.host_idle_power_w * t
+    return cost.KernelCost(t, e, n_elems)
+
+
+def _query_cpu(n_bits, sysconf, n_elems, num_preds=4):
+    # BitWeaving-V scans each predicate's column (early-pruned ~ n_bits/2
+    # effective bits per element), plus bitmap merge passes
+    rd = n_elems * n_bits / 8 * num_preds * 0.6
+    merge = n_elems / 8 * (num_preds + 1)
+    t = cost.transfer_time_ns(rd + merge, sysconf)
+    return cost.KernelCost(t, sysconf.host_power_w * t +
+                           cost.transfer_energy_nj(rd + merge, sysconf),
+                           n_elems)
+
+
+TABLE_SIZES = {"small": 64e6, "medium": 256e6, "large": 1e9}
+
+
+def fig19_q2_tables():
+    rows = []
+    sysconf = cost.DESKTOP
+    for tname, total_vals in TABLE_SIZES.items():
+        records = total_vals / 8
+        for nb in PRECISIONS:
+            cpu = _query_cpu(nb, sysconf, records)
+            for name, arch, method in [("bitserial_M", M, "bitserial"),
+                                       ("clutch_M", M, "clutch"),
+                                       ("clutch_U", U, "clutch")]:
+                c = _query_cost(nb, arch, method, sysconf, records)
+                rows.append((f"fig19_{tname}_{nb}b_{name}",
+                             c.time_ns / 1e3,
+                             round(cpu.time_ns / c.time_ns, 2)))
+    return rows
+
+
+def fig20_q2_energy():
+    rows = []
+    sysconf = cost.DESKTOP
+    records = TABLE_SIZES["large"] / 8
+    for nb in PRECISIONS:
+        cpu = _query_cpu(nb, sysconf, records)
+        for name, arch, method in [("bitserial_M", M, "bitserial"),
+                                   ("clutch_M", M, "clutch")]:
+            c = _query_cost(nb, arch, method, sysconf, records)
+            rows.append((f"fig20_{nb}b_{name}", c.time_ns / 1e3,
+                         round(c.elems_per_uj / cpu.elems_per_uj, 2)))
+    return rows
+
+
+def fig21_conversion():
+    rows = []
+    sysconf = cost.DESKTOP
+    records = TABLE_SIZES["medium"] / 8
+    for nb in PRECISIONS:
+        chunks = P.PAPER_PREDICATE_CHUNKS[(nb, M)]
+        conv = cost.conversion_cost_ns(int(records) * 8, nb, chunks,
+                                       sysconf, complement=True)
+        cl = _query_cost(nb, M, "clutch", sysconf, records)
+        cpu = _query_cpu(nb, sysconf, records)
+        cross = conv / max(cpu.time_ns - cl.time_ns, 1e-9)
+        rows.append((f"fig21_{nb}b_crossover_queries", conv / 1e3,
+                     int(cross)))
+    return rows
+
+
+def fig22_footprint_tradeoff():
+    rows = []
+    sysconf = cost.DESKTOP
+    records = TABLE_SIZES["medium"] / 8
+    cpu = _query_cpu(32, sysconf, records)
+    for chunks in (5, 6, 8, 10, 12, 16):
+        plan = make_plan(32, chunks)
+        c = _query_cost(32, M, "clutch", sysconf, records)
+        # footprint relative to binary: rows/32 per element
+        rel = plan.rows_required / 32
+        per = cost._pud_counts("clutch", 32, chunks, M)
+        t = cost.sequence_time_ns({k: v * 4 for k, v in per.items()},
+                                  sysconf) * np.ceil(
+                                      records / sysconf.parallel_cols)
+        t += cost.transfer_time_ns(records / 8, sysconf)
+        rows.append((f"fig22_chunks{chunks}", t / 1e3,
+                     round(rel, 2)))
+    return rows
+
+
+def fig23_queries_cpu_system():
+    rows = []
+    sysconf = cost.DESKTOP
+    records = TABLE_SIZES["medium"] / 8
+    # per-query predicate/reduction counts + host post-processing bytes
+    QUERIES = {   # (num range-predicates, host post-process bytes factor)
+        "q1": (1, 0.0), "q2": (2, 0.0), "q3": (2, 0.125),
+        "q4": (2, 4.5), "q5": (3, 5.0),
+    }
+    for nb in PRECISIONS:
+        for q, (preds, post) in QUERIES.items():
+            cpu = _query_cpu(nb, sysconf, records, num_preds=2 * preds)
+            t_post = cost.transfer_time_ns(records * post, sysconf)
+            for name, arch, method in [("bitserial_M", M, "bitserial"),
+                                       ("clutch_M", M, "clutch")]:
+                c = _query_cost(nb, arch, method, sysconf, records,
+                                num_preds=2 * preds)
+                tt = c.time_ns + t_post
+                rows.append((f"fig23_{q}_{nb}b_{name}", tt / 1e3,
+                             round((cpu.time_ns + t_post) / tt, 2)))
+    return rows
+
+
+def fig24_queries_gpu_system():
+    rows = []
+    sysconf = cost.GPU_HBM2
+    records = TABLE_SIZES["medium"] / 8
+    for nb in PRECISIONS:
+        for q, preds in [("q1", 1), ("q2", 2), ("q4", 2)]:
+            gpu = _query_cpu(nb, sysconf, records, num_preds=2 * preds)
+            t_post = cost.transfer_time_ns(records * 4.5, sysconf) \
+                if q == "q4" else 0.0
+            for name, arch, method in [("bitserial_M", M, "bitserial"),
+                                       ("clutch_M", M, "clutch")]:
+                c = _query_cost(nb, arch, method, sysconf, records,
+                                num_preds=2 * preds)
+                rows.append((f"fig24_{q}_{nb}b_{name}",
+                             (c.time_ns + t_post) / 1e3,
+                             round((gpu.time_ns + t_post) /
+                                   (c.time_ns + t_post), 2)))
+    return rows
+
+
+ALL_FIGS = [
+    fig6_breakdown, fig9_tradeoff, fig10_throughput, fig11_energy,
+    fig14_gbdt, fig16_batch_sensitivity, fig17_model_size,
+    fig18_conversion_amortization, fig19_q2_tables, fig20_q2_energy,
+    fig21_conversion, fig22_footprint_tradeoff, fig23_queries_cpu_system,
+    fig24_queries_gpu_system,
+]
+
+
+def fig15_gbdt_breakdown():
+    """Execution-time breakdown of 32-bit GBDT inference (PuD-side /
+    DRAM->host / CPU-side) -- the paper's Fig. 15 shift: bit-serial is
+    PuD-side dominated, Clutch shifts the bottleneck to the CPU side."""
+    rows = []
+    sysconf = cost.EDGE
+    nf, trees, depth, batch = 13, 2048, 10, 1024
+    nodes = trees * depth
+    for name, arch, method in [("bitserial_M", M, "bitserial"),
+                               ("clutch_M", M, "clutch")]:
+        total = _gbdt_cost(nf, trees, depth, 32, arch, method, sysconf,
+                           batch=batch)
+        # isolate the host-transfer+sum component
+        addr_bytes = batch * nodes / 8
+        leaf_bytes = batch * trees * 2
+        t_host = cost.transfer_time_ns(addr_bytes + leaf_bytes, sysconf)
+        pud_frac = (total.time_ns - t_host) / total.time_ns
+        rows.append((f"fig15_{name}_pud_fraction", total.time_ns / 1e3,
+                     round(pud_frac, 3)))
+    return rows
+
+
+def fig_salp_outlook():
+    """Paper §7.4: exploiting subarray-level parallelism (SALP) multiplies
+    PuD column parallelism without touching off-chip bandwidth.  Modeled
+    as k concurrent PuD-enabled subarrays per bank (the paper's own
+    evaluation uses k=1; MIMDRAM/Proteus demonstrate k>1)."""
+    import dataclasses
+
+    rows = []
+    base = cost.DESKTOP
+    for k in (1, 2, 4, 8):
+        sysconf = dataclasses.replace(
+            base, cols_per_bank=base.cols_per_bank * k)
+        c = cost.pud_compare_cost("clutch", 32, M, sysconf, chunks=5)
+        cpu = cost.cpu_scan_cost(32, sysconf.parallel_cols, sysconf)
+        rows.append((f"salp_x{k}_clutch32_vs_cpu", c.time_ns / 1e3,
+                     round(c.throughput_geps / cpu.throughput_geps, 1)))
+    return rows
+
+
+ALL_FIGS.append(fig15_gbdt_breakdown)
+ALL_FIGS.append(fig_salp_outlook)

@@ -1,0 +1,33 @@
+"""Render the dry-run roofline table from artifacts/dryrun/*.json."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load(pattern="*_pod1*.json"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ART, pattern))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def run():
+    rows = []
+    for r in load():
+        rf = r.get("roofline")
+        if not rf:
+            continue
+        tag = f"roofline_{r['arch']}_{r['shape']}"
+        if r.get("variant", "base") != "base":
+            tag += f"_{r['variant']}"
+        t_bound = max(rf["t_compute_s"], rf["t_memory_s"],
+                      rf["t_collective_s"])
+        rows.append((tag, round(t_bound * 1e6, 1),
+                     f"{rf['bottleneck']}|mfr={r['model_flops_ratio']:.3f}"))
+    return rows

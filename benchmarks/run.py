@@ -1,0 +1,24 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import kernel_wallclock, paper_figs, roofline_report
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fig in paper_figs.ALL_FIGS:
+        for name, us, derived in fig():
+            print(f"{name},{us},{derived}")
+    for name, us, derived in kernel_wallclock.run():
+        print(f"{name},{us},{derived}")
+    for name, us, derived in roofline_report.run():
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,8 @@
+"""Clutch (ICS'26) at framework scale: PuD comparison core + TPU kernels
++ applications + a multi-pod JAX training/serving stack.
+
+Subpackages: core (paper algorithm + cost model), kernels (Pallas),
+apps (predicate eval, GBDT), models/configs (10 assigned archs),
+dist/train/serve/data (distributed runtime), launch (mesh + dry-run).
+See DESIGN.md / EXPERIMENTS.md.
+"""

@@ -1,0 +1,4 @@
+"""Paper applications: predicate evaluation (§6.2) and GBDT inference
+(§6.1) on Clutch/PuD, with exact reference implementations."""
+
+from . import gbdt, predicate  # noqa: F401

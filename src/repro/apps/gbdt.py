@@ -1,0 +1,178 @@
+"""GBDT (CatBoost-style oblivious tree) inference on PuD -- paper §6.1.
+
+The paper's key insight: oblivious-tree traversal is a sequence of
+vector-scalar comparisons followed by mask operations.  Mapping:
+
+  * one DRAM column per tree node; nodes grouped by tree, ordered by depth
+    (so the per-column comparison bits *are* the leaf address bits,
+    depth 0 = MSB);
+  * each column stores the node's threshold (chunked-temporal-coded LUT)
+    and a one-hot feature mask (one row per feature);
+  * per feature f with instance value v:   cmp = Clutch(v < thresholds);
+    masked = cmp AND mask_f;   acc = acc OR masked   -- all in-DRAM;
+  * after sweeping features, ONE row readout yields every tree's leaf
+    address; the host (or the ``leaf_gather`` TPU kernel) sums leaf values.
+
+Only the native ``a < B`` comparison is needed, so no complement planes
+are stored even on Unmodified PuD.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.clutch import ClutchEngine, clutch_op_count
+from repro.core.machine import PuDArch, Subarray, pack_bits, unpack_bits
+
+# Paper §5.1 kernel chunk counts (minimum fitting a single subarray).
+PAPER_GBDT_CHUNKS = {8: 1, 16: 2, 32: 5}
+
+
+@dataclass
+class ObliviousForest:
+    """CatBoost-style regular forest: every node at depth k of tree t
+    shares (feature_idx[t, k], threshold[t, k])."""
+
+    feature_idx: np.ndarray   # [T, D] int32  in [0, F)
+    thresholds: np.ndarray    # [T, D] uint   in [0, 2^n_bits)
+    leaves: np.ndarray        # [T, 2^D] float32
+    n_bits: int
+    num_features: int
+
+    @property
+    def num_trees(self) -> int:
+        return self.feature_idx.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return self.feature_idx.shape[1]
+
+    @staticmethod
+    def random(num_trees: int, depth: int, num_features: int, n_bits: int,
+               seed: int = 0) -> "ObliviousForest":
+        rng = np.random.default_rng(seed)
+        return ObliviousForest(
+            feature_idx=rng.integers(0, num_features, (num_trees, depth),
+                                     dtype=np.int32),
+            thresholds=rng.integers(0, 1 << n_bits, (num_trees, depth),
+                                    dtype=np.uint64),
+            leaves=rng.normal(size=(num_trees, 1 << depth)
+                              ).astype(np.float32),
+            n_bits=n_bits,
+            num_features=num_features,
+        )
+
+
+def fit_oblivious_forest(X: np.ndarray, y: np.ndarray, num_trees: int,
+                         depth: int, n_bits: int, lr: float = 0.3,
+                         seed: int = 0) -> ObliviousForest:
+    """Tiny gradient-boosting fitter for the examples: greedy random
+    (feature, quantile-threshold) per level, leaf value = mean residual.
+    X must already be quantized to [0, 2^n_bits)."""
+    rng = np.random.default_rng(seed)
+    n, f = X.shape
+    resid = y.astype(np.float64).copy()
+    feat = np.zeros((num_trees, depth), np.int32)
+    thr = np.zeros((num_trees, depth), np.uint64)
+    leaves = np.zeros((num_trees, 1 << depth), np.float32)
+    for t in range(num_trees):
+        addr = np.zeros(n, np.int64)
+        for k in range(depth):
+            fi = int(rng.integers(0, f))
+            q = float(rng.uniform(0.25, 0.75))
+            th = np.uint64(np.quantile(X[:, fi], q))
+            feat[t, k], thr[t, k] = fi, th
+            addr = (addr << 1) | (X[:, fi] < th)
+        sums = np.bincount(addr, weights=resid, minlength=1 << depth)
+        cnts = np.bincount(addr, minlength=1 << depth)
+        leaf = lr * sums / np.maximum(cnts, 1)
+        leaves[t] = leaf.astype(np.float32)
+        resid -= leaf[addr]
+    return ObliviousForest(feat, thr, leaves, n_bits, f)
+
+
+def reference_leaf_addrs(forest: ObliviousForest, X: np.ndarray
+                         ) -> np.ndarray:
+    """[B, T] int32 ground-truth leaf addresses (depth 0 bit is MSB)."""
+    bits = (X[:, forest.feature_idx] <
+            forest.thresholds[None])                   # [B, T, D]
+    weights = 1 << np.arange(forest.depth)[::-1]
+    return (bits * weights).sum(-1).astype(np.int32)
+
+
+def reference_predict(forest: ObliviousForest, X: np.ndarray) -> np.ndarray:
+    addrs = reference_leaf_addrs(forest, X)
+    return np.take_along_axis(forest.leaves, addrs.T, axis=1).sum(0
+        ).astype(np.float32)
+
+
+class GbdtPudEngine:
+    """One DRAM bank's worth of GBDT state: the forest's thresholds and
+    masks are loaded once; each call to :meth:`infer_one` simulates one
+    instance (the paper maps one instance per bank, banks in parallel)."""
+
+    def __init__(self, forest: ObliviousForest, arch: PuDArch,
+                 num_chunks: int | None = None, num_rows: int = 1024) -> None:
+        self.forest = forest
+        self.arch = arch
+        t, d, f = forest.num_trees, forest.depth, forest.num_features
+        n_nodes = t * d
+        n_cols = max(4096, 1 << (n_nodes - 1).bit_length())
+        if n_nodes > 65536:
+            raise ValueError("forest exceeds one bank's columns; shard trees")
+        self.sub = Subarray(num_rows=num_rows, num_cols=n_cols, arch=arch)
+        chunks = num_chunks or PAPER_GBDT_CHUNKS[forest.n_bits]
+        # Only the native `<` is used => no complement planes needed.
+        self.engine = ClutchEngine(
+            self.sub, forest.thresholds.reshape(-1), forest.n_bits,
+            num_chunks=chunks, support_negated=False)
+        self.num_chunks = self.engine.plan.num_chunks
+        # One-hot feature mask rows (paper Fig. 12 layout).
+        flat_feat = forest.feature_idx.reshape(-1)
+        self.mask_rows = self.sub.alloc(f)
+        for fi in range(f):
+            bits = (flat_feat == fi).astype(np.uint8)
+            bits = np.pad(bits, (0, self.sub.num_cols - bits.size))
+            self.sub.host_write_row(self.mask_rows + fi, pack_bits(bits))
+        self.acc_row = self.sub.alloc(1)
+        self.ops_per_instance: int | None = None
+
+    def infer_one(self, x: np.ndarray) -> tuple[np.ndarray, float]:
+        """x: [F] quantized feature values.  Returns (leaf addresses [T],
+        prediction)."""
+        sub, forest = self.sub, self.forest
+        before = sub.trace.pud_ops
+        sub.rowcopy(sub.ROW_ZERO, self.acc_row)   # clear the leaf bitmap
+        for fi in range(forest.num_features):
+            cmp_row = self.engine.predicate(">", int(x[fi])).row
+            # masked = cmp AND mask_f   (cmp already in the MAJ accumulator)
+            masked = sub.maj3_into_acc(cmp_row, self.mask_rows + fi,
+                                       sub.ROW_ZERO)
+            # acc = acc OR masked
+            merged = sub.maj3_into_acc(masked, self.acc_row, sub.ROW_ONE)
+            sub.rowcopy(merged, self.acc_row)
+        self.ops_per_instance = sub.trace.pud_ops - before
+        bits = unpack_bits(sub.host_read_row(self.acc_row),
+                           forest.num_trees * forest.depth)
+        bits = bits.reshape(forest.num_trees, forest.depth)
+        weights = 1 << np.arange(forest.depth)[::-1]
+        addrs = (bits * weights).sum(-1).astype(np.int32)
+        pred = float(
+            forest.leaves[np.arange(forest.num_trees), addrs].sum())
+        return addrs, pred
+
+    def infer(self, X: np.ndarray) -> np.ndarray:
+        """Batch inference (functional; the cost model maps the batch
+        across banks)."""
+        return np.array([self.infer_one(x)[1] for x in X], np.float32)
+
+
+def gbdt_ops_per_instance(forest: ObliviousForest, chunks: int,
+                          arch: PuDArch) -> int:
+    """Closed-form PuD ops per instance: clear + per feature
+    (compare + AND(3 or 4) + OR(3 or 4) + copy-back)."""
+    per_maj = 3 if arch is PuDArch.MODIFIED else 4
+    per_feature = clutch_op_count(chunks, arch) + 2 * per_maj + 1
+    return 1 + forest.num_features * per_feature

@@ -1,0 +1,217 @@
+"""Predicate evaluation on PuD (paper §6.2).
+
+Implements the paper's benchmark queries Q1-Q5 (Table 4) over a table of
+8 uniformly-sampled feature columns, on three backends:
+
+  * ``PudQueryEngine`` -- the functional PuD machine (Clutch or bit-serial
+    engines per feature, bitmap AND/OR reductions in-DRAM, COUNT/AVERAGE
+    on the host), tracing every PuD op for the cost model.
+  * ``reference_*``    -- plain NumPy ground truth.
+  * TPU kernels        -- ``repro.kernels.ops.range_count`` is benchmarked
+    separately in ``benchmarks/``.
+
+Each DRAM column holds one record; all features of a record live in the
+same subarray column (vertical layout), enabling in-DRAM WHERE-clause
+reduction before any bitmap leaves the chip.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.bitserial import BitSerialEngine
+from repro.core.clutch import ClutchEngine
+from repro.core.encoding import make_plan
+from repro.core.machine import PuDArch, Subarray
+
+
+@dataclass
+class Table:
+    """Synthetic benchmark table: ``features[f][i]`` = feature f of record
+    i, sampled uniformly from [0, 2^n_bits) (paper's generator)."""
+
+    n_bits: int
+    features: list[np.ndarray]
+
+    @property
+    def num_records(self) -> int:
+        return int(self.features[0].shape[0])
+
+    @staticmethod
+    def generate(num_records: int, n_bits: int, num_features: int = 8,
+                 seed: int = 0) -> "Table":
+        rng = np.random.default_rng(seed)
+        return Table(
+            n_bits=n_bits,
+            features=[
+                rng.integers(0, 1 << n_bits, num_records, dtype=np.uint64)
+                for _ in range(num_features)
+            ],
+        )
+
+
+# Chunk counts per paper §6.2 so all 8 features (+complements on
+# Unmodified) fit one 1024-row subarray.
+PAPER_PREDICATE_CHUNKS = {
+    (8, PuDArch.MODIFIED): 2,
+    (8, PuDArch.UNMODIFIED): 2,
+    (16, PuDArch.MODIFIED): 4,
+    (16, PuDArch.UNMODIFIED): 4,
+    (32, PuDArch.MODIFIED): 8,
+    (32, PuDArch.UNMODIFIED): 12,
+}
+
+
+@dataclass
+class QueryStats:
+    pud_ops: int = 0
+    rows_read: int = 0
+    host_values_read: int = 0  # conventional-layout reads for post-processing
+
+
+class PudQueryEngine:
+    """All feature vectors of one table slice resident in one subarray.
+
+    ``method`` is "clutch" or "bitserial"; both expose the same predicate
+    API so Q1-Q5 run identically, which is how the paper compares them.
+    """
+
+    def __init__(self, table: Table, arch: PuDArch, method: str = "clutch",
+                 num_chunks: int | None = None, num_rows: int = 1024) -> None:
+        if table.num_records > 65536:
+            raise ValueError("one engine handles <= one subarray of records;"
+                             " shard tables across engines")
+        self.table = table
+        self.arch = arch
+        self.method = method
+        n_cols = max(4096, 1 << (table.num_records - 1).bit_length())
+        if method == "clutch":
+            chunks = num_chunks or PAPER_PREDICATE_CHUNKS[
+                (table.n_bits, arch)]
+            # The paper's chunk counts assume shared scratch rows; if a
+            # configuration still exceeds the row budget, bump the chunk
+            # count (paper §6.2 footnote 4: "a larger number of chunks can
+            # be required to fit ... the row budget of a single subarray").
+            while True:
+                self.sub = Subarray(num_rows=num_rows, num_cols=n_cols,
+                                    arch=arch)
+                try:
+                    shared = (self.sub.alloc(1), self.sub.alloc(1))
+                    self.engines = [
+                        ClutchEngine(self.sub, f, table.n_bits,
+                                     num_chunks=chunks, scratch=shared)
+                        for f in table.features
+                    ]
+                    break
+                except MemoryError:
+                    chunks += 1
+                    if chunks > table.n_bits:
+                        raise
+            self.num_chunks = chunks
+        elif method == "bitserial":
+            self.sub = Subarray(num_rows=num_rows, num_cols=n_cols, arch=arch)
+            self.engines = [
+                BitSerialEngine(self.sub, f, table.n_bits)
+                for f in table.features
+            ]
+        else:
+            raise ValueError(method)
+        self._save_rows = [self.sub.alloc(1) for _ in range(4)]
+
+    # ------------------------------------------------------------------ #
+    def _pred(self, feat: int, op: str, x: int, save_slot: int) -> int:
+        eng = self.engines[feat]
+        if self.method == "clutch":
+            return eng.predicate(op, x, save_to=self._save_rows[save_slot]).row
+        return eng.predicate(op, x, save_to=self._save_rows[save_slot])
+
+    def _range(self, feat: int, x0: int, x1: int, save_slot: int) -> int:
+        """Bitmap of ``x0 < f < x1`` saved to a stable row.  Both predicate
+        bitmaps are parked in stable rows before the AND because the MAJ3
+        accumulator row is clobbered by the next predicate."""
+        lo = self._pred(feat, ">", x0, 2)
+        hi = self._pred(feat, "<", x1, 3)
+        row = self.sub.maj3_into_acc(lo, hi, self.sub.ROW_ZERO)
+        self.sub.rowcopy(row, self._save_rows[save_slot])
+        return self._save_rows[save_slot]
+
+    def _read(self, row: int) -> np.ndarray:
+        words = self.sub.host_read_row(row)
+        from repro.core.machine import unpack_bits
+        return unpack_bits(words, self.table.num_records).astype(bool)
+
+    # --------------------------- queries ------------------------------- #
+    def q1(self, fi: int, x0: int, x1: int) -> np.ndarray:
+        """WHERE x0 < f_i < x1 -> bitmap."""
+        return self._read(self._range(fi, x0, x1, 0))
+
+    def q2(self, fi: int, x0: int, x1: int, fj: int, y0: int, y1: int
+           ) -> np.ndarray:
+        """WHERE (x0 < f_i < x1 AND y0 < f_j < y1) -> bitmap."""
+        r1 = self._range(fi, x0, x1, 0)
+        r2 = self._range(fj, y0, y1, 1)
+        row = self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ZERO)
+        return self._read(row)
+
+    def q3(self, fi: int, x0: int, x1: int, fj: int, y0: int, y1: int) -> int:
+        """COUNT(WHERE (x0 < f_i < x1 OR y0 < f_j < y1))."""
+        r1 = self._range(fi, x0, x1, 0)
+        r2 = self._range(fj, y0, y1, 1)
+        row = self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ONE)
+        return int(self._read(row).sum())
+
+    def q4(self, fk: int, fi: int, x0: int, x1: int, fj: int, y0: int,
+           y1: int) -> float:
+        """AVERAGE(f_k) over WHERE(x0 < f_i < x1 AND y0 < f_j < y1).
+
+        The bitmap stays in DRAM until the final read; AVERAGE runs on the
+        host over the conventional-layout copy (paper: all platforms keep
+        one for value retrieval)."""
+        mask = self.q2(fi, x0, x1, fj, y0, y1)
+        vals = self.table.features[fk][mask]
+        return float(vals.mean()) if vals.size else 0.0
+
+    def q5(self, fl: int, fk: int, fi: int, x0: int, x1: int, fj: int,
+           y0: int, y1: int) -> int:
+        """WITH avg = AVERAGE(f_k) WHERE(x0<f_i<x1 OR y0<f_j<y1)
+        COUNT(WHERE avg < f_l < 2*avg)."""
+        r1 = self._range(fi, x0, x1, 0)
+        r2 = self._range(fj, y0, y1, 1)
+        row = self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ONE)
+        mask = self._read(row)
+        vals = self.table.features[fk][mask]
+        avg = int(vals.mean()) if vals.size else 0
+        hi = min(2 * avg, (1 << self.table.n_bits) - 1)
+        if avg >= hi:
+            return 0
+        return int(self.q1(fl, avg, hi).sum())
+
+
+# ------------------------- NumPy ground truth -------------------------- #
+
+def reference_q1(t: Table, fi, x0, x1):
+    f = t.features[fi]
+    return (f > x0) & (f < x1)
+
+def reference_q2(t: Table, fi, x0, x1, fj, y0, y1):
+    return reference_q1(t, fi, x0, x1) & reference_q1(t, fj, y0, y1)
+
+def reference_q3(t: Table, fi, x0, x1, fj, y0, y1):
+    return int((reference_q1(t, fi, x0, x1)
+                | reference_q1(t, fj, y0, y1)).sum())
+
+def reference_q4(t: Table, fk, fi, x0, x1, fj, y0, y1):
+    mask = reference_q2(t, fi, x0, x1, fj, y0, y1)
+    vals = t.features[fk][mask]
+    return float(vals.mean()) if vals.size else 0.0
+
+def reference_q5(t: Table, fl, fk, fi, x0, x1, fj, y0, y1):
+    mask = (reference_q1(t, fi, x0, x1) | reference_q1(t, fj, y0, y1))
+    vals = t.features[fk][mask]
+    avg = int(vals.mean()) if vals.size else 0
+    hi = min(2 * avg, (1 << t.n_bits) - 1)
+    if avg >= hi:
+        return 0
+    return int(reference_q1(t, fl, avg, hi).sum())

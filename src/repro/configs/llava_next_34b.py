@@ -1,0 +1,21 @@
+"""llava-next-34b -- VLM backbone (anyres tiling frontend is a STUB:
+input_specs() provides precomputed patch embeddings).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=20480,
+    vocab=64000,
+    block_pattern=("attn",),
+    mlp="silu_glu",
+    frontend="vision_stub",
+)

@@ -1,0 +1,27 @@
+"""Clutch core: PuD machine model, chunked temporal coding, Algorithm 1,
+bit-serial baseline, and the analytical DRAM cost model."""
+
+from .machine import (  # noqa: F401
+    CommandTrace,
+    PuDArch,
+    PuDOp,
+    Subarray,
+    pack_bits,
+    unpack_bits,
+)
+from .encoding import (  # noqa: F401
+    ChunkPlan,
+    LutLayout,
+    load_binary_vector,
+    load_vector,
+    make_plan,
+    min_chunks_for_budget,
+    temporal_encode_planes,
+)
+from .clutch import ClutchEngine, clutch_op_count, compare_lt  # noqa: F401
+from .bitserial import (  # noqa: F401
+    BitSerialEngine,
+    bitserial_op_count,
+    paper_bitserial_op_count,
+)
+from . import cost  # noqa: F401

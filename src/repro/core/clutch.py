@@ -1,0 +1,211 @@
+"""Clutch: LUT-based vector-scalar comparison with chunked temporal coding.
+
+Implements Algorithm 1 of the paper on the functional PuD machine model.
+The host holds the scalar ``a``; based on its per-chunk values it issues a
+*data-dependent* sequence of PuD operations (row lookups + MAJ3 merges):
+
+    L <- row[a_0 + cp[0]]                       # LSB chunk:  a_0 < b_0
+    for j = 1 .. C-1:
+        lt <- row[a_j + cp[j]]                  #  a_j < b_j
+        le <- row[a_j - 1 + cp[j]]              #  a_j <= b_j
+        L  <- MAJ3(L, lt, le)                   #  lt OR (le AND L)
+
+boundary cases: a_j == 2^k - 1 -> lt := const-0; a_j == 0 -> le := const-1.
+The MAJ3 form is exact because lt implies le, so (L,lt,le) never takes the
+ambiguous pattern where MAJ3 != (lt OR (le AND L)).
+
+PuD op counts (validated in tests):
+    Unmodified: 4C - 3   (C=5 -> 17, the paper's 32-bit example)
+    Modified:   3C - 2   (C=5 -> 13)
+    C == 1:     exactly one RowCopy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .encoding import ChunkPlan, LutLayout, load_vector, make_plan
+from .machine import PuDArch, Subarray, unpack_bits
+
+OPS = ("<", "<=", ">", ">=", "==")
+
+
+def compare_lt(sub: Subarray, layout: LutLayout, a: int) -> int:
+    """Run Algorithm 1: returns the row index holding the bitmap of
+    ``a < B_i`` (over the vector encoded in ``layout``)."""
+    plan = layout.plan
+    chunks = plan.split_scalar(a)
+    maxval = [(1 << k) - 1 for k in plan.widths]
+
+    def lt_row(j: int) -> int:
+        return sub.ROW_ZERO if chunks[j] == maxval[j] \
+            else layout.cp[j] + chunks[j]
+
+    def le_row(j: int) -> int:
+        return sub.ROW_ONE if chunks[j] == 0 \
+            else layout.cp[j] + chunks[j] - 1
+
+    acc = lt_row(0)
+    if plan.num_chunks == 1:
+        # Single-chunk Clutch: the comparison is one RowCopy (paper §4.1).
+        dst = sub.T0 if sub.arch is PuDArch.MODIFIED else sub.G[0]
+        sub.rowcopy(acc, dst)
+        return dst
+    for j in range(1, plan.num_chunks):
+        acc = sub.maj3_into_acc(acc, lt_row(j), le_row(j))
+    return acc
+
+
+def clutch_op_count(num_chunks: int, arch: PuDArch) -> int:
+    """Closed-form PuD op count of one Clutch comparison."""
+    if num_chunks == 1:
+        return 1
+    if arch is PuDArch.MODIFIED:
+        return 3 * num_chunks - 2
+    return 4 * num_chunks - 3
+
+
+@dataclass
+class PredicateResult:
+    row: int            # subarray row holding the bitmap
+    pud_ops: int        # PuD ops issued for this predicate
+
+
+class ClutchEngine:
+    """A vector resident in one subarray, ready for arbitrary predicates.
+
+    On Modified PuD, negated operators (``<``, ``<=``) use the native bulk
+    NOT.  On Unmodified PuD there is no NOT, so the engine additionally
+    stores the complement encoding ``MAX - B`` and rewrites
+    ``B < a  <=>  MAX-a < MAX-B`` (paper §6.2).
+    """
+
+    def __init__(
+        self,
+        sub: Subarray,
+        values: np.ndarray,
+        n_bits: int,
+        num_chunks: int | None = None,
+        plan: ChunkPlan | None = None,
+        support_negated: bool = True,
+        scratch: tuple[int, int] | None = None,
+    ) -> None:
+        """``support_negated=False`` skips the complement planes on
+        Unmodified PuD (halving the row footprint) when only the native
+        ``>`` / ``>=`` / ``==``-free operators are needed -- the kernel-level
+        evaluation of paper §5.1 runs in this mode."""
+        self.sub = sub
+        self.n_bits = n_bits
+        self.n = int(np.asarray(values).shape[0])
+        if plan is None:
+            plan = make_plan(n_bits, num_chunks or 1)
+        self.plan = plan
+        self.layout = load_vector(sub, values, plan)
+        self.layout_c = (
+            load_vector(sub, values, plan, complement=True)
+            if sub.arch is PuDArch.UNMODIFIED and support_negated
+            else None
+        )
+        # Scratch rows for saving intermediate bitmaps (e.g. for ``==``);
+        # engines sharing a subarray can share these (predicates are
+        # sequential), which is what lets 8x 32-bit features + complements
+        # fit the 1024-row budget (paper §6.2, footnote 4).
+        self._scratch = list(scratch) if scratch is not None \
+            else [sub.alloc(1), sub.alloc(1)]
+        self.max = (1 << n_bits) - 1
+
+    # -------------------------------------------------------------- #
+    def _run_lt(self, a: int, complement: bool) -> int:
+        layout = self.layout_c if complement else self.layout
+        assert layout is not None
+        return compare_lt(self.sub, layout, a)
+
+    def predicate(self, op: str, x: int, save_to: int | None = None
+                  ) -> PredicateResult:
+        """Evaluate ``B_i  <op>  x`` for every element; returns the bitmap
+        row.  ``save_to`` optionally RowCopies the result to a stable row
+        (the accumulator rows are clobbered by the next predicate)."""
+        if not 0 <= x <= self.max:
+            raise ValueError(f"scalar {x} out of range")
+        before = self.sub.trace.pud_ops
+        sub = self.sub
+        if op == ">":        # B > x  <=>  x < B
+            row = self._run_lt(x, complement=False)
+        elif op == ">=":     # B >= x <=>  x <= B  <=> (x-1) < B
+            if x == 0:
+                row = sub.ROW_ONE
+            else:
+                row = self._run_lt(x - 1, complement=False)
+        elif op == "<":      # B < x  <=>  NOT(B >= x)
+            if x == 0:
+                row = sub.ROW_ZERO
+            elif sub.arch is PuDArch.MODIFIED:
+                row = self._run_lt(x - 1, complement=False)
+                sub.bulk_not(row, sub.DCC0)
+                row = sub.DCC0
+            else:            # MAX-x < MAX-B  <=>  B < x
+                row = self._run_lt(self.max - x, complement=True)
+        elif op == "<=":     # B <= x <=>  NOT(B > x)
+            if x == self.max:
+                row = sub.ROW_ONE
+            elif sub.arch is PuDArch.MODIFIED:
+                row = self._run_lt(x, complement=False)
+                sub.bulk_not(row, sub.DCC0)
+                row = sub.DCC0
+            else:            # (MAX-x-1) < MAX-B  <=>  B <= x
+                row = self._run_lt(self.max - x - 1, complement=True)
+        elif op == "==":     # (B <= x) AND (B >= x)
+            # call the base implementation explicitly: x is already in the
+            # engine's internal (unsigned) encoding here, so subclass
+            # re-encoding must not run again (TypedClutchEngine)
+            le = ClutchEngine.predicate(self, "<=", x,
+                                        save_to=self._scratch[0]).row
+            ge = ClutchEngine.predicate(self, ">=", x,
+                                        save_to=self._scratch[1]).row
+            row = self.bitmap_and(le, ge)
+        else:
+            raise ValueError(f"unknown operator {op!r}")
+        if save_to is not None and row != save_to:
+            sub.rowcopy(row, save_to)
+            row = save_to
+        return PredicateResult(row, self.sub.trace.pud_ops - before)
+
+    # ---------------- bitmap algebra (in-DRAM reductions) ----------- #
+    def bitmap_and(self, r1: int, r2: int) -> int:
+        return self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ZERO)
+
+    def bitmap_or(self, r1: int, r2: int) -> int:
+        return self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ONE)
+
+    def read_bitmap(self, row: int) -> np.ndarray:
+        """Host readout: one DRAM row -> bool[n] (trace-counted)."""
+        words = self.sub.host_read_row(row)
+        return unpack_bits(words, self.n).astype(bool)
+
+
+class TypedClutchEngine(ClutchEngine):
+    """ClutchEngine over signed ints or float32 via order-preserving
+    re-encoding (beyond-paper extension; see encoding.py)."""
+
+    def __init__(self, sub, values, n_bits: int, dtype: str = "unsigned",
+                 **kw) -> None:
+        from .encoding import encode_float32, encode_signed
+        self.value_dtype = dtype
+        if dtype == "signed":
+            values = encode_signed(values, n_bits)
+        elif dtype == "float32":
+            assert n_bits == 32
+            values = encode_float32(values)
+        elif dtype != "unsigned":
+            raise ValueError(dtype)
+        super().__init__(sub, values, n_bits, **kw)
+
+    def predicate(self, op: str, x, save_to=None) -> PredicateResult:
+        from .encoding import encode_float32_scalar, encode_signed_scalar
+        if self.value_dtype == "signed":
+            x = encode_signed_scalar(int(x), self.n_bits)
+        elif self.value_dtype == "float32":
+            x = encode_float32_scalar(float(x))
+        return super().predicate(op, x, save_to=save_to)

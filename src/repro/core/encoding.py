@@ -1,0 +1,206 @@
+"""Chunked temporal coding: the data representation behind Clutch.
+
+Temporal coding stores a value ``v`` (0 <= v < 2^k) as ``v`` leading ones
+followed by zeros down a DRAM column: bit ``r`` equals ``r < v``.  A region
+of ``2^k - 1`` rows therefore *is* a lookup table: row ``a`` holds the output
+bitmap of the vector-scalar comparison ``a < B_i`` for every element ``B_i``
+in that subarray's columns.  (Row ``2^k - 1`` would be all-zeros and is
+elided; the algorithm substitutes the constant-zero row.)
+
+For n-bit operands a single table needs ``2^n - 1`` rows, which does not fit
+a 1024-row subarray for n >= 16.  Clutch splits the operand into ``C``
+multi-bit chunks (LSB -> MSB); each chunk gets its own compact table of
+``2^k_j - 1`` rows and the per-chunk results are merged with one MAJ3 per
+chunk (see :mod:`repro.core.clutch`).
+
+Row cost is ``sum_j (2^k_j - 1)``, minimized by splitting the n bits as
+evenly as possible.  The paper's example: n=32, C=5 -> widths (6,6,6,7,7)
+-> 63+63+63+127+127 = 443 rows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .machine import Subarray, pack_bits
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """Chunk widths in bits, LSB chunk first."""
+
+    widths: tuple[int, ...]
+
+    @property
+    def n_bits(self) -> int:
+        return sum(self.widths)
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.widths)
+
+    @property
+    def rows_required(self) -> int:
+        return sum((1 << k) - 1 for k in self.widths)
+
+    @property
+    def shifts(self) -> tuple[int, ...]:
+        """Bit offset of each chunk within the operand (LSB chunk first)."""
+        out, s = [], 0
+        for k in self.widths:
+            out.append(s)
+            s += k
+        return tuple(out)
+
+    def split_scalar(self, a: int) -> list[int]:
+        """Split a scalar into per-chunk values (LSB chunk first)."""
+        if not 0 <= a < (1 << self.n_bits):
+            raise ValueError(f"scalar {a} out of range for {self.n_bits} bits")
+        return [(a >> s) & ((1 << k) - 1)
+                for s, k in zip(self.shifts, self.widths)]
+
+    def split_vector(self, values: np.ndarray) -> list[np.ndarray]:
+        values = np.asarray(values, dtype=np.uint64)
+        return [((values >> np.uint64(s)) & np.uint64((1 << k) - 1))
+                for s, k in zip(self.shifts, self.widths)]
+
+
+def make_plan(n_bits: int, num_chunks: int) -> ChunkPlan:
+    """Split ``n_bits`` into ``num_chunks`` as evenly as possible.
+
+    The remainder bits go to the MSB-side chunks so the LSB chunks are the
+    narrow ones (matching the paper's (6,6,6,7,7) example for 32/5).
+    """
+    if not 1 <= num_chunks <= n_bits:
+        raise ValueError("need 1 <= num_chunks <= n_bits")
+    base, rem = divmod(n_bits, num_chunks)
+    widths = [base] * (num_chunks - rem) + [base + 1] * rem
+    return ChunkPlan(tuple(widths))
+
+
+def min_chunks_for_budget(n_bits: int, row_budget: int) -> ChunkPlan:
+    """Smallest chunk count whose LUTs fit within ``row_budget`` rows."""
+    for c in range(1, n_bits + 1):
+        plan = make_plan(n_bits, c)
+        if plan.rows_required <= row_budget:
+            return plan
+    raise ValueError(f"no plan for {n_bits} bits fits {row_budget} rows")
+
+
+def temporal_encode_planes(chunk_values: np.ndarray, k: int) -> np.ndarray:
+    """Build the LUT bit-planes for one chunk.
+
+    Args:
+      chunk_values: uint array [N] with the chunk's value per element.
+      k: chunk width in bits.
+
+    Returns:
+      uint8 [2^k - 1, N]; plane ``r`` holds ``(r < chunk_values)`` -- i.e.
+      the temporal coding of each element's chunk value laid out vertically.
+    """
+    r = np.arange((1 << k) - 1, dtype=np.uint64)[:, None]
+    return (r < np.asarray(chunk_values, np.uint64)[None, :]).astype(np.uint8)
+
+
+@dataclass
+class LutLayout:
+    """Where each chunk's LUT lives inside a subarray (``cp`` in Alg. 1)."""
+
+    plan: ChunkPlan
+    cp: tuple[int, ...]          # starting row index per chunk
+    complement: bool = False     # planes encode (MAX - B) instead of B
+
+
+def load_vector(
+    sub: Subarray,
+    values: np.ndarray,
+    plan: ChunkPlan,
+    *,
+    complement: bool = False,
+) -> LutLayout:
+    """Encode ``values`` with chunked temporal coding and store the LUT
+    bit-planes into freshly allocated subarray rows.
+
+    With ``complement=True`` the planes encode ``MAX - B`` (MAX = 2^n - 1),
+    which Unmodified PuD uses to derive the negated comparison operators
+    without a native NOT (``B_i < a  <=>  MAX-a < MAX-B_i``).
+
+    The host-side conversion cost is accounted by the WRITE trace entries
+    (one per row), matching the paper's conversion-overhead analysis
+    (Fig. 18a / Fig. 21).
+    """
+    values = np.asarray(values, dtype=np.uint64)
+    if values.ndim != 1 or values.shape[0] > sub.num_cols:
+        raise ValueError("values must be 1-D and fit the subarray columns")
+    if complement:
+        values = np.uint64((1 << plan.n_bits) - 1) - values
+    n = values.shape[0]
+    if n < sub.num_cols:  # pad unused columns with zeros
+        values = np.concatenate(
+            [values, np.zeros(sub.num_cols - n, np.uint64)]
+        )
+    cp = []
+    for chunk_vals, k in zip(plan.split_vector(values), plan.widths):
+        start = sub.alloc((1 << k) - 1)
+        cp.append(start)
+        planes = temporal_encode_planes(chunk_vals, k)
+        for r, plane in enumerate(planes):
+            sub.host_write_row(start + r, pack_bits(plane))
+    return LutLayout(plan=plan, cp=tuple(cp), complement=complement)
+
+
+def load_binary_vector(sub: Subarray, values: np.ndarray, n_bits: int) -> int:
+    """Store plain binary bit-planes (LSB first) -- the layout used by the
+    bit-serial baseline.  Returns the starting row index."""
+    values = np.asarray(values, dtype=np.uint64)
+    if values.shape[0] < sub.num_cols:
+        values = np.concatenate(
+            [values, np.zeros(sub.num_cols - values.shape[0], np.uint64)]
+        )
+    start = sub.alloc(n_bits)
+    for b in range(n_bits):
+        plane = ((values >> np.uint64(b)) & np.uint64(1)).astype(np.uint8)
+        sub.host_write_row(start + b, pack_bits(plane))
+    return start
+
+
+# ----------------- beyond-paper: signed / float operands ----------------- #
+#
+# The paper evaluates unsigned integers only.  Both extensions below are
+# order-preserving bijections into unsigned ints, so the *entire* Clutch
+# machinery (LUTs, Algorithm 1, operators) applies unchanged:
+#
+#   * signed n-bit two's complement:  x  ->  x XOR 2^(n-1)   (bias flip)
+#   * float32 (IEEE-754, incl. negatives/zeros):
+#       u = bits(x);  u XOR (0xFFFFFFFF if sign else 0x80000000)
+#     (the same total-order fix-up the TPU minp_mask kernel uses).
+
+def encode_signed(values: np.ndarray, n_bits: int) -> np.ndarray:
+    """Two's-complement signed -> order-preserving unsigned."""
+    v = np.asarray(values, dtype=np.int64)
+    lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1
+    if v.min() < lo or v.max() > hi:
+        raise ValueError(f"values out of signed {n_bits}-bit range")
+    return (v + (1 << (n_bits - 1))).astype(np.uint64)
+
+
+def encode_signed_scalar(a: int, n_bits: int) -> int:
+    return int(a + (1 << (n_bits - 1)))
+
+
+def encode_float32(values: np.ndarray) -> np.ndarray:
+    """float32 -> order-preserving uint32.  -0.0 is canonicalized to +0.0
+    so the induced order matches IEEE comparisons (NaNs unsupported)."""
+    v = np.asarray(values, np.float32) + np.float32(0.0)   # -0.0 -> +0.0
+    if np.isnan(v).any():
+        raise ValueError("NaNs are not comparable")
+    bits = v.view(np.uint32).astype(np.uint64)
+    sign = bits >> np.uint64(31)
+    flip = np.where(sign == 1, np.uint64(0xFFFFFFFF), np.uint64(0x80000000))
+    return bits ^ flip
+
+
+def encode_float32_scalar(a: float) -> int:
+    return int(encode_float32(np.float32([a]))[0])

@@ -1,0 +1,275 @@
+"""Functional model of a Processing-using-DRAM (PuD) subarray.
+
+This module simulates the two PuD substrates evaluated in the paper:
+
+* ``PuDArch.MODIFIED``   -- SIMDRAM/Ambit-style: triple-row activation (TRA)
+  among designated *compute rows* implements bulk MAJ3; dual-contact cells
+  provide bulk bitwise NOT.
+* ``PuDArch.UNMODIFIED`` -- COTS-DRAM-style: no circuit changes.  MAJ3 is
+  realized with a 4-row activation (APA) where one row of the fixed
+  activation group is first driven to an intermediate voltage with ``Frac``,
+  neutralizing it, so the result equals the 3-input majority.  There is no
+  native NOT; algorithms must be NOT-free (Clutch is) or keep complements.
+
+A subarray is a bit-matrix of ``num_rows`` rows x ``num_cols`` columns.  Rows
+are stored packed, 32 columns per ``uint32`` word, mirroring the vertical
+(bit-sliced) PuD data layout: element *i* of a vector lives in column *i*,
+one bit per row.
+
+Every primitive appends to a command trace so the analytical cost model
+(:mod:`repro.core.cost`) can derive cycle-level latency and energy from the
+exact DRAM command sequence, and tests can assert the paper's op counts
+(e.g. 17 PuD ops for a 32-bit / 5-chunk Clutch comparison on Unmodified PuD).
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+WORD_BITS = 32
+
+
+class PuDArch(str, enum.Enum):
+    UNMODIFIED = "unmodified"
+    MODIFIED = "modified"  # SIMDRAM / Ambit
+
+
+class PuDOp(str, enum.Enum):
+    ROWCOPY = "rowcopy"      # AAP: ACT-ACT-PRE (or ACT-PRE-ACT on COTS DRAM)
+    TRA = "tra"              # triple-row activation (Modified only)
+    APA = "apa"              # 4-row activation, ACT-PRE-ACT (Unmodified only)
+    FRAC = "frac"            # fractional charge op (Unmodified only)
+    NOT = "not"              # dual-contact-cell NOT (Modified only)
+    READ = "read"            # row readout to host (off-chip transfer)
+    WRITE = "write"          # host write of a full row (off-chip transfer)
+
+
+@dataclass
+class TraceEntry:
+    op: PuDOp
+    rows: tuple[int, ...]
+
+
+@dataclass
+class CommandTrace:
+    """Ordered log of PuD primitives issued to one subarray."""
+
+    entries: list[TraceEntry] = field(default_factory=list)
+
+    def emit(self, op: PuDOp, *rows: int) -> None:
+        self.entries.append(TraceEntry(op, rows))
+
+    def count(self, op: PuDOp) -> int:
+        return sum(1 for e in self.entries if e.op is op)
+
+    @property
+    def pud_ops(self) -> int:
+        """Number of in-DRAM PuD operations (excludes host READ/WRITE)."""
+        return sum(
+            1 for e in self.entries if e.op not in (PuDOp.READ, PuDOp.WRITE)
+        )
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.entries:
+            out[e.op.value] = out.get(e.op.value, 0) + 1
+        return out
+
+    def clear(self) -> None:
+        self.entries.clear()
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Pack a boolean/0-1 vector [N] into uint32 words [ceil(N/32)].
+
+    Bit *i* of the vector maps to bit ``i % 32`` of word ``i // 32``
+    (little-endian within the word), matching ``jnp`` kernels in
+    :mod:`repro.kernels`.
+    """
+    bits = np.asarray(bits, dtype=np.uint8)
+    n = bits.shape[-1]
+    pad = (-n) % WORD_BITS
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros(bits.shape[:-1] + (pad,), np.uint8)], axis=-1
+        )
+    b = bits.reshape(*bits.shape[:-1], -1, WORD_BITS).astype(np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    return (b << shifts).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`; returns uint8 bits [..., n]."""
+    words = np.asarray(words, dtype=np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = (words[..., :, None] >> shifts) & np.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], -1)
+    return bits[..., :n].astype(np.uint8)
+
+
+class Subarray:
+    """One PuD-enabled DRAM subarray with a command trace.
+
+    Row-space conventions (matching SIMDRAM/Ambit):
+      * ``ROW_ZERO`` / ``ROW_ONE``: constant rows (all 0s / all 1s).
+      * Modified: rows ``T0..T2`` are the designated compute rows for TRA;
+        ``DCC0`` is the dual-contact row used by NOT.
+      * Unmodified: rows ``G0..G3`` are a fixed 4-row activation group
+        (hierarchical-decoder constraint); ``Frac`` targets a group member.
+    """
+
+    NUM_RESERVED = 8  # T0,T1,T2 / G0..G3, DCC0, and the two constant rows
+
+    def __init__(
+        self,
+        num_rows: int = 1024,
+        num_cols: int = 65536,
+        arch: PuDArch = PuDArch.UNMODIFIED,
+        seed: int | None = 0,
+    ) -> None:
+        if num_cols % WORD_BITS:
+            raise ValueError("num_cols must be a multiple of 32")
+        self.num_rows = num_rows
+        self.num_cols = num_cols
+        self.num_words = num_cols // WORD_BITS
+        self.arch = arch
+        rng = np.random.default_rng(seed)
+        # DRAM content is undefined at power-up; randomize to catch bugs
+        # that rely on zero-initialized rows.
+        self.rows = rng.integers(
+            0, 2**32, size=(num_rows, self.num_words), dtype=np.uint32
+        )
+        self.trace = CommandTrace()
+        # Reserved row indices (placed at the top of the subarray).
+        self.ROW_ZERO = num_rows - 1
+        self.ROW_ONE = num_rows - 2
+        self.rows[self.ROW_ZERO] = 0
+        self.rows[self.ROW_ONE] = 0xFFFFFFFF
+        if arch is PuDArch.MODIFIED:
+            self.T0, self.T1, self.T2 = num_rows - 3, num_rows - 4, num_rows - 5
+            self.DCC0 = num_rows - 6
+        else:
+            # Fixed activation group for the 4-row APA.
+            self.G = (num_rows - 3, num_rows - 4, num_rows - 5, num_rows - 6)
+        self._frac_row: int | None = None
+        self._alloc_ptr = 0  # bump allocator for data/LUT rows
+
+    # ------------------------------------------------------------------ #
+    # Row allocation
+    # ------------------------------------------------------------------ #
+    def alloc(self, n: int) -> int:
+        """Allocate ``n`` consecutive data rows; returns the first index."""
+        start = self._alloc_ptr
+        if start + n > self.num_rows - self.NUM_RESERVED:
+            raise MemoryError(
+                f"subarray row budget exceeded: need {n} rows at {start}, "
+                f"capacity {self.num_rows - self.NUM_RESERVED}"
+            )
+        self._alloc_ptr += n
+        return start
+
+    @property
+    def rows_free(self) -> int:
+        return self.num_rows - self.NUM_RESERVED - self._alloc_ptr
+
+    # ------------------------------------------------------------------ #
+    # Host-side (off-chip) accessors -- modeled as row READ/WRITE traffic
+    # ------------------------------------------------------------------ #
+    def host_write_row(self, idx: int, words: np.ndarray) -> None:
+        self.rows[idx] = np.asarray(words, dtype=np.uint32)
+        self.trace.emit(PuDOp.WRITE, idx)
+
+    def host_read_row(self, idx: int) -> np.ndarray:
+        self.trace.emit(PuDOp.READ, idx)
+        return self.rows[idx].copy()
+
+    def peek(self, idx: int) -> np.ndarray:
+        """Debug view of a row without emitting trace traffic."""
+        return self.rows[idx].copy()
+
+    # ------------------------------------------------------------------ #
+    # PuD primitives
+    # ------------------------------------------------------------------ #
+    def rowcopy(self, src: int, dst: int) -> None:
+        """In-subarray bulk copy (RowClone-style back-to-back activation)."""
+        if src == dst:
+            return
+        self.rows[dst] = self.rows[src]
+        if self._frac_row == dst:
+            self._frac_row = None
+        self.trace.emit(PuDOp.ROWCOPY, src, dst)
+
+    def bulk_not(self, src: int, dst: int) -> None:
+        if self.arch is not PuDArch.MODIFIED:
+            raise RuntimeError("bulk NOT requires dual-contact cells "
+                               "(Modified PuD only)")
+        self.rows[dst] = ~self.rows[src]
+        self.trace.emit(PuDOp.NOT, src, dst)
+
+    def tra(self) -> None:
+        """Triple-row activation: MAJ3(T0,T1,T2) -> written to all three."""
+        if self.arch is not PuDArch.MODIFIED:
+            raise RuntimeError("TRA requires Modified (SIMDRAM) PuD")
+        a, b, c = (self.rows[r] for r in (self.T0, self.T1, self.T2))
+        maj = (a & b) | (b & c) | (a & c)
+        for r in (self.T0, self.T1, self.T2):
+            self.rows[r] = maj
+        self.trace.emit(PuDOp.TRA, self.T0, self.T1, self.T2)
+
+    def frac(self, group_slot: int) -> None:
+        """Drive one activation-group row to an intermediate voltage."""
+        if self.arch is not PuDArch.UNMODIFIED:
+            raise RuntimeError("Frac is an Unmodified-PuD operation")
+        self._frac_row = self.G[group_slot]
+        self.trace.emit(PuDOp.FRAC, self.G[group_slot])
+
+    def apa(self) -> None:
+        """4-row activation over the fixed group; the Frac'd row is neutral,
+        so the result equals MAJ3 of the remaining three rows and is written
+        back to all four (the neutral row is restored to the majority)."""
+        if self.arch is not PuDArch.UNMODIFIED:
+            raise RuntimeError("APA is an Unmodified-PuD operation")
+        if self._frac_row is None:
+            raise RuntimeError("APA without a preceding Frac: result would "
+                               "be a 4-input majority (undefined tie)")
+        live = [r for r in self.G if r != self._frac_row]
+        a, b, c = (self.rows[r] for r in live)
+        maj = (a & b) | (b & c) | (a & c)
+        for r in self.G:
+            self.rows[r] = maj
+        self._frac_row = None
+        self.trace.emit(PuDOp.APA, *self.G)
+
+    # ------------------------------------------------------------------ #
+    # Composite MAJ3 helper used by the algorithms
+    # ------------------------------------------------------------------ #
+    def maj3_into_acc(self, acc: int, x: int, y: int) -> int:
+        """Compute MAJ3(rows[acc], rows[x], rows[y]) using the substrate's
+        native mechanism; returns the row index now holding the result.
+
+        Modified:   acc is kept resident in T0 between calls (the caller
+                    passes acc==T0 after the first call); copies x,y into
+                    T1,T2 and fires TRA.  3 PuD ops (2 RowCopy + TRA), or
+                    4 on the first call when acc must be staged into T0.
+        Unmodified: the accumulator lives in G[0] (previous APA left the
+                    result there); copies x,y into G[1],G[2], Fracs G[3],
+                    fires APA.  4 PuD ops per call (+1 initial staging copy).
+        """
+        if self.arch is PuDArch.MODIFIED:
+            if acc != self.T0:
+                self.rowcopy(acc, self.T0)
+            self.rowcopy(x, self.T1)
+            self.rowcopy(y, self.T2)
+            self.tra()
+            return self.T0
+        else:
+            if acc != self.G[0]:
+                self.rowcopy(acc, self.G[0])
+            self.rowcopy(x, self.G[1])
+            self.rowcopy(y, self.G[2])
+            self.frac(3)
+            self.apa()
+            return self.G[0]

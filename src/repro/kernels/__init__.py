@@ -1,0 +1,18 @@
+"""TPU-native Clutch kernels (pallas_call + BlockSpec), jit wrappers in
+ops.py, pure-jnp oracles in ref.py.
+
+Kernels exist for the compute hot-spots the paper optimizes -- comparison
+and its surrounding data path -- not for the generic transformer stack:
+  clutch_merge     Algorithm 1 chunk merge over packed bit-planes
+  temporal_encode  binary -> temporal-coding LUT construction
+  bitserial_cmp    bit-serial borrow-chain baseline (paper's comparison)
+  fused_query      fused range predicate + popcount (beyond-paper fusion)
+  leaf_gather      GBDT leaf aggregation as MXU one-hot contraction
+  minp_mask        serving sampler threshold mask via chunked comparator
+
+On-hardware note: the small host-resolved index vectors are passed as
+plain VMEM operands for interpret-mode portability; on real TPUs they
+would ride PrefetchScalarGridSpec (SMEM) -- a mechanical swap.
+"""
+
+from . import ops, ref  # noqa: F401

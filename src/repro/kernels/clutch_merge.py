@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: Clutch chunk-merge (Algorithm 1) over packed planes.
+
+One grid step processes a ``(R, BW)`` VMEM tile of the stacked LUT: it
+gathers the ``lt``/``le`` planes for every chunk with dynamic sublane
+slices (the TPU analogue of row activation) and folds them with the
+NOT-free MAJ3 recurrence, so per-chunk intermediates never leave VMEM --
+mirroring how Clutch keeps per-chunk bitmaps inside the DRAM subarray.
+
+VMEM budget: R x BW x 4 bytes for the LUT tile (e.g. 448 rows x 1024 words
+= 1.75 MiB) + one BW output line; BW is chosen by ops.py to keep the
+working set < 4 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import SUBLANES, maj3, round_up, use_interpret
+
+
+def _kernel(lt_idx_ref, le_idx_ref, lut_ref, out_ref, *, num_chunks: int):
+    def row(idx):
+        # dynamic one-sublane gather from the VMEM-resident LUT tile
+        return pl.load(lut_ref, (pl.ds(idx, 1), slice(None)))[0]
+
+    acc = row(lt_idx_ref[0])
+    for j in range(1, num_chunks):
+        acc = maj3(acc, row(lt_idx_ref[j]), row(le_idx_ref[j]))
+    out_ref[...] = acc
+
+
+def clutch_merge(lut: jnp.ndarray, lt_idx: jnp.ndarray, le_idx: jnp.ndarray,
+                 block_words: int = 1024) -> jnp.ndarray:
+    """lut: [R, W] uint32 (R % 8 == 0, W % 128 == 0); lt_idx/le_idx: [C]
+    int32.  Returns [W] uint32 bitmap of ``a < B``."""
+    r, w = lut.shape
+    assert r % SUBLANES == 0 and w % 128 == 0, (r, w)
+    c = lt_idx.shape[0]
+    from .common import choose_block
+    bw = choose_block(w, min(block_words, w))
+    grid = (w // bw,)
+    kernel = functools.partial(_kernel, num_chunks=c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((r, bw), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=use_interpret(),
+    )(lt_idx, le_idx, lut)

@@ -1,0 +1,85 @@
+"""Shared helpers for the TPU-native Clutch kernels.
+
+TPU adaptation of the PuD substrate (DESIGN.md §2): a "DRAM row across 64K
+columns" becomes a packed ``uint32`` word-vector tile resident in VMEM; the
+charge-sharing MAJ3 becomes five VPU logical ops; the LUT "row activation"
+becomes a dynamic sublane gather from a VMEM-resident bit-plane array.
+
+Conventions:
+  * bitmaps are packed little-endian: element ``i`` -> bit ``i % 32`` of
+    word ``i // 32`` (matches ``repro.core.machine.pack_bits``).
+  * 2-D word arrays are [rows, W] with W padded to a multiple of 128 lanes
+    and row counts padded to a multiple of 8 sublanes (int32 tiling).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+LANES = 128
+SUBLANES = 8
+
+
+@functools.cache
+def use_interpret() -> bool:
+    """Pallas interpret mode: run kernel bodies in Python on CPU.  On a
+    real TPU backend this returns False and kernels compile to Mosaic."""
+    return jax.default_backend() != "tpu"
+
+
+def maj3(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Bitwise 3-input majority -- NOT-free, exactly as in-DRAM MAJ3."""
+    return (a & b) | (b & c) | (a & c)
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def choose_block(w: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that divides w (w is
+    always a multiple of 128 lanes, so 128 always qualifies)."""
+    c = preferred
+    while c > 128 and w % c:
+        c //= 2
+    assert w % c == 0, (w, c)
+    return c
+
+
+def pack_bits_jnp(bits: jnp.ndarray) -> jnp.ndarray:
+    """[..., N] 0/1 -> [..., ceil(N/32)] uint32 (little-endian per word)."""
+    n = bits.shape[-1]
+    pad = (-n) % WORD_BITS
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = bits.reshape(*bits.shape[:-1], -1, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return (b << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits_jnp(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], -1)[..., :n].astype(jnp.uint8)
+
+
+def float_to_monotonic_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Map float32 bit patterns to uint32 preserving total order:
+    ``x < y  <=>  m(x) < m(y)`` (IEEE-754 sign-magnitude fix-up).  This is
+    how the serving sampler feeds logits to the integer Clutch comparator."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits >> 31
+    flip = jnp.where(sign == 1, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
+    return bits ^ flip
+
+
+def pad2d(words: jnp.ndarray, row_mult: int = SUBLANES,
+          col_mult: int = LANES) -> jnp.ndarray:
+    r, w = words.shape
+    return jnp.pad(words, ((0, round_up(r, row_mult) - r),
+                           (0, round_up(w, col_mult) - w)))

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused range predicate + popcount (beyond-paper).
+
+Evaluates ``x0 < B < x1`` in a single VMEM pass: the ``>``-side merge runs
+on the normal LUT, the ``<``-side on the complement LUT (the NOT-free
+rewrite Unmodified PuD uses), the two bitmaps are ANDed and popcounted --
+fusing what the paper executes as separate PuD predicate + reduction +
+host COUNT steps.  This is the Q1/Q3 hot path of :mod:`repro.apps.predicate`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import SUBLANES, maj3, use_interpret
+
+
+def _merge(lut_ref, lt_idx, le_idx, num_chunks):
+    def row(idx):
+        return pl.load(lut_ref, (pl.ds(idx, 1), slice(None)))[0]
+
+    acc = row(lt_idx[0])
+    for j in range(1, num_chunks):
+        acc = maj3(acc, row(lt_idx[j]), row(le_idx[j]))
+    return acc
+
+
+def _kernel(idx_ref, lut_ref, lutc_ref, bm_ref, cnt_ref, *, num_chunks: int):
+    c = num_chunks
+    gt = _merge(lut_ref, idx_ref[0:c], idx_ref[c:2 * c], c)
+    lt = _merge(lutc_ref, idx_ref[2 * c:3 * c], idx_ref[3 * c:4 * c], c)
+    bm = gt & lt
+    bm_ref[...] = bm
+    block_count = jax.lax.population_count(bm).astype(jnp.uint32).sum()
+    # accumulate across grid steps (TPU grid is sequential per core)
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[0] = jnp.uint32(0)
+    cnt_ref[0] += block_count
+
+
+def fused_range_count(lut: jnp.ndarray, lut_c: jnp.ndarray,
+                      idx: jnp.ndarray, num_chunks: int,
+                      block_words: int = 1024
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """lut/lut_c: [R, W] uint32 stacked (normal / complement) planes;
+    idx: [4*C] int32 = concat(gt_lt, gt_le, lt_lt, lt_le) row indices.
+    Returns (bitmap [W] uint32, count [1] uint32)."""
+    r, w = lut.shape
+    assert lut_c.shape == lut.shape
+    assert r % SUBLANES == 0 and w % 128 == 0
+    from .common import choose_block
+    bw = choose_block(w, min(block_words, w))
+    kernel = functools.partial(_kernel, num_chunks=num_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(w // bw,),
+        in_specs=[
+            pl.BlockSpec((4 * num_chunks,), lambda i: (0,)),
+            pl.BlockSpec((r, bw), lambda i: (0, i)),
+            pl.BlockSpec((r, bw), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+        ],
+        interpret=use_interpret(),
+    )(idx, lut, lut_c)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: Clutch-style logit threshold masking for sampling.
+
+The LM serving sampler's min-p / threshold filter is exactly the paper's
+primitive -- a vector-scalar comparison per batch row (``logit_i < tau_b``).
+The kernel maps float32 logits to order-preserving uint32 (sign-magnitude
+fix-up), then evaluates the comparison with Clutch's chunked recurrence:
+per chunk ``lt``/``le`` flags merged by ``lt | (le & acc)`` from LSB to MSB
+chunk -- a faithful integer-domain port of Algorithm 1 (validated against
+the plain float comparison oracle bit-exactly).
+
+Fused in one VMEM pass: compare + mask fill.  Grid tiles [B, V].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import float_to_monotonic_u32, use_interpret
+
+
+def _kernel(logits_ref, tau_ref, out_ref, *, chunks: tuple[int, ...],
+            fill: float):
+    x = logits_ref[...]                                  # [BB, BV] f32
+    xu = float_to_monotonic_u32(x)
+    tu = float_to_monotonic_u32(tau_ref[...])[:, None]   # [BB, 1]
+    # Chunked Clutch recurrence, LSB chunk -> MSB chunk:
+    #   acc_j = lt_j | (le_j & acc_{j-1})
+    shift = 0
+    acc = None
+    for k in chunks:
+        mask = jnp.uint32((1 << k) - 1)
+        xc = (xu >> shift) & mask
+        tc = (tu >> shift) & mask
+        lt = tc < xc        # tau_chunk <  logit_chunk
+        le = tc <= xc       # tau_chunk <= logit_chunk
+        acc = lt if acc is None else (lt | (le & acc))
+        shift += k
+    # acc == (tau < logit); keep where logit >= tau, i.e. acc | (xu == tu)
+    keep = acc | (xu == tu)
+    out_ref[...] = jnp.where(keep, x, jnp.float32(fill))
+
+
+def minp_mask(logits: jnp.ndarray, tau: jnp.ndarray,
+              chunks: tuple[int, ...] = (8, 8, 8, 8), fill: float = -1e30,
+              block_batch: int = 8, block_vocab: int = 1024) -> jnp.ndarray:
+    """logits: [B, V] f32; tau: [B] f32.  Returns masked logits
+    (fill where logit < tau).  B % block_batch == 0, V % block_vocab == 0
+    (ops.py pads)."""
+    b, v = logits.shape
+    bb, bv = min(block_batch, b), min(block_vocab, v)
+    assert b % bb == 0 and v % bv == 0
+    kernel = functools.partial(_kernel, chunks=chunks, fill=fill)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb, v // bv),
+        in_specs=[
+            pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, v), jnp.float32),
+        interpret=use_interpret(),
+    )(logits, tau)

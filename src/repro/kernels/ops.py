@@ -1,0 +1,181 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These handle layout plumbing (padding to TPU tile multiples, appending the
+constant rows, resolving Algorithm 1's boundary cases to row indices) so
+callers work with logical shapes.  Every wrapper has a pure-jnp oracle in
+:mod:`repro.kernels.ref` and a sweep test in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import ChunkPlan
+
+from . import ref
+from .bitserial_cmp import bitserial_cmp
+from .clutch_merge import clutch_merge
+from .common import (
+    LANES,
+    SUBLANES,
+    WORD_BITS,
+    pack_bits_jnp,
+    round_up,
+    unpack_bits_jnp,
+)
+from .fused_query import fused_range_count
+from .leaf_gather import leaf_gather
+from .minp_mask import minp_mask
+from .temporal_encode import temporal_encode
+
+
+# --------------------------------------------------------------------- #
+# LUT construction (device-side bulk conversion)
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("plan", "complement"))
+def encode_lut(values: jnp.ndarray, plan: ChunkPlan,
+               complement: bool = False) -> jnp.ndarray:
+    """values: [N] uint32 -> stacked LUT [R_pad, W_pad] uint32 where the
+    chunk tables are concatenated (row offsets = ``lut_offsets(plan)``)
+    followed by a constant-zero and constant-one row, padded to tile
+    multiples.  ``complement=True`` encodes MAX - values."""
+    n = values.shape[0]
+    values = values.astype(jnp.uint32)
+    if complement:
+        values = jnp.uint32((1 << plan.n_bits) - 1) - values
+    w = round_up((n + WORD_BITS - 1) // WORD_BITS, LANES)
+    vals_pad = jnp.zeros(w * WORD_BITS, jnp.uint32).at[:n].set(values)
+    vals2d = vals_pad.reshape(w, WORD_BITS)
+    pieces = []
+    shift = 0
+    for k in plan.widths:
+        chunk = (vals2d >> shift) & jnp.uint32((1 << k) - 1)
+        planes = temporal_encode(chunk, k)[: (1 << k) - 1]
+        pieces.append(planes)
+        shift += k
+    # valid-element mask keeps padding columns all-zero in the const-one row
+    valid = (jnp.arange(w * WORD_BITS, dtype=jnp.uint32) <
+             jnp.uint32(n)).astype(jnp.uint8)
+    ones_row = pack_bits_jnp(valid)[None, :]
+    zero_row = jnp.zeros((1, w), jnp.uint32)
+    lut = jnp.concatenate(pieces + [zero_row, ones_row], axis=0)
+    r_pad = round_up(lut.shape[0], SUBLANES)
+    return jnp.pad(lut, ((0, r_pad - lut.shape[0]), (0, 0)))
+
+
+def lut_offsets(plan: ChunkPlan) -> tuple[tuple[int, ...], int, int]:
+    """Returns (cp, zero_row, one_row) row indices inside an encode_lut()
+    output."""
+    cp, off = [], 0
+    for k in plan.widths:
+        cp.append(off)
+        off += (1 << k) - 1
+    return tuple(cp), off, off + 1
+
+
+def resolve_indices(plan: ChunkPlan, a: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side Algorithm 1 index resolution: per-chunk ``lt``/``le`` row
+    indices with the boundary substitutions (const-0 / const-1 rows)."""
+    cp, zero_row, one_row = lut_offsets(plan)
+    chunks = plan.split_scalar(a)
+    lt, le = [], []
+    for j, (c, k) in enumerate(zip(chunks, plan.widths)):
+        lt.append(zero_row if c == (1 << k) - 1 else cp[j] + c)
+        le.append(one_row if c == 0 else cp[j] + c - 1)
+    return (np.asarray(lt, np.int32), np.asarray(le, np.int32))
+
+
+# --------------------------------------------------------------------- #
+# Comparison front-ends
+# --------------------------------------------------------------------- #
+
+@jax.jit
+def compare_gt_scalar(lut: jnp.ndarray, lt_idx: jnp.ndarray,
+                      le_idx: jnp.ndarray) -> jnp.ndarray:
+    """Bitmap of ``B > a`` (== ``a < B``) from a prebuilt LUT."""
+    return clutch_merge(lut, lt_idx, le_idx)
+
+
+def clutch_compare(values: jnp.ndarray, a: int, plan: ChunkPlan
+                   ) -> jnp.ndarray:
+    """End-to-end convenience: encode + merge -> bool[N] of ``a < B``."""
+    n = values.shape[0]
+    lut = encode_lut(values, plan)
+    lt_idx, le_idx = resolve_indices(plan, a)
+    words = compare_gt_scalar(lut, jnp.asarray(lt_idx), jnp.asarray(le_idx))
+    return unpack_bits_jnp(words, n).astype(bool)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def _bitserial_compare(planes: jnp.ndarray, a: jnp.ndarray, n_bits: int
+                       ) -> jnp.ndarray:
+    bits = (a[None] >> jnp.arange(n_bits, dtype=jnp.uint32)) & 1
+    not_a = jnp.where(bits == 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    return bitserial_cmp(planes, not_a)
+
+
+def bitserial_compare(planes: jnp.ndarray, a, n_bits: int) -> jnp.ndarray:
+    """planes: [n_pad, W] uint32 -> bitmap words of ``a < B``."""
+    return _bitserial_compare(planes, jnp.asarray(np.uint32(a)), n_bits)
+
+
+def encode_bitplanes(values: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Binary (bit-sliced) layout for the bit-serial baseline:
+    [n_pad, W_pad] uint32, LSB plane first."""
+    n = values.shape[0]
+    w = round_up((n + WORD_BITS - 1) // WORD_BITS, LANES)
+    vals = jnp.zeros(w * WORD_BITS, jnp.uint32).at[:n].set(
+        values.astype(jnp.uint32))
+    planes = []
+    for i in range(n_bits):
+        planes.append(pack_bits_jnp(((vals >> i) & 1).astype(jnp.uint8)))
+    arr = jnp.stack(planes)
+    n_pad = round_up(n_bits, SUBLANES)
+    return jnp.pad(arr, ((0, n_pad - n_bits), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("num_chunks",))
+def range_count(lut: jnp.ndarray, lut_c: jnp.ndarray, idx: jnp.ndarray,
+                num_chunks: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ``x0 < B < x1`` bitmap + COUNT (see fused_query.py)."""
+    bm, cnt = fused_range_count(lut, lut_c, idx, num_chunks)
+    return bm, cnt[0]
+
+
+# --------------------------------------------------------------------- #
+# GBDT + sampler
+# --------------------------------------------------------------------- #
+
+@jax.jit
+def gbdt_leaf_sum(addrs: jnp.ndarray, leaves: jnp.ndarray) -> jnp.ndarray:
+    """addrs [B, T] int32, leaves [T, L] f32 -> [B] f32 predictions."""
+    b, t = addrs.shape
+    bb = min(128, round_up(b, 8))
+    bt = min(128, round_up(t, 8))
+    b_pad, t_pad = round_up(b, bb), round_up(t, bt)
+    addrs_p = jnp.pad(addrs, ((0, b_pad - b), (0, t_pad - t)),
+                      constant_values=-1)  # -1 matches no leaf -> adds 0
+    leaves_p = jnp.pad(leaves, ((0, t_pad - t), (0, 0)))
+    out = leaf_gather(addrs_p, leaves_p, block_batch=bb, block_trees=bt)
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("chunks",))
+def sample_threshold_mask(logits: jnp.ndarray, tau: jnp.ndarray,
+                          chunks: tuple[int, ...] = (8, 8, 8, 8)
+                          ) -> jnp.ndarray:
+    """Serving sampler hot path: mask logits below a per-row threshold via
+    the chunked Clutch comparator.  logits [B, V] f32, tau [B] f32."""
+    b, v = logits.shape
+    bb = min(8, round_up(b, 8))
+    b_pad, v_pad = round_up(b, bb), round_up(v, 1024 if v >= 1024 else LANES)
+    lp = jnp.pad(logits, ((0, b_pad - b), (0, v_pad - v)))
+    tp = jnp.pad(tau, (0, b_pad - b))
+    bv = min(1024, v_pad)
+    out = minp_mask(lp, tp, chunks=chunks, block_batch=bb, block_vocab=bv)
+    return out[:b, :v]

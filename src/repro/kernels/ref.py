@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>_ref`` takes exactly the same logical inputs as the jitted
+wrapper in :mod:`repro.kernels.ops` and is used by the per-kernel
+shape/dtype sweep tests (``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import float_to_monotonic_u32, maj3, pack_bits_jnp
+
+
+def clutch_merge_ref(lut: jnp.ndarray, lt_idx: jnp.ndarray,
+                     le_idx: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1 merge over packed bit-planes.
+
+    Args:
+      lut: [R, W] uint32 -- stacked chunk LUT planes (+ const rows).
+      lt_idx / le_idx: [C] int32 row indices (host-resolved, including
+        boundary substitutions to the constant rows).
+    Returns: [W] uint32 bitmap of ``a < B``.
+    """
+    acc = lut[lt_idx[0]]
+    for j in range(1, lt_idx.shape[0]):
+        acc = maj3(acc, lut[lt_idx[j]], lut[le_idx[j]])
+    return acc
+
+
+def temporal_encode_ref(chunk_vals: jnp.ndarray, k: int) -> jnp.ndarray:
+    """[N] uint32 chunk values -> [2^k - 1, ceil(N/32)] packed LUT planes
+    (plane r bit i == (r < v_i))."""
+    r = jnp.arange((1 << k) - 1, dtype=jnp.uint32)[:, None]
+    planes = (r < chunk_vals[None, :].astype(jnp.uint32)).astype(jnp.uint8)
+    return pack_bits_jnp(planes)
+
+
+def bitserial_cmp_ref(planes: jnp.ndarray, a: jnp.ndarray | int,
+                      n_bits: int) -> jnp.ndarray:
+    """Borrow-chain bit-serial baseline on packed planes.
+
+    planes: [n_bits, W] uint32 (LSB plane first);  a: scalar uint32.
+    Returns [W] uint32 bitmap of ``a < B``.
+    """
+    a = jnp.asarray(a, jnp.uint32)
+    borrow = jnp.zeros(planes.shape[1], jnp.uint32)
+    for i in range(n_bits):
+        a_i = (a >> i) & 1
+        not_a = jnp.where(a_i == 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+        borrow = maj3(not_a, planes[i], borrow)
+    return borrow
+
+
+def fused_range_count_ref(lut: jnp.ndarray, lut_c: jnp.ndarray,
+                          gt_lt_idx: jnp.ndarray, gt_le_idx: jnp.ndarray,
+                          lt_lt_idx: jnp.ndarray, lt_le_idx: jnp.ndarray
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ``x0 < B < x1``: gt-side on the normal LUT, lt-side on the
+    complement LUT, AND, plus popcount.  Returns (bitmap [W], count [])."""
+    gt = clutch_merge_ref(lut, gt_lt_idx, gt_le_idx)
+    lt = clutch_merge_ref(lut_c, lt_lt_idx, lt_le_idx)
+    bm = gt & lt
+    cnt = jax.lax.population_count(bm).astype(jnp.uint32).sum()
+    return bm, cnt
+
+
+def leaf_gather_ref(addrs: jnp.ndarray, leaves: jnp.ndarray) -> jnp.ndarray:
+    """GBDT leaf aggregation.
+
+    addrs:  [B, T] int32 leaf address per (instance, tree).
+    leaves: [T, L] float32 leaf-value table (L = 2^depth).
+    Returns [B] float32 -- sum over trees of leaves[t, addrs[b, t]].
+    """
+    vals = jax.vmap(lambda a: leaves[jnp.arange(leaves.shape[0]), a])(addrs)
+    return vals.sum(axis=-1).astype(jnp.float32)
+
+
+def minp_mask_ref(logits: jnp.ndarray, tau: jnp.ndarray,
+                  fill: float = -1e30) -> jnp.ndarray:
+    """Vector-scalar comparison over logits: mask out ``logit < tau_b``.
+
+    logits: [B, V] float32;  tau: [B] float32.  The oracle is the plain
+    float comparison; the kernel computes it via the monotonic-u32 chunked
+    Clutch recurrence and must agree exactly.
+    """
+    keep = logits >= tau[:, None]
+    return jnp.where(keep, logits, jnp.float32(fill))
+
+
+def minp_mask_monotonic_ref(logits: jnp.ndarray, tau: jnp.ndarray,
+                            fill: float = -1e30) -> jnp.ndarray:
+    """Sanity oracle for the integer route the kernel takes."""
+    lu = float_to_monotonic_u32(logits)
+    tu = float_to_monotonic_u32(tau)[:, None]
+    return jnp.where(lu >= tu, logits, jnp.float32(fill))

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: binary -> temporal-coding LUT plane construction.
+
+Builds, for one k-bit chunk, the ``2^k - 1`` packed bit-planes where plane
+``r`` bit ``i`` equals ``r < v_i``.  This is the one-time conversion the
+paper amortizes (Fig. 18a / 21); on TPU it is the bulk encoder used when
+loading vectors into the bit-sliced layout.
+
+Layout trick: the 32 values packed into an output word must sit along the
+*lane* dimension for the VPU, so ops.py reshapes values to [W, 32] and the
+kernel reduces the 32-wide trailing dim with shift-or after the compare:
+    word[r, w] = sum_i (r < v[w, i]) << i
+computed as a dot with the per-bit weights (1<<i) in uint32 arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import WORD_BITS, use_interpret
+
+
+def _kernel(vals_ref, out_ref, *, block_rows: int):
+    r0 = pl.program_id(0) * block_rows
+    vals = vals_ref[...]                                   # [BW, 32] uint32
+    rows = (r0 + jax.lax.broadcasted_iota(jnp.uint32, (block_rows, 1, 1), 0))
+    bits = (rows < vals[None]).astype(jnp.uint32)          # [BR, BW, 32]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, WORD_BITS), 2)
+    out_ref[...] = (bits << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def temporal_encode(vals: jnp.ndarray, k: int, block_rows: int = 8,
+                    block_words: int = 512) -> jnp.ndarray:
+    """vals: [W, 32] uint32 chunk values (W % 128 == 0).  Returns
+    [R_pad, W] uint32 planes with R_pad = roundup(2^k - 1, block_rows);
+    ops.py slices off the padding rows."""
+    w = vals.shape[0]
+    assert vals.shape[1] == WORD_BITS and w % 128 == 0
+    r = (1 << k) - 1
+    r_pad = (r + block_rows - 1) // block_rows * block_rows
+    from .common import choose_block
+    bw = choose_block(w, min(block_words, w))
+    kernel = functools.partial(_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(r_pad // block_rows, w // bw),
+        in_specs=[pl.BlockSpec((bw, WORD_BITS), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((block_rows, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, w), jnp.uint32),
+        interpret=use_interpret(),
+    )(vals)

@@ -1,0 +1,559 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell
+on 512 placeholder host devices, proving the distribution config is
+coherent, and extract roofline terms from the compiled artifacts.
+
+Per cell this produces:
+  * full-step lower+compile  -> proves sharding works end-to-end;
+    memory_analysis() (fits-per-device evidence) + collective schedule.
+  * component compiles       -> trip-count-corrected FLOPs/bytes/collective
+    totals (cost_analysis counts a scan body once; see launch/roofline.py),
+    compiled under the SAME mesh and shardings.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import functools     # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.dist.sharding import fit, shardings  # noqa: E402
+from repro.launch import roofline as R  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import layers as L  # noqa: E402
+from repro.models import lm as M  # noqa: E402
+from repro.train import optimizer as O  # noqa: E402
+from repro.train import train_step as T  # noqa: E402
+
+
+# --------------------------------------------------------------------- #
+# Abstract inputs
+# --------------------------------------------------------------------- #
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(M.init_params, cfg), key)
+
+
+def count_params(tree) -> float:
+    return float(sum(leaf.size for leaf in jax.tree.leaves(tree)))
+
+
+def active_params(cfg: ModelConfig, tree) -> float:
+    """MoE: count only top_k of num_experts expert params as active."""
+    total = count_params(tree)
+    if cfg.moe is None:
+        return total
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    expert = sum(
+        leaf.size for path, leaf in flat
+        if any("moe" in str(getattr(p, "key", "")) for p in path)
+        and any(k in str(getattr(p, "key", ""))
+                for p in path for k in ("w_in", "w_gate", "w_out")))
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return total - expert * (1.0 - frac)
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig, dp_total: int
+                     ) -> int:
+    if shape.kind != "train":
+        return 1
+    per_dev = max(shape.global_batch // dp_total, 1)
+    target_tokens = 4096 if cfg.d_model >= 10000 else 8192
+    mb_per_dev = max(1, target_tokens // shape.seq_len)
+    return max(1, per_dev // mb_per_dev)
+
+
+def input_sds(cfg: ModelConfig, shape: ShapeConfig, micro: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    cd = cfg.compute_dtype
+    if shape.kind == "train":
+        mb = b // micro
+        out = {}
+        if cfg.enc_dec:
+            out["enc_embeds"] = jax.ShapeDtypeStruct(
+                (micro, mb, s, cfg.d_model), cd)
+        if cfg.frontend == "vision_stub":
+            out["embeds"] = jax.ShapeDtypeStruct(
+                (micro, mb, s, cfg.d_model), cd)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((micro, mb, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((micro, mb, s), jnp.int32)
+        return out
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            return {"enc_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                       cd),
+                    "tokens": jax.ShapeDtypeStruct((b, 8), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------- #
+# Full-step lowering (the pass/fail of the dry-run)
+# --------------------------------------------------------------------- #
+
+def strip_data_axis(spec_tree):
+    """TP-only param specs for serving: FSDP ("data") sharding of weights
+    makes every layer re-all-gather its weights at inference time; serving
+    replicates across "data" instead (the §Perf tp_serve variant)."""
+    def strip(spec):
+        return P(*(tuple(None if e == "data" else e for e in tuple(spec))))
+    return jax.tree.map(strip, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_full_step(cfg: ModelConfig, shape: ShapeConfig, mesh, micro: int,
+                    tp_only_params: bool = False):
+    dp = T.dp_axes(mesh)
+    pspecs = M.param_specs(cfg)
+    if tp_only_params:
+        pspecs = strip_data_axis(pspecs)
+    params_sds = abstract_params(cfg)
+    psharding = shardings(mesh, pspecs, params_sds)
+
+    if shape.kind == "train":
+        opt_cfg = O.OptConfig(opt_dtype=cfg.opt_dtype)
+        opt_sds = jax.eval_shape(
+            functools.partial(O.init_opt_state, opt_cfg), params_sds)
+        osharding = shardings(mesh, O.opt_state_specs(pspecs), opt_sds)
+        batch_sds = input_sds(cfg, shape, micro)
+        bsharding = {
+            k: NamedSharding(mesh, fit(P(None, dp, None, None)
+                                       if v.ndim == 4 else P(None, dp, None),
+                                       v.shape, mesh))
+            for k, v in batch_sds.items()}
+        step = T.make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(psharding, osharding, bsharding),
+                         out_shardings=(psharding, osharding, None),
+                         donate_argnums=(0, 1))
+        return jitted.lower(params_sds, opt_sds, batch_sds)
+
+    if shape.kind == "prefill":
+        batch_sds = input_sds(cfg, shape, micro)
+        bsharding = {
+            k: NamedSharding(mesh, fit(P(dp, None, None) if v.ndim == 3
+                                       else P(dp, None), v.shape, mesh))
+            for k, v in batch_sds.items()}
+        fn = functools.partial(M.prefill, cfg)
+        def pf(params, batch):
+            return fn(params, batch, max_len=shape.seq_len)
+        logits_sds, cache_sds = jax.eval_shape(pf, params_sds, batch_sds)
+        cache_sh = shardings(mesh, M.cache_specs(cfg), cache_sds)
+        jitted = jax.jit(
+            pf,
+            in_shardings=(psharding, bsharding),
+            out_shardings=(
+                NamedSharding(mesh, fit(P(dp, None, None),
+                                        logits_sds.shape, mesh)),
+                cache_sh),
+        )
+        return jitted.lower(params_sds, batch_sds)
+
+    # decode: one token against a seq_len cache
+    b = shape.global_batch
+    cache_sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, shape.seq_len))
+    cache_sh = shardings(mesh, M.cache_specs(cfg), cache_sds)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, fit(P(dp, None), (b, 1), mesh))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    extra = {}
+    if cfg.enc_dec:
+        # cross K/V caches for the encoder context (built at prefill)
+        enc_s = 1500  # whisper-style 30s encoder length
+        def mk_cross(params):
+            enc = jnp.zeros((b, enc_s, cfg.d_model), L.cdtype(cfg))
+            return M._cross_kv(cfg, params, enc)
+        cross_sds = jax.eval_shape(mk_cross, abstract_params(cfg))
+        cross_sh = jax.tree.map(
+            lambda sds: NamedSharding(
+                mesh, fit(P(None, dp, None, "model"), sds.shape, mesh)),
+            cross_sds)
+        extra = {"cross_sds": cross_sds, "cross_sh": cross_sh}
+
+    logit_sh = NamedSharding(
+        mesh, fit(P(dp, None, None), (b, 1, 1), mesh))
+    if extra:
+        jitted = jax.jit(
+            functools.partial(M.decode_step, cfg),
+            in_shardings=(psharding, cache_sh, tok_sh, None,
+                          extra["cross_sh"]),
+            out_shardings=(logit_sh, cache_sh),
+            donate_argnums=(1,),
+        )
+        return jitted.lower(abstract_params(cfg), cache_sds, tok_sds,
+                            pos_sds, extra["cross_sds"])
+    jitted = jax.jit(
+        functools.partial(M.decode_step, cfg),
+        in_shardings=(psharding, cache_sh, tok_sh, None),
+        out_shardings=(logit_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted.lower(abstract_params(cfg), cache_sds, tok_sds, pos_sds)
+
+
+# --------------------------------------------------------------------- #
+# Component compiles (trip-count-corrected roofline accounting)
+# --------------------------------------------------------------------- #
+
+def _period_param_sds(cfg: ModelConfig, params_sds):
+    """One period's params (strip the scan-stacked leading dim)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+        params_sds["periods"])
+
+
+def _period_specs(cfg: ModelConfig):
+    return {f"block{i}": M._block_specs(cfg, kind, i,
+                                        with_cross=cfg.enc_dec)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def components(cfg: ModelConfig, shape: ShapeConfig, mesh, micro: int,
+               tp_only_params: bool = False):
+    """Yield (name, multiplier, lowered) for the cell's roofline sum."""
+    dp = T.dp_axes(mesh)
+    params_sds = abstract_params(cfg)
+    pp_sds = _period_param_sds(cfg, params_sds)
+    pp_specs = _period_specs(cfg)
+    if tp_only_params:
+        pp_specs = strip_data_axis(pp_specs)
+    pp_sh = shardings(mesh, pp_specs, pp_sds)
+    b = shape.global_batch
+    s = shape.seq_len
+    cd = cfg.compute_dtype
+    x_sh = NamedSharding(mesh, fit(P(dp, None, None),
+                                   (b // max(micro, 1), 1, 1), mesh)
+                         if shape.kind == "train" else
+                         fit(P(dp, None, None), (b, 1, 1), mesh))
+    emb_sh = shardings(mesh, L.embed_specs(cfg), params_sds["embed"])
+    fn_sh = shardings(mesh, L.rmsnorm_specs(cfg), params_sds["final_norm"])
+    positions = jax.ShapeDtypeStruct((0,), jnp.int32)  # placeholder
+
+    if shape.kind == "train":
+        mb = b // micro
+        x_sds = jax.ShapeDtypeStruct((mb, s, cfg.d_model), cd)
+        tok_sds = jax.ShapeDtypeStruct((mb, s), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(dp, None))
+
+        def period_loss(pp, x):
+            pos = jnp.arange(x.shape[1])
+            y = M.period_fn(cfg, pp, x, pos)
+            return jnp.sum(y.astype(jnp.float32))
+
+        grad_fn = jax.grad(period_loss, argnums=(0, 1))
+        low = jax.jit(grad_fn, in_shardings=(pp_sh, x_sh),
+                      out_shardings=(pp_sh, x_sh)
+                      ).lower(pp_sds, x_sds)
+        yield ("period_grad", cfg.num_periods * micro, low)
+
+        def head_loss(ep, fp, x, labels):
+            h = L.rmsnorm(fp, x, cfg.norm_eps)
+            logits = L.lm_head(cfg, ep, h)
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+            return jnp.mean(logz - gold)
+
+        hg = jax.grad(head_loss, argnums=(0, 1, 2))
+        low = jax.jit(hg, in_shardings=(emb_sh, fn_sh, x_sh, tok_sh),
+                      out_shardings=(emb_sh, fn_sh, x_sh)
+                      ).lower(params_sds["embed"],
+                              params_sds["final_norm"], x_sds, tok_sds)
+        yield ("head_grad", micro, low)
+
+        def embed_sum(ep, tokens):
+            return jnp.sum(L.embed(cfg, ep, tokens).astype(jnp.float32))
+
+        low = jax.jit(jax.grad(embed_sum), in_shardings=(emb_sh, tok_sh),
+                      out_shardings=emb_sh).lower(params_sds["embed"],
+                                                  tok_sds)
+        yield ("embed_grad", micro, low)
+
+        opt_cfg = O.OptConfig(opt_dtype=cfg.opt_dtype)
+        opt_sds = jax.eval_shape(
+            functools.partial(O.init_opt_state, opt_cfg), params_sds)
+        psh = shardings(mesh, M.param_specs(cfg), params_sds)
+
+        def opt_update(params, grads, state):
+            p, s2, _ = O.apply_updates(opt_cfg, params, grads, state)
+            return p, s2
+
+        gr_sds = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds)
+        osh = shardings(mesh, O.opt_state_specs(M.param_specs(cfg)), opt_sds)
+        low = jax.jit(opt_update,
+                      in_shardings=(psh, psh, osh),
+                      out_shardings=(psh, osh)
+                      ).lower(params_sds, gr_sds, opt_sds)
+        yield ("opt_update", 1, low)
+
+        if cfg.enc_dec:
+            enc_sds = {"block0": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                params_sds["enc_periods"]["block0"])}
+            enc_sh = shardings(mesh, {"block0": M._block_specs(cfg, "attn", 0)},
+                               enc_sds)
+
+            def enc_loss(pp, x):
+                pos = jnp.arange(x.shape[1])
+                y = M._apply_block(cfg, "attn", 0, pp["block0"], x, pos,
+                                   causal=False)
+                return jnp.sum(y.astype(jnp.float32))
+
+            low = jax.jit(jax.grad(enc_loss, argnums=(0, 1)),
+                          in_shardings=(enc_sh, x_sh),
+                          out_shardings=(enc_sh, x_sh)
+                          ).lower(enc_sds, x_sds)
+            yield ("enc_period_grad", cfg.enc_layers * micro, low)
+        return
+
+    if shape.kind == "prefill":
+        x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+
+        def period_fwd(pp, x):
+            pos = jnp.arange(x.shape[1])
+            return M.period_fn(cfg, pp, x, pos)
+
+        low = jax.jit(period_fwd, in_shardings=(pp_sh, x_sh),
+                      out_shardings=x_sh).lower(pp_sds, x_sds)
+        yield ("period_fwd", cfg.num_periods, low)
+
+        def head(ep, fp, x):
+            return L.lm_head(cfg, ep, L.rmsnorm(fp, x[:, -1:], cfg.norm_eps))
+
+        low = jax.jit(head, in_shardings=(emb_sh, fn_sh, x_sh),
+                      out_shardings=None
+                      ).lower(params_sds["embed"], params_sds["final_norm"],
+                              x_sds)
+        yield ("head_fwd", 1, low)
+        return
+
+    # decode: one-period decode body + head
+    cache_sds_full = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    pcache_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), cache_sds_full)
+    pcache_sh = shardings(
+        mesh, jax.tree.map(lambda sp: P(*tuple(sp)[1:]), M.cache_specs(cfg),
+                           is_leaf=lambda x: isinstance(x, P)), pcache_sds)
+    x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cd)
+    x1_sh = NamedSharding(mesh, fit(P(dp, None, None), (b, 1, 1), mesh))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def period_decode(pp, pcache, x, pos):
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, nc = M._apply_block_decode(cfg, kind, pp[f"block{i}"], x,
+                                          pcache[f"block{i}"], pos)
+            new_cache[f"block{i}"] = nc
+        return x, new_cache
+
+    low = jax.jit(period_decode,
+                  in_shardings=(pp_sh, pcache_sh, x1_sh, None),
+                  out_shardings=(x1_sh, pcache_sh),
+                  donate_argnums=(1,)
+                  ).lower(pp_sds, pcache_sds, x_sds, pos_sds)
+    yield ("period_decode", cfg.num_periods, low)
+
+    def head(ep, fp, x):
+        return L.lm_head(cfg, ep, L.rmsnorm(fp, x, cfg.norm_eps))
+
+    low = jax.jit(head, in_shardings=(emb_sh, fn_sh, x1_sh),
+                  out_shardings=None
+                  ).lower(params_sds["embed"], params_sds["final_norm"],
+                          x_sds)
+    yield ("head_decode", 1, low)
+
+
+# --------------------------------------------------------------------- #
+# Cell runner
+# --------------------------------------------------------------------- #
+
+OPT_NOTES = {
+    "moe_dp": "MoE dispatch buffer constrained to P(None, data, model)",
+    "tp_serve": "serving params TP-only (no FSDP all-gathers at inference)",
+    "bigmicro": "4x tokens per microbatch (fewer FSDP gather waves)",
+}
+
+
+def apply_variant(cfg: ModelConfig, variant: str,
+                  shape: ShapeConfig | None = None) -> ModelConfig:
+    if variant != "opt":
+        return cfg
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe_dp_sharding=True)
+    cfg = dataclasses.replace(
+        cfg,
+        attn_q_chunk=2048,
+        # head-sharded scores need n_heads >= model axis (16); on
+        # whisper-base (8H) the fallback layout regressed collectives 5x
+        # -- measured, gated off (§Perf).
+        attn_shard_heads=(cfg.n_heads >= 16),
+        attn_scores_bf16=(cfg.attn_softcap is None),
+        # chunk-parallel RWKV time-mix: converts the elementwise scan into
+        # MXU matmuls (see ssm._rwkv_chunked)
+        rwkv_chunk=64 if "rwkv" in cfg.block_pattern else None,
+    )
+    if shape is not None and shape.name == "long_500k":
+        # sequence-parallel flash-decode: the 500k cell's B=1 cache shards
+        # over sequence on every axis; O(B*H*dh) per-step collectives.
+        # (Measured HARMFUL at decode_32k where batch=128 already fills
+        # the mesh -- llava decode bound 179 -> 303 ms; refuted there and
+        # restricted to the B=1 long-context cell.)
+        cfg = dataclasses.replace(cfg, sp_decode=True)
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             skip_components: bool = False, variant: str = "base") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = apply_variant(get_config(arch), variant, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    dp_total = chips // 16
+    micro = microbatches_for(cfg, shape, dp_total)
+    # ("bigmicro" -- 4x tokens/microbatch to amortize FSDP gathers -- was
+    # tried and REVERTED: -22% collective but 2.7x temp memory, overflowing
+    # HBM.  See EXPERIMENTS.md §Perf iteration log.)
+    t0 = time.time()
+    result = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips, "microbatches": micro,
+    }
+
+    with mesh:
+        lowered = lower_full_step(cfg, shape, mesh, micro,
+                                  tp_only_params=(variant == "opt" and
+                                                  shape.kind != "train"))
+        compiled = lowered.compile()
+    try:
+        mem = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not implement it
+        result["memory_analysis"] = {"error": str(e)}
+    ca = compiled.cost_analysis() or {}
+    result["full_step_cost"] = {
+        "flops_scanbody_once": float(ca.get("flops", -1.0)),
+        "bytes_scanbody_once": float(ca.get("bytes accessed", -1.0)),
+    }
+    result["full_step_collectives"] = R.collective_bytes(
+        compiled.as_text())
+    result["compile_s"] = round(time.time() - t0, 1)
+
+    # --- component-corrected roofline terms ---
+    params_sds = abstract_params(cfg)
+    n_params = count_params(params_sds)
+    n_active = active_params(cfg, params_sds)
+    result["n_params"] = n_params
+    result["n_params_active"] = n_active
+
+    if not skip_components:
+        flops = bytes_hbm = coll = 0.0
+        comp_detail = {}
+        with mesh:
+            comps = list(components(
+                cfg, shape, mesh, micro,
+                tp_only_params=(variant == "opt" and
+                                shape.kind != "train")))
+        for name, mult, low in comps:
+            comp = low.compile()
+            cca = comp.cost_analysis() or {}
+            f = float(cca.get("flops", 0.0)) * mult
+            by = float(cca.get("bytes accessed", 0.0)) * mult
+            cb = sum(R.collective_bytes(comp.as_text()).values()) * mult
+            comp_detail[name] = {"mult": mult, "flops": f, "bytes": by,
+                                 "collective_bytes": cb}
+            flops += f
+            bytes_hbm += by
+            coll += cb
+        terms = R.RooflineTerms(flops, bytes_hbm, coll, chips)
+        result["roofline"] = terms.as_dict()
+        result["components"] = comp_detail
+        tokens = shape.global_batch * (
+            1 if shape.kind == "decode" else shape.seq_len)
+        mf = (R.model_flops_train(n_active, tokens) if shape.kind == "train"
+              else R.model_flops_decode(n_active, tokens))
+        result["model_flops"] = mf
+        # HLO flops are per-device; MODEL_FLOPS is global.
+        result["model_flops_ratio"] = mf / (flops * chips) if flops else 0.0
+    result["total_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-components", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import cells
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'pod2' if mp else 'pod1'}"
+            if args.variant != "base":
+                tag += f"_{args.variant}"
+            out_path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(out_path):
+                print(f"[skip] {tag} (artifact exists)")
+                continue
+            print(f"[run ] {tag}", flush=True)
+            try:
+                res = run_cell(arch, shape, mp,
+                               skip_components=args.skip_components or mp,
+                               variant=args.variant)
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                rf = res.get("roofline", {})
+                print(f"[ok  ] {tag} compile={res['compile_s']}s "
+                      f"bottleneck={rf.get('bottleneck', '-')}", flush=True)
+            except Exception:
+                failures.append(tag)
+                with open(os.path.join(args.out, tag + ".FAILED"), "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

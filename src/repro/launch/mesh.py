@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state -- required because the dry-run must
+set XLA_FLAGS before any JAX initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (v5e); the multi-pod mesh adds a leading
+    2-pod axis used for data parallelism (and optionally pipeline stages)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this process actually has -- used by smoke tests/examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

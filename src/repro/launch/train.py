@@ -1,0 +1,68 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+        --steps 200 --reduced --checkpoint-dir /tmp/ckpt
+
+``--reduced`` runs the smoke-scale config on the host devices (what this
+CPU container can execute); without it the full config is launched on the
+production mesh (requires real accelerators -- on this container use
+``repro.launch.dryrun`` instead, which AOT-compiles the same step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train import optimizer as O
+from repro.train.loop import TrainConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        cfg = cfg.reduced()
+        shape = shape.reduced()
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    tcfg = TrainConfig(
+        steps=args.steps,
+        microbatches=args.microbatches,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        resume=not args.no_resume,
+    )
+    opt_cfg = O.OptConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 1),
+                          opt_dtype=cfg.opt_dtype)
+    summary = run_training(cfg, shape, mesh, tcfg, opt_cfg)
+    print(json.dumps({k: v for k, v in summary.items() if k != "log"},
+                     indent=1))
+    for row in summary["log"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

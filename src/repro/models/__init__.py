@@ -1,0 +1,4 @@
+"""Model zoo: composable blocks (layers/ssm), LM composition (lm), and
+modality frontend stubs (frontends)."""
+
+from . import frontends, layers, lm, ssm  # noqa: F401

@@ -1,0 +1,44 @@
+"""Modality frontends -- STUBS per the assignment spec.
+
+``[vlm]`` / ``[audio]`` architectures specify the transformer backbone
+only; ``input_specs()`` provides *precomputed* patch/frame embeddings.
+These helpers generate deterministic synthetic embeddings for smoke tests
+and examples, and the matching ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def synthetic_embeds(cfg: ModelConfig, b: int, s: int, key) -> jnp.ndarray:
+    """Stand-in for vision-tower patch embeddings / audio conv features."""
+    return 0.02 * jax.random.normal(key, (b, s, cfg.d_model),
+                                    jnp.dtype(cfg.compute_dtype))
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical input shapes (pre-ShapeDtypeStruct) for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.enc_dec:
+            # audio: encoder frames + decoder tokens
+            return {"enc_embeds": ((b, s, cfg.d_model), cfg.compute_dtype),
+                    "tokens": ((b, s), "int32"),
+                    "labels": ((b, s), "int32")}
+        if cfg.frontend == "vision_stub":
+            return {"embeds": ((b, s, cfg.d_model), cfg.compute_dtype),
+                    "labels": ((b, s), "int32")}
+        return {"tokens": ((b, s), "int32"), "labels": ((b, s), "int32")}
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            return {"enc_embeds": ((b, s, cfg.d_model), cfg.compute_dtype),
+                    "tokens": ((b, 8), "int32")}
+        if cfg.frontend == "vision_stub":
+            return {"embeds": ((b, s, cfg.d_model), cfg.compute_dtype)}
+        return {"tokens": ((b, s), "int32")}
+    # decode: one new token against a cache of seq_len
+    return {"tokens": ((b, 1), "int32")}

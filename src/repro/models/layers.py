@@ -1,0 +1,450 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (sliding
+window / softcap / bias variants), MLP variants, and capacity-based MoE.
+
+Conventions:
+  * pure functions over explicit param dicts; every ``*_init`` has a
+    matching ``*_specs`` returning a PartitionSpec tree of the same shape.
+  * TP axis is "model", FSDP/ZeRO axis is "data"; params never reference
+    "pod" (replicated across pods, gradients all-reduced there).
+  * attention weights are stored FUSED-2D ([D, H*dh] etc.) so explicitly
+    sharded dims always divide the 16-way model axis (56 heads x 128 =
+    7168 divides; 56 alone does not).  Head reshapes happen inside the
+    computation where GSPMD may pad intermediates freely.
+  * the vocab is padded to a multiple of 128 (``padded_vocab``); lm_head
+    masks the padding logits to -inf, standard Megatron practice.
+  * KV caches are stored flattened [B, S, KV*dh] for the same reason.
+  * attention is einsum-based (no flash kernel): the paper's contribution
+    is the comparison substrate, not attention; XLA fuses the softmax.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+NEG_INF = -2.0e38
+VOCAB_ALIGN = 128
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return (cfg.vocab + VOCAB_ALIGN - 1) // VOCAB_ALIGN * VOCAB_ALIGN
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------- norms ---------------------------------- #
+
+def rmsnorm_init(cfg: ModelConfig, key) -> Params:
+    return {"scale": jnp.ones((cfg.d_model,), pdtype(cfg))}
+
+
+def rmsnorm_specs(cfg: ModelConfig) -> Params:
+    return {"scale": P(None)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (x32 * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ----------------------------- RoPE ----------------------------------- #
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, n, d_head]; positions: [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    while cos.ndim < x.ndim - 1:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]            # head axis
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------- attention -------------------------------- #
+
+def attn_init(cfg: ModelConfig, key) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, h * dh), pdtype(cfg)) * s,
+        "wk": jax.random.normal(k2, (d, kv * dh), pdtype(cfg)) * s,
+        "wv": jax.random.normal(k3, (d, kv * dh), pdtype(cfg)) * s,
+        "wo": jax.random.normal(k4, (h * dh, d), pdtype(cfg)) *
+        (1.0 / math.sqrt(h * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), pdtype(cfg))
+        p["bk"] = jnp.zeros((kv * dh,), pdtype(cfg))
+        p["bv"] = jnp.zeros((kv * dh,), pdtype(cfg))
+    return p
+
+
+def attn_specs(cfg: ModelConfig) -> Params:
+    p = {
+        "wq": P("data", "model"),
+        "wk": P("data", "model"),
+        "wv": P("data", "model"),
+        "wo": P("model", "data"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P("model")
+        p["bk"] = P("model")
+        p["bv"] = P("model")
+    return p
+
+
+def _softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def _attn_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+               window: int | None) -> jnp.ndarray:
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def project_kv(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               positions: jnp.ndarray | None, rope_keys: bool = True
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """K/V projections in flat cache layout [B, S, KV*dh]."""
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope_keys:
+        kh = k.reshape(*k.shape[:-1], kv, dh)
+        kh = rope(kh, positions, cfg.rope_theta)
+        k = kh.reshape(*k.shape)
+    return k, v
+
+
+def _attend(cfg: ModelConfig, q: jnp.ndarray, k_flat: jnp.ndarray,
+            v_flat: jnp.ndarray, mask: jnp.ndarray | None) -> jnp.ndarray:
+    """q: [B, Sq, H, dh]; k/v: [B, Sk, KV*dh]; mask: broadcastable to
+    [B, KV, G, Sq, Sk] (grouped) or [B, 1, Sq, Sk] (head-sharded mode).
+    Returns [B, Sq, H*dh].
+
+    Perf-iteration knobs (§Perf):
+      * ``attn_shard_heads``: expand GQA K/V to the full head count
+        (transient, small) and constrain the score tensor to be sharded
+        over *heads* on "model".  Without this GSPMD may split the dh
+        contraction (inherited from the flat [B,S,KV*dh] layout) and
+        all-reduce the full S x S score tensor (observed: 57 GiB f32 per
+        layer on llava prefill_32k).  [An earlier iteration sharding
+        scores over the query-seq dim instead was refuted: it reshards
+        head-sharded Q/K/V per chunk -- collectives got 67x WORSE.]
+      * ``attn_scores_bf16``: bf16 score matmul where no softcap needs
+        f32 tails."""
+    b, sq, h, dh = q.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    kh = k_flat.reshape(b, -1, kv, dh)
+    vh = v_flat.reshape(b, -1, kv, dh)
+    if getattr(cfg, "attn_shard_heads", False):
+        from jax.sharding import PartitionSpec as _P
+        from repro.dist.sharding import constrain
+        khf = jnp.repeat(kh, g, axis=2)          # [B, Sk, H, dh] transient
+        vhf = jnp.repeat(vh, g, axis=2)
+        scores = jnp.einsum("bshd,bthd->bhst", q, khf) / math.sqrt(dh)
+        scores = constrain(scores, _P("data", "model", None, None),
+                           allow_uneven=True)
+        if not (cfg.attn_scores_bf16 and cfg.attn_softcap is None):
+            scores = scores.astype(jnp.float32)
+        scores = _softcap(scores, cfg.attn_softcap)
+        if mask is not None:
+            if mask.ndim == 5:                   # grouped mask -> head mask
+                mask = mask.reshape(mask.shape[0], -1, *mask.shape[3:])
+            scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(q.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", w, vhf)
+        return out.reshape(b, sq, h * dh)
+    qg = q.reshape(b, sq, kv, g, dh)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, kh) / math.sqrt(dh)
+    if not (cfg.attn_scores_bf16 and cfg.attn_softcap is None):
+        scores = scores.astype(jnp.float32)
+    scores = _softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, vh)
+    return out.reshape(b, sq, h * dh)
+
+
+def attention(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              q_pos: jnp.ndarray, k: jnp.ndarray | None = None,
+              v: jnp.ndarray | None = None,
+              window: int | None = None,
+              cross: bool = False) -> jnp.ndarray:
+    """Full (training/prefill) attention.  x: [B, S, D].  If ``k``/``v``
+    are given (cross-attention), they are pre-projected flat caches
+    [B, Sk, KV*dh]; otherwise self-attention projects from x.
+    ``cross=True`` => no causal mask, no RoPE."""
+    h, dh = cfg.n_heads, cfg.d_head
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(*x.shape[:-1], h, dh)
+    if not cross:
+        q = rope(q, q_pos, cfg.rope_theta)
+    if k is None:
+        k, v = project_kv(cfg, p, x, q_pos, rope_keys=not cross)
+    s_q = q.shape[1]
+    chunk = cfg.attn_q_chunk
+    if chunk and s_q > chunk and not cross:
+        # Query-block chunked attention (§Perf): bounds the S x S score
+        # materialization to [.., chunk, Sk_blk] and skips keys beyond the
+        # causal/window horizon of each block (saves ~2x score FLOPs on
+        # causal prefill, and ~Sk/window on sliding-window blocks).
+        outs = []
+        for i in range(0, s_q, chunk):
+            hi = min(i + chunk, s_q)
+            # first query row of the block is i => needs keys > i - window
+            k_lo = 0 if window is None else max(0, i - window + 1)
+            qb = q[:, i:hi]
+            mask = _attn_mask(q_pos[i:hi], q_pos[k_lo:hi],
+                              window)[None, None, None]
+            outs.append(_attend(cfg, qb, k[:, k_lo:hi], v[:, k_lo:hi],
+                                mask))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        if cross:
+            mask = None
+        else:
+            mask = _attn_mask(q_pos, q_pos, window)[None, None, None]
+        out = _attend(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def project_qkv_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                       pos: jnp.ndarray):
+    """Decode-step projections: q [B,1,H,dh] and flat k/v [B,1,KV*dh],
+    RoPE applied at ``pos`` (shared by dense and SP flash decode)."""
+    h, dh = cfg.n_heads, cfg.d_head
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = rope(q.reshape(x.shape[0], 1, h, dh), posv, cfg.rope_theta)
+    k1, v1 = project_kv(cfg, p, x, posv)
+    return q, k1, v1
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     pos: jnp.ndarray, window: int | None = None,
+                     kpos: jnp.ndarray | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                jnp.ndarray | None]:
+    """One-token decode.  x: [B, 1, D]; cache_[kv]: [B, S, KV*dh] (flat
+    layout); pos: scalar position; kpos: [S] absolute position per rolling
+    slot (sliding-window only).  Returns (out, new_k, new_v, new_kpos)."""
+    h, dh = cfg.n_heads, cfg.d_head
+    s_max = cache_k.shape[1]
+    q, k1, v1 = project_qkv_decode(cfg, p, x, pos)
+    if getattr(cfg, "sp_decode", False) and window is None:
+        from repro.dist.sp_decode import sp_flash_decode
+        out, cache_k, cache_v = sp_flash_decode(cfg, q, cache_k, cache_v,
+                                                k1, v1, pos)
+        return out @ p["wo"].astype(x.dtype), cache_k, cache_v, kpos
+    slot = pos % s_max if window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k1, (0, slot, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v1, (0, slot, 0))
+    if window is not None:
+        assert kpos is not None
+        kpos = kpos.at[slot].set(pos)
+        valid = (kpos <= pos) & (kpos > pos - window)
+    else:
+        valid = jnp.arange(s_max) <= pos
+    mask = valid[None, None, None, None, :]
+    out = _attend(cfg, q, cache_k, cache_v, mask)
+    y = out @ p["wo"].astype(x.dtype)
+    return y, cache_k, cache_v, kpos
+
+
+# ------------------------------ MLPs ---------------------------------- #
+
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "w_in": jax.random.normal(k1, (d, f), pdtype(cfg)) * s_in,
+        "w_out": jax.random.normal(k2, (f, d), pdtype(cfg)) * s_out,
+    }
+    if cfg.mlp in ("silu_glu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (d, f), pdtype(cfg)) * s_in
+    return p
+
+
+def mlp_specs(cfg: ModelConfig) -> Params:
+    p = {"w_in": P("data", "model"), "w_out": P("model", "data")}
+    if cfg.mlp in ("silu_glu", "geglu"):
+        p["w_gate"] = P("data", "model")
+    return p
+
+
+def mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ p["w_in"].astype(x.dtype)
+    if cfg.mlp == "silu_glu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype),
+                        approximate=True) * h
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))      # squared-ReLU (nemotron)
+    else:
+        raise ValueError(cfg.mlp)
+    return h @ p["w_out"].astype(x.dtype)
+
+
+# ------------------------------ MoE ----------------------------------- #
+
+def moe_init(cfg: ModelConfig, key) -> Params:
+    assert cfg.moe is not None
+    e, d, f = cfg.moe.num_experts, cfg.d_model, cfg.moe.d_ff_expert
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * s_in,
+        "w_in": jax.random.normal(k2, (e, d, f), pdtype(cfg)) * s_in,
+        "w_gate": jax.random.normal(k3, (e, d, f), pdtype(cfg)) * s_in,
+        "w_out": jax.random.normal(k4, (e, f, d), pdtype(cfg)) * s_out,
+    }
+
+
+def moe_specs(cfg: ModelConfig) -> Params:
+    # experts unsharded (8/16/40 don't divide the 16-way model axis);
+    # TP inside each expert's d_ff (always divisible), FSDP on d_model.
+    return {
+        "router": P(None, None),
+        "w_in": P(None, "data", "model"),
+        "w_gate": P(None, "data", "model"),
+        "w_out": P(None, "model", "data"),
+    }
+
+
+def moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+        capacity_factor: float | None = None) -> jnp.ndarray:
+    """Top-k routing with fixed expert capacity (GShard-style, token-
+    dropping) implemented with static-shape gather/scatter so compiled
+    FLOPs are proportional to *active* experts -- the production approach,
+    and what keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest."""
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    if capacity_factor is None:
+        capacity_factor = cfg.moe.capacity_factor
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    logits = xf.astype(jnp.float32) @ p["router"]              # [N, E]
+    gate_vals, gate_idx = jax.lax.top_k(logits, k)             # [N, K]
+    gates = jax.nn.softmax(gate_vals, axis=-1)                 # [N, K]
+    cap = max(min(int(math.ceil(n * k / e * capacity_factor)), n * k), 8)
+    flat_e = gate_idx.reshape(-1)                              # [N*K]
+    # Sort-based slot ranking (Megablocks-style).  The obvious
+    # cumsum(one_hot) over [N*K, E] lowers to reduce-window prefix sums
+    # whose cost scales with window size -- measured 10x the expert GEMM
+    # FLOPs at granite's 40-expert/1M-token scale (§Perf).  A stable
+    # argsort by expert id gives identical first-come slot priority at
+    # O(N log N).
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)                   # [N*K]
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    ranks_sorted = jnp.arange(nk, dtype=jnp.int32) - offsets[sorted_e]
+    slot = jnp.zeros((nk,), jnp.int32).at[order].set(ranks_sorted)
+    keep = slot < cap
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.repeat(xf, k, axis=0)                            # [N*K, D]
+    buf = buf.at[flat_e, jnp.where(keep, slot, cap - 1)].add(
+        jnp.where(keep[:, None], src, 0))
+    if getattr(cfg, "moe_dp_sharding", False):
+        # EP-style dispatch: shard each expert's token queue over the data
+        # axis so expert GEMMs are DP+TP-sharded (the scatter above becomes
+        # the all-to-all).  Without this, GSPMD replicates expert compute
+        # across "data" (observed 16x inflated compute term; §Perf).
+        from jax.sharding import PartitionSpec as _P
+        from repro.dist.sharding import constrain
+        buf = constrain(buf, _P(None, "data", "model"))
+    hin = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(x.dtype))
+    hg = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(hg) * hin
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(x.dtype))
+    tok_out = out[flat_e, jnp.where(keep, slot, 0)]            # [N*K, D]
+    tok_out = jnp.where(keep[:, None], tok_out, 0)
+    tok_out = tok_out.reshape(n, k, d) * gates[..., None].astype(x.dtype)
+    return tok_out.sum(axis=1).reshape(b, s, d)
+
+
+# --------------------------- embeddings -------------------------------- #
+
+def embed_init(cfg: ModelConfig, key) -> Params:
+    vp = padded_vocab(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (vp, cfg.d_model),
+                                  pdtype(cfg)) * 0.02}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(
+            k2, (cfg.d_model, vp), pdtype(cfg)) \
+            * (1.0 / math.sqrt(cfg.d_model))
+    return p
+
+
+def embed_specs(cfg: ModelConfig) -> Params:
+    p = {"tok": P("model", "data")}
+    if not cfg.tie_embeddings:
+        p["head"] = P("data", "model")
+    return p
+
+
+def embed(cfg: ModelConfig, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    emb = p["tok"].astype(cdtype(cfg))
+    x = emb[tokens]
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)   # gemma-style scaling
+    return x
+
+
+def lm_head(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"].astype(x.dtype))
+    logits = _softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    # mask the vocab-padding logits (Megatron-style padded vocab)
+    vp = logits.shape[-1]
+    if vp != cfg.vocab:
+        pad = jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, vp), 2) >= cfg.vocab
+        logits = jnp.where(pad, NEG_INF, logits)
+    return logits

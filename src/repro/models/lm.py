@@ -1,0 +1,502 @@
+"""Model composition: decoder LMs (dense / MoE / SSM / hybrid) and the
+whisper-style encoder-decoder, with period-stacked parameters scanned by
+``lax.scan`` (compact HLO for the 512-device dry-run).
+
+Public surface (all pure functions of (cfg, params, ...)):
+  init_params / param_specs          -- params + matching PartitionSpec tree
+  forward_loss                       -- training loss (tokens or embeds)
+  prefill                            -- forward + KV/state cache construction
+  init_cache / decode_step           -- one-token decode
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import ssm as S
+
+Params = dict[str, Any]
+
+
+def _is_moe_layer(cfg: ModelConfig, idx: int) -> bool:
+    if cfg.moe is None:
+        return False
+    return cfg.moe.moe_layers is None or idx in cfg.moe.moe_layers
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int | None:
+    return cfg.window if kind == "local" else None
+
+
+# ------------------------------------------------------------------ #
+# Per-block init / specs
+# ------------------------------------------------------------------ #
+
+def _block_init(cfg: ModelConfig, kind: str, idx: int, key,
+                with_cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.rmsnorm_init(cfg, ks[0])}
+    if kind in ("attn", "local", "global"):
+        p["attn"] = L.attn_init(cfg, ks[0])
+    elif kind == "mamba":
+        p["mamba"] = S.mamba_init(cfg, ks[0])
+    elif kind == "rwkv":
+        p["rwkv"] = S.rwkv_init(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        p["norm_x"] = L.rmsnorm_init(cfg, ks[1])
+        p["cross"] = L.attn_init(cfg, ks[1])
+    p["norm2"] = L.rmsnorm_init(cfg, ks[2])
+    if kind == "rwkv":
+        p["ffn"] = S.rwkv_ffn_init(cfg, ks[3])
+    elif _is_moe_layer(cfg, idx):
+        p["moe"] = L.moe_init(cfg, ks[3])
+    else:
+        p["mlp"] = L.mlp_init(cfg, ks[3])
+    return p
+
+
+def _block_specs(cfg: ModelConfig, kind: str, idx: int,
+                 with_cross: bool = False) -> Params:
+    p: Params = {"norm1": L.rmsnorm_specs(cfg)}
+    if kind in ("attn", "local", "global"):
+        p["attn"] = L.attn_specs(cfg)
+    elif kind == "mamba":
+        p["mamba"] = S.mamba_specs(cfg)
+    elif kind == "rwkv":
+        p["rwkv"] = S.rwkv_specs(cfg)
+    if with_cross:
+        p["norm_x"] = L.rmsnorm_specs(cfg)
+        p["cross"] = L.attn_specs(cfg)
+    p["norm2"] = L.rmsnorm_specs(cfg)
+    if kind == "rwkv":
+        p["ffn"] = S.rwkv_ffn_specs(cfg)
+    elif _is_moe_layer(cfg, idx):
+        p["moe"] = L.moe_specs(cfg)
+    else:
+        p["mlp"] = L.mlp_specs(cfg)
+    return p
+
+
+def _period_init(cfg: ModelConfig, key, with_cross: bool = False) -> Params:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"block{i}": _block_init(cfg, kind, i, ks[i], with_cross)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def _stack_periods(cfg: ModelConfig, key, num_periods: int,
+                   with_cross: bool = False) -> Params:
+    keys = jax.random.split(key, num_periods)
+    return jax.vmap(
+        lambda k: _period_init(cfg, k, with_cross))(keys)
+
+
+# ------------------------------------------------------------------ #
+# Whole-model init / specs
+# ------------------------------------------------------------------ #
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k_emb, k_per, k_enc = jax.random.split(key, 3)
+    params: Params = {
+        "embed": L.embed_init(cfg, k_emb),
+        "final_norm": L.rmsnorm_init(cfg, k_emb),
+        "periods": _stack_periods(cfg, k_per, cfg.num_periods,
+                                  with_cross=cfg.enc_dec),
+    }
+    if cfg.enc_dec:
+        params["enc_periods"] = _stack_periods(cfg, k_enc, cfg.enc_layers)
+        params["enc_final_norm"] = L.rmsnorm_init(cfg, k_enc)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    def add_period_dim(tree):
+        return jax.tree.map(
+            lambda spec: P(*((None,) + tuple(spec))), tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    period = {f"block{i}": _block_specs(cfg, kind, i, with_cross=cfg.enc_dec)
+              for i, kind in enumerate(cfg.block_pattern)}
+    specs: Params = {
+        "embed": L.embed_specs(cfg),
+        "final_norm": L.rmsnorm_specs(cfg),
+        "periods": add_period_dim(period),
+    }
+    if cfg.enc_dec:
+        enc = {"block0": _block_specs(cfg, "attn", 0)}
+        specs["enc_periods"] = add_period_dim(enc)
+        specs["enc_final_norm"] = L.rmsnorm_specs(cfg)
+    return specs
+
+
+# ------------------------------------------------------------------ #
+# Block application (full-sequence mode)
+# ------------------------------------------------------------------ #
+
+def _apply_block(cfg: ModelConfig, kind: str, idx: int, p: Params,
+                 x: jnp.ndarray, positions: jnp.ndarray,
+                 enc_out: jnp.ndarray | None = None,
+                 causal: bool = True) -> jnp.ndarray:
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local", "global"):
+        if causal:
+            y = L.attention(cfg, p["attn"], h, positions,
+                            window=_window_for(cfg, kind))
+        else:  # bidirectional (encoder): no mask, no window
+            y = L.attention(cfg, p["attn"], h, positions, cross=True,
+                            k=None, v=None)
+    elif kind == "mamba":
+        y, _, _ = S.mamba_block(cfg, p["mamba"], h)
+    elif kind == "rwkv":
+        y, _, _ = S.rwkv_time_mix(cfg, p["rwkv"], h)
+    x = x + y
+    if enc_out is not None and "cross" in p:
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + L.attention(cfg, p["cross"], hx, positions,
+                            k=enc_out["k"], v=enc_out["v"], cross=True)
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        y2, _ = S.rwkv_channel_mix(cfg, p["ffn"], h2)
+    elif "moe" in p:
+        y2 = L.moe(cfg, p["moe"], h2)
+    else:
+        y2 = L.mlp(cfg, p["mlp"], h2)
+    return x + y2
+
+
+def period_fn(cfg: ModelConfig, pparams: Params, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              enc_out: Params | None = None) -> jnp.ndarray:
+    """One period of blocks (the scanned body; also compiled standalone by
+    the dry-run for trip-count-corrected roofline accounting)."""
+    for i, kind in enumerate(cfg.block_pattern):
+        x = _apply_block(cfg, kind, i, pparams[f"block{i}"], x, positions,
+                         enc_out=enc_out)
+    return x
+
+
+def _scan_periods(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                  positions: jnp.ndarray,
+                  enc_out: Params | None = None) -> jnp.ndarray:
+    def body(carry, pparams):
+        y = period_fn(cfg, pparams, carry, positions, enc_out=enc_out)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    return x
+
+
+def _sinusoid(s: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _encode(cfg: ModelConfig, params: Params, embeds: jnp.ndarray
+            ) -> jnp.ndarray:
+    """Whisper-style encoder over precomputed frame embeddings
+    (bidirectional attention; sinusoidal absolute positions)."""
+    embeds = embeds + _sinusoid(embeds.shape[1], embeds.shape[2],
+                                embeds.dtype)[None]
+    positions = jnp.arange(embeds.shape[1])
+
+    def body(carry, pparams):
+        y = _apply_block(cfg, "attn", 0, pparams["block0"], carry,
+                         positions, causal=False)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, embeds, params["enc_periods"])
+    return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(cfg: ModelConfig, params: Params, enc_x: jnp.ndarray) -> Params:
+    """Per-decoder-block cross K/V caches, stacked over periods."""
+    def one_period(pparams):
+        p = pparams["block0"]["cross"]
+        k = enc_x @ p["wk"].astype(enc_x.dtype)      # [B, S, KV*dh] flat
+        v = enc_x @ p["wv"].astype(enc_x.dtype)
+        return {"k": k, "v": v}
+
+    return jax.lax.map(one_period, params["periods"])
+
+
+# ------------------------------------------------------------------ #
+# Training forward
+# ------------------------------------------------------------------ #
+
+def forward_logits(cfg: ModelConfig, params: Params, batch: Params
+                   ) -> jnp.ndarray:
+    """batch: {"tokens": [B,S] int32} or {"embeds": [B,S,D]} (+
+    {"enc_embeds": [B,Se,D]} for enc-dec)."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(L.cdtype(cfg))
+    else:
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.enc_dec:
+        enc_x = _encode(cfg, params, batch["enc_embeds"].astype(x.dtype))
+        enc_out = None  # cross K/V are computed per block inside scan
+        # Project cross K/V once per block (stacked) and feed via scan xs.
+        cross = _cross_kv(cfg, params, enc_x)
+
+        def body(carry, xs):
+            pparams, kv = xs
+            y = period_fn(cfg, pparams, carry, positions, enc_out=kv)
+            return y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["periods"], cross))
+    else:
+        x = _scan_periods(cfg, params, x, positions)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.lm_head(cfg, params["embed"], x)
+
+
+def forward_loss(cfg: ModelConfig, params: Params, batch: Params
+                 ) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  labels: [B, S] int32 (-100 = pad)."""
+    logits = forward_logits(cfg, params, batch)     # [B, S, V] f32
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------------------------ #
+# Serving: cache init, prefill, decode
+# ------------------------------------------------------------------ #
+
+def _block_cache(cfg: ModelConfig, kind: str, b: int, s_max: int) -> Params:
+    dt = L.cdtype(cfg)
+    kvd = cfg.n_kv_heads * cfg.d_head
+    if kind in ("attn", "global"):
+        shp = (b, s_max, kvd)          # flat [B, S, KV*dh] layout
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "local":
+        s = min(s_max, cfg.window or s_max)
+        shp = (b, s, kvd)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt),
+                "kpos": jnp.full((s,), -(1 << 30), jnp.int32)}
+    if kind == "mamba":
+        return {
+            "ssm": jnp.zeros((b, cfg.d_inner_ssm, cfg.ssm_d_state),
+                             jnp.float32),
+            "conv": jnp.zeros((b, cfg.ssm_d_conv - 1, cfg.d_inner_ssm), dt),
+        }
+    if kind == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "state": jnp.zeros((b, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                               jnp.float32),
+            "x_tm": jnp.zeros((b, cfg.d_model), dt),
+            "x_cm": jnp.zeros((b, cfg.d_model), dt),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, b: int, s_max: int) -> Params:
+    one = {f"block{i}": _block_cache(cfg, kind, b, s_max)
+           for i, kind in enumerate(cfg.block_pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_periods,) + x.shape),
+        one)
+
+
+def cache_specs(cfg: ModelConfig) -> Params:
+    """PartitionSpec tree matching init_cache: batch on "data", heads /
+    channels on "model" (GSPMD pads non-divisible head counts)."""
+    def spec_for(kind):
+        if kind == "local":
+            return {"k": P(None, "data", None, "model"),
+                    "v": P(None, "data", None, "model"),
+                    "kpos": P(None, None)}
+        if kind in ("attn", "global"):
+            if getattr(cfg, "sp_decode", False):
+                # sequence-parallel decode: cache S over every axis
+                return {"k": P(None, None, ("data", "model"), None),
+                        "v": P(None, None, ("data", "model"), None)}
+            return {"k": P(None, "data", None, "model"),
+                    "v": P(None, "data", None, "model")}
+        if kind == "mamba":
+            return {"ssm": P(None, "data", "model", None),
+                    "conv": P(None, "data", None, "model")}
+        if kind == "rwkv":
+            return {"state": P(None, "data", "model", None, None),
+                    "x_tm": P(None, "data", None),
+                    "x_cm": P(None, "data", None)}
+    return {f"block{i}": spec_for(kind)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x: jnp.ndarray,
+                        cache: Params, pos: jnp.ndarray,
+                        cross_kv: Params | None = None
+                        ) -> tuple[jnp.ndarray, Params]:
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind in ("attn", "local", "global"):
+        y, nk, nv, nkp = L.attention_decode(
+            cfg, p["attn"], h, cache["k"], cache["v"], pos,
+            window=_window_for(cfg, kind), kpos=cache.get("kpos"))
+        new_cache = {"k": nk, "v": nv}
+        if nkp is not None:
+            new_cache["kpos"] = nkp
+    elif kind == "mamba":
+        y, ssm, conv = S.mamba_block(cfg, p["mamba"], h,
+                                     ssm_state=cache["ssm"],
+                                     conv_state=cache["conv"])
+        new_cache = {"ssm": ssm, "conv": conv}
+    elif kind == "rwkv":
+        y, st, xl = S.rwkv_time_mix(cfg, p["rwkv"], h, state=cache["state"],
+                                    x_last=cache["x_tm"])
+        new_cache = dict(cache)
+        new_cache.update({"state": st, "x_tm": xl})
+    x = x + y
+    if cross_kv is not None and "cross" in p:
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + L.attention(cfg, p["cross"], hx,
+                            jnp.full((1,), pos, jnp.int32),
+                            k=cross_kv["k"], v=cross_kv["v"], cross=True)
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        y2, xl2 = S.rwkv_channel_mix(cfg, p["ffn"], h2,
+                                     x_last=cache["x_cm"])
+        new_cache["x_cm"] = xl2
+    elif "moe" in p:
+        y2 = L.moe(cfg, p["moe"], h2)
+    else:
+        y2 = L.mlp(cfg, p["mlp"], h2)
+    return x + y2, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray,
+                cross: Params | None = None
+                ) -> tuple[jnp.ndarray, Params]:
+    """tokens: [B, 1] int32 (or {"embeds"}).  Returns (logits [B,1,V],
+    new cache)."""
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(carry, xs):
+        if cross is not None:
+            pparams, pcache, ckv = xs
+        else:
+            (pparams, pcache), ckv = xs, None
+        y = carry
+        new_pcache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            y, nc = _apply_block_decode(cfg, kind, pparams[f"block{i}"], y,
+                                        pcache[f"block{i}"], pos,
+                                        cross_kv=ckv)
+            new_pcache[f"block{i}"] = nc
+        return y, new_pcache
+
+    xs = (params["periods"], cache) if cross is None \
+        else (params["periods"], cache, cross)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(cfg, params["embed"], x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Params,
+            max_len: int | None = None) -> tuple[jnp.ndarray, Params]:
+    """Run the full prompt, building the decode cache (sized for
+    ``max_len`` total positions; defaults to the prompt length).  Returns
+    (last-position logits [B, 1, V], cache).
+
+    Attention K/V caches are the prompt projections (rolled into the
+    bounded buffer for sliding-window blocks); SSM/RWKV states are the
+    recurrences' final states."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(L.cdtype(cfg))
+        b, s = x.shape[0], x.shape[1]
+    else:
+        x = L.embed(cfg, params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+    positions = jnp.arange(s)
+    cross = None
+    if cfg.enc_dec:
+        enc_x = _encode(cfg, params, batch["enc_embeds"].astype(x.dtype))
+        cross = _cross_kv(cfg, params, enc_x)
+
+    def body(carry, xs):
+        pparams = xs[0] if cross is not None else xs
+        ckv = xs[1] if cross is not None else None
+        y = carry
+        pcache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = pparams[f"block{i}"]
+            h = L.rmsnorm(p["norm1"], y, cfg.norm_eps)
+            if kind in ("attn", "local", "global"):
+                win = _window_for(cfg, kind)
+                kc, vc = L.project_kv(cfg, p["attn"], h, positions)
+                out = L.attention(cfg, p["attn"], h, positions, window=win)
+                total = max_len or s
+                if win is not None:
+                    # roll the last min(s, cache_len) positions into the
+                    # bounded buffer at slot (pos % cache_len)
+                    clen = min(win, total)
+                    kept = jnp.arange(max(0, s - clen), s)
+                    slots = kept % clen
+                    kz = jnp.zeros(kc.shape[:1] + (clen,) + kc.shape[2:],
+                                   kc.dtype)
+                    kc = kz.at[:, slots].set(kc[:, kept])
+                    vc = kz.at[:, slots].set(vc[:, kept])
+                    kpos = jnp.full((clen,), -(1 << 30), jnp.int32
+                                    ).at[slots].set(kept)
+                    pcache[f"block{i}"] = {"k": kc, "v": vc, "kpos": kpos}
+                else:
+                    if total > s:
+                        pad = [(0, 0), (0, total - s), (0, 0)]
+                        kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+                    pcache[f"block{i}"] = {"k": kc, "v": vc}
+                y2 = out
+            elif kind == "mamba":
+                y2, ssm, conv = S.mamba_block(cfg, p["mamba"], h)
+                pcache[f"block{i}"] = {"ssm": ssm, "conv": conv}
+            elif kind == "rwkv":
+                y2, st, xl = S.rwkv_time_mix(cfg, p["rwkv"], h)
+                pcache[f"block{i}"] = {"state": st, "x_tm": xl}
+            y = y + y2
+            if ckv is not None and "cross" in p:
+                hx = L.rmsnorm(p["norm_x"], y, cfg.norm_eps)
+                y = y + L.attention(cfg, p["cross"], hx, positions,
+                                    k=ckv["k"], v=ckv["v"], cross=True)
+            h2 = L.rmsnorm(p["norm2"], y, cfg.norm_eps)
+            if kind == "rwkv":
+                y3, xl2 = S.rwkv_channel_mix(cfg, p["ffn"], h2)
+                pcache[f"block{i}"]["x_cm"] = xl2
+            elif "moe" in p:
+                y3 = L.moe(cfg, p["moe"], h2)
+            else:
+                y3 = L.mlp(cfg, p["mlp"], h2)
+            y = y + y3
+        return y, pcache
+
+    xs = params["periods"] if cross is None else (params["periods"], cross)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, cache = jax.lax.scan(body, x, xs)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.lm_head(cfg, params["embed"], x)
+    return logits, cache

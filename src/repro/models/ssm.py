@@ -1,0 +1,330 @@
+"""State-space / linear-attention blocks: RWKV-6 ("Finch") and Mamba.
+
+Both are implemented as exact recurrences via ``lax.scan`` over time --
+compile-compact (single While loop in HLO) and numerically the reference
+formulation.  Training/prefill FLOPs are dominated by the projections, so
+the scan form is also roofline-faithful; a chunked-parallel variant is a
+perf-iteration candidate (EXPERIMENTS.md §Perf).
+
+RWKV-6 time-mix (per head, d = head dim):
+    state_t = diag(w_t) state_{t-1} + k_t^T v_t          [d, d]
+    y_t     = r_t (diag(u) k_t^T v_t + state_{t-1})
+with data-dependent decay w_t = exp(-exp(lora_w(x_t))) -- the defining
+Finch feature.  Sharding: heads on "model".
+
+Mamba (S6): h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y = C_t h + D x.
+Sharding: d_inner on "model" -> the scan carries [B, d_inner/16, N] per
+device with zero per-step communication.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+from .layers import pdtype
+
+Params = dict[str, Any]
+
+
+# ------------------------------- RWKV-6 -------------------------------- #
+
+def rwkv_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    lora = 64
+    return {
+        # token-shift interpolation coefficients (r,k,v,w,g)
+        "mu": jnp.full((5, d), 0.5, pdtype(cfg)),
+        "w_r": jax.random.normal(ks[0], (d, d), pdtype(cfg)) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), pdtype(cfg)) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), pdtype(cfg)) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), pdtype(cfg)) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), pdtype(cfg)) * s,
+        # data-dependent decay LoRA (the Finch mechanism)
+        "w_dec_a": jax.random.normal(ks[5], (d, lora), pdtype(cfg)) * s,
+        "w_dec_b": jax.random.normal(ks[6], (lora, d), pdtype(cfg)) *
+        (1.0 / math.sqrt(lora)),
+        "dec_bias": jnp.zeros((d,), pdtype(cfg)) - 4.0,
+        "u": jax.random.normal(ks[7], (h, hd), pdtype(cfg)) * 0.1,
+        "ln_x": jnp.ones((d,), pdtype(cfg)),
+    }
+
+
+def rwkv_specs(cfg: ModelConfig) -> Params:
+    return {
+        "mu": P(None, None),
+        "w_r": P("data", "model"),
+        "w_k": P("data", "model"),
+        "w_v": P("data", "model"),
+        "w_g": P("data", "model"),
+        "w_o": P("model", "data"),
+        "w_dec_a": P("data", None),
+        "w_dec_b": P(None, "model"),
+        "dec_bias": P("model"),
+        "u": P(None, None),   # 40 heads never divide the 16-way axis
+        "ln_x": P(None),
+    }
+
+
+def _rwkv_rkvwg(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                x_prev: jnp.ndarray):
+    """Project token-shifted inputs to r,k,v,w,g.  x: [B, S, D];
+    x_prev: [B, S, D] (x shifted right by one)."""
+    mu = p["mu"].astype(x.dtype)
+    def mix(i):
+        return x * mu[i] + x_prev * (1.0 - mu[i])
+    r = mix(0) @ p["w_r"].astype(x.dtype)
+    k = mix(1) @ p["w_k"].astype(x.dtype)
+    v = mix(2) @ p["w_v"].astype(x.dtype)
+    dec = jnp.tanh(mix(3) @ p["w_dec_a"].astype(x.dtype)) \
+        @ p["w_dec_b"].astype(x.dtype) + p["dec_bias"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32)))            # (0, 1)
+    g = jax.nn.silu(mix(4) @ p["w_g"].astype(x.dtype))
+    return r, k, v, w, g
+
+
+def _heads(x: jnp.ndarray, hd: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    return x.reshape(b, s, d // hd, hd)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  state: jnp.ndarray | None = None,
+                  x_last: jnp.ndarray | None = None):
+    """x: [B, S, D].  state: [B, H, hd, hd] recurrent state (decode),
+    x_last: [B, D] previous token (for token shift across calls).
+    Returns (y, new_state, new_x_last)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    if x_last is None:
+        x_last = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    r, k, v, w, g = _rwkv_rkvwg(cfg, p, x, x_prev)
+    rh, kh, vh = _heads(r, hd), _heads(k, hd), _heads(v, hd)
+    wh = _heads(w.astype(jnp.float32), hd)
+    u = p["u"].astype(jnp.float32)
+    chunk = getattr(cfg, "rwkv_chunk", None)
+    if chunk and s % chunk == 0 and state is None and s > chunk:
+        # chunk-parallel GLA form (§Perf): matmul-dominant, same math
+        yh, state = _rwkv_chunked(rh, kh, vh, wh, u, chunk)
+        y = yh.reshape(b, s, d).astype(x.dtype)
+    else:
+        if state is None:
+            state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+        def step(st, inp):
+            rt, kt, vt, wt = inp                       # [B, H, hd] each
+            kv = kt[..., :, None] * vt[..., None, :]   # [B, H, hd, hd]
+            y = jnp.einsum("bhk,bhkv->bhv", rt,
+                           u[None, :, :, None] * kv + st)
+            st = wt[..., :, None] * st + kv
+            return st, y
+
+        xs = (rh.transpose(1, 0, 2, 3).astype(jnp.float32),
+              kh.transpose(1, 0, 2, 3).astype(jnp.float32),
+              vh.transpose(1, 0, 2, 3).astype(jnp.float32),
+              wh.transpose(1, 0, 2, 3))
+        state, ys = jax.lax.scan(step, state, xs)      # ys: [S, B, H, hd]
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    # group-norm per head (ln_x), then output gate + projection
+    y32 = y.astype(jnp.float32).reshape(b, s, h, hd)
+    y32 = y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + 1e-5)
+    y = (y32.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)
+         ).astype(x.dtype)
+    y = (y * g) @ p["w_o"].astype(x.dtype)
+    return y, state, x[:, -1]
+
+
+def rwkv_ffn_init(cfg: ModelConfig, key) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jnp.full((2, d), 0.5, pdtype(cfg)),
+        "w_k": jax.random.normal(k1, (d, f), pdtype(cfg)) / math.sqrt(d),
+        "w_v": jax.random.normal(k2, (f, d), pdtype(cfg)) / math.sqrt(f),
+        "w_r": jax.random.normal(k3, (d, d), pdtype(cfg)) / math.sqrt(d),
+    }
+
+
+def rwkv_ffn_specs(cfg: ModelConfig) -> Params:
+    return {"mu": P(None, None), "w_k": P("data", "model"),
+            "w_v": P("model", "data"), "w_r": P("data", "model")}
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     x_last: jnp.ndarray | None = None):
+    b, s, d = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xk = x * mu[0] + x_prev * (1.0 - mu[0])
+    xr = x * mu[1] + x_prev * (1.0 - mu[1])
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    kv = k @ p["w_v"].astype(x.dtype)
+    r = jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype))
+    return r * kv, x[:, -1]
+
+
+# -------------------------------- Mamba -------------------------------- #
+
+def mamba_init(cfg: ModelConfig, key) -> Params:
+    d, din, n = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_d_state
+    dtr = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * din), pdtype(cfg)) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_d_conv, din),
+                                    pdtype(cfg)) * 0.3,
+        "conv_b": jnp.zeros((din,), pdtype(cfg)),
+        "x_proj": jax.random.normal(ks[2], (din, dtr + 2 * n),
+                                    pdtype(cfg)) / math.sqrt(din),
+        "dt_proj": jax.random.normal(ks[3], (dtr, din),
+                                     pdtype(cfg)) / math.sqrt(dtr),
+        "dt_bias": jnp.full((din,), -4.6, pdtype(cfg)),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (din, 1))),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (din, d),
+                                      pdtype(cfg)) / math.sqrt(din),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "x_proj": P("model", None),
+        "dt_proj": P(None, "model"),
+        "dt_bias": P("model"),
+        "A_log": P("model", None),
+        "D": P("model"),
+        "out_proj": P("model", "data"),
+    }
+
+
+def mamba_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                ssm_state: jnp.ndarray | None = None,
+                conv_state: jnp.ndarray | None = None):
+    """x: [B, S, D].  For decode, pass states and S == 1.
+    Returns (y, ssm_state, conv_state)."""
+    b, s, d = x.shape
+    din, n, dconv = cfg.d_inner_ssm, cfg.ssm_d_state, cfg.ssm_d_conv
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)             # [B, S, din]
+    # depthwise causal conv over time
+    if conv_state is None:
+        conv_state = jnp.zeros((b, dconv - 1, din), x.dtype)
+    xpad = jnp.concatenate([conv_state, xi], axis=1)
+    new_conv_state = xpad[:, -(dconv - 1):]
+    cw = p["conv_w"].astype(x.dtype)
+    xc = sum(xpad[:, i:i + s] * cw[i] for i in range(dconv))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    # input-dependent SSM params
+    proj = xc @ p["x_proj"].astype(x.dtype)
+    dtr = proj.shape[-1] - 2 * n
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])                      # [din, N]
+    da = jnp.exp(dt[..., None] * a)               # [B, S, din, N]
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]  # [B, S, din, N]
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, din, n), jnp.float32)
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t                      # [B, din, N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3),
+          cmat.transpose(1, 0, 2).astype(jnp.float32))
+    ssm_state, ys = jax.lax.scan(step, ssm_state, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)     # [B, S, din]
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype), ssm_state, new_conv_state
+
+
+# ------------------- chunked-parallel RWKV-6 (GLA form) ------------------- #
+
+def _rwkv_chunked(rh, kh, vh, wh, u, chunk: int):
+    """Chunk-parallel evaluation of the RWKV-6 recurrence (GLA-style).
+
+    rh/kh/vh: [B, S, H, hd];  wh: [B, S, H, hd] decays in (0,1), f32;
+    u: [H, hd].  Returns (y [B, S, H, hd] f32, final state [B, H, hd, hd]).
+
+    Derivation (per head; state S[k_dim, v_dim], decay on k_dim):
+        y_i = r_i (S_before_i + u (.) k_i^T v_i)
+        S_before_i = P_i (.) S_chunk_start + sum_{j<i} (P_i / P_{j+1}) k_j^T v_j
+    with P_i = prod_{t<i} w_t inside the chunk.  Splitting:
+      * intra-chunk: A = tril((r (.) P) @ (k (.) 1/P_{+1})^T, -1) -> A @ V
+        -- a *matmul*, which is the whole point (MXU-friendly, high
+        arithmetic intensity vs. the elementwise scan);
+      * diag: (sum_d r*u*k) v;
+      * inter-chunk: only the per-chunk state pass is sequential, and its
+        body is a cheap elementwise update -- the r~ @ S_before matmuls
+        run in parallel over chunks afterwards (so the roofline
+        accounting sees them outside the while loop).
+
+    Numerics: products of decays accumulate in log space; per-step decay
+    is clamped to exp(-8) so exp(-cum) stays in f32 range over a chunk
+    (only relevant at pathological decay values; at trained/init scales
+    w ~= 0.98 and the clamp is inactive -- tests assert exact agreement
+    with the scan reference).
+    """
+    b, s, h, hd = rh.shape
+    nc = s // chunk
+    shp = (b, nc, chunk, h, hd)
+    r = rh.reshape(shp).astype(jnp.float32)
+    k = kh.reshape(shp).astype(jnp.float32)
+    v = vh.reshape(shp).astype(jnp.float32)
+    w = jnp.clip(wh.reshape(shp).astype(jnp.float32), math.exp(-8.0), 1.0)
+    logw = jnp.log(w)
+    cum_inc = jnp.cumsum(logw, axis=2)                 # log P_{j+1}
+    cum_exc = cum_inc - logw                           # log P_i
+    cum_all = cum_inc[:, :, -1:]                       # log of full-chunk decay
+    r_dec = r * jnp.exp(cum_exc)                       # r (.) P
+    k_inv = k * jnp.exp(-cum_inc)                      # k (.) 1/P_{+1}
+    k_end = k * jnp.exp(cum_all - cum_inc)             # k (.) P_end/P_{+1}
+
+    # intra-chunk attention (strictly causal within the chunk)
+    att = jnp.einsum("bnlhd,bnmhd->bnhlm", r_dec, k_inv)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bnhlm,bnmhd->bnlhd", att, v)
+    # diagonal (current-token bonus) term
+    c = jnp.einsum("bnlhd,hd,bnlhd->bnlh", r, u.astype(jnp.float32), k)
+    y_diag = c[..., None] * v
+    # chunk summaries for the sequential state pass
+    contrib = jnp.einsum("bnlhd,bnlhv->bnhdv", k_end, v)
+    decay = jnp.exp(cum_all[:, :, 0])                  # [B, NC, H, hd]
+
+    def step(st, inp):
+        dec, con = inp                                 # [B,H,hd], [B,H,hd,hd]
+        out = st
+        st = dec[..., None] * st + con
+        return st, out
+
+    xs = (decay.transpose(1, 0, 2, 3), contrib.transpose(1, 0, 2, 3, 4))
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    state, befores = jax.lax.scan(step, state0, xs)    # befores: [NC,B,...]
+    befores = befores.transpose(1, 0, 2, 3, 4)         # [B, NC, H, hd, hd]
+    y_inter = jnp.einsum("bnlhd,bnhdv->bnlhv", r_dec, befores)
+    y = (y_intra + y_diag + y_inter).reshape(b, s, h, hd)
+    return y, state

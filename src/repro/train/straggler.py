@@ -1,0 +1,49 @@
+"""Straggler mitigation: step-time watchdog.
+
+On a real fleet the single-controller runtime sees per-step wall times
+that include the slowest participant (synchronous SPMD).  The watchdog
+keeps a rolling median and flags steps exceeding ``threshold x median``;
+the deployment hook (``on_straggler``) is where a production launcher
+would trigger remediation -- preempt-and-reslice (elastic restart from the
+latest checkpoint minus the slow host) or hot-spare swap.  Here the hook
+records events (and the test injects a synthetic delay to exercise it).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class StragglerWatchdog:
+    threshold: float = 2.5
+    window: int = 32
+    min_samples: int = 8
+    on_straggler: Callable[[int, float, float], None] | None = None
+    _times: list[float] = field(default_factory=list)
+    events: list[dict] = field(default_factory=list)
+    _t0: float | None = None
+
+    def step_begin(self) -> None:
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int) -> bool:
+        """Returns True if this step was flagged as a straggler."""
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        flagged = False
+        if len(self._times) >= self.min_samples:
+            med = statistics.median(self._times)
+            if dt > self.threshold * med:
+                flagged = True
+                ev = {"step": step, "seconds": dt, "median": med}
+                self.events.append(ev)
+                if self.on_straggler is not None:
+                    self.on_straggler(step, dt, med)
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        return flagged

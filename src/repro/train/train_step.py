@@ -1,0 +1,112 @@
+"""The jitted training step: grad-accumulation microbatching, remat'd
+model forward/backward, AdamW update -- with explicit in/out shardings.
+
+Batch layout: the launcher reshapes the global batch to
+``[microbatches, mb, S]``; the step scans over microbatches accumulating
+fp32 gradients (the scan keeps HLO compact; the dry-run corrects roofline
+FLOPs for the trip count).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as M
+
+from . import optimizer as O
+
+Params = Any
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Batch-sharding axes present in this mesh ("pod" merges into DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch_shapes: dict) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for name, (shape, _) in batch_shapes.items():
+        if name in ("tokens", "labels"):
+            # [M, mb, S] or [B, S] -> batch dim is the first non-microbatch
+            spec = P(None, dp, None) if len(shape) == 3 else P(dp, None)
+        else:  # embeds: [..., S, D]
+            spec = P(None, dp, None, None) if len(shape) == 4 \
+                else P(dp, None, None)
+        out[name] = spec
+    return out
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig):
+    """Returns ``train_step(params, opt_state, batch, step)``; microbatch
+    dim must be the leading axis of every batch leaf."""
+
+    def loss_fn(params, mb_batch):
+        return M.forward_loss(cfg, params, mb_batch)
+
+    def train_step(params, opt_state, batch):
+        num_micro = jax.tree.leaves(batch)[0].shape[0]
+
+        def micro(acc, mb_batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb_batch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / num_micro,
+                acc, grads)
+            return acc, loss
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(micro, zero, batch)
+        params, opt_state, stats = O.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        stats["loss"] = losses.mean()
+        return params, opt_state, stats
+
+    return train_step
+
+
+def shard_batch(batch: dict, mesh, cfg: ModelConfig) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch.items():
+        nd = v.ndim
+        if k in ("tokens", "labels"):
+            spec = P(None, dp, None) if nd == 3 else P(dp, None)
+        else:
+            spec = P(None, dp, None, None) if nd == 4 else P(dp, None, None)
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+def jit_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig, mesh,
+                   batch_shapes: dict):
+    """AOT-friendly jitted step with explicit shardings (used by both the
+    real trainer and the dry-run)."""
+    pspecs = M.param_specs(cfg)
+    ospecs = O.opt_state_specs(pspecs)
+    bspecs = batch_specs(cfg, mesh, batch_shapes)
+    step = make_train_step(cfg, opt_cfg)
+    return jax.jit(
+        step,
+        in_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            {k: NamedSharding(mesh, s) for k, s in bspecs.items()},
+        ),
+        out_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            None,
+        ),
+        donate_argnums=(0, 1),
+    )

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see the real host device count (1), NOT the dry-run's 512 —
+# never set xla_force_host_platform_device_count here (per spec).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,81 @@
+"""Application-level tests: predicate evaluation Q1-Q5 and GBDT inference
+against exact NumPy references, on both PuD architectures and both
+methods (Clutch + bit-serial baseline)."""
+
+import numpy as np
+import pytest
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core.machine import PuDArch
+
+ARCHS = [PuDArch.MODIFIED, PuDArch.UNMODIFIED]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("method", ["clutch", "bitserial"])
+@pytest.mark.parametrize("n_bits", [8, 16, 32])
+def test_queries_match_reference(arch, method, n_bits):
+    t = P.Table.generate(2000, n_bits, seed=5)
+    mx = (1 << n_bits) - 1
+    e = P.PudQueryEngine(t, arch, method)
+    qa = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4, y1=3 * mx // 4)
+    assert (e.q1(0, mx // 8, mx // 2) ==
+            P.reference_q1(t, 0, mx // 8, mx // 2)).all()
+    assert (e.q2(**qa) == P.reference_q2(t, **qa)).all()
+    assert e.q3(**qa) == P.reference_q3(t, **qa)
+    assert abs(e.q4(fk=2, **qa) - P.reference_q4(t, 2, **qa)) < 1e-9
+    assert e.q5(fl=3, fk=2, **qa) == P.reference_q5(t, 3, 2, **qa)
+
+
+def test_clutch_fewer_ops_than_bitserial_per_query():
+    t = P.Table.generate(1000, 32, seed=1)
+    mx = (1 << 32) - 1
+    counts = {}
+    for method in ("clutch", "bitserial"):
+        e = P.PudQueryEngine(t, PuDArch.MODIFIED, method)
+        e.sub.trace.clear()
+        e.q2(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4, y1=3 * mx // 4)
+        counts[method] = e.sub.trace.pud_ops
+    assert counts["clutch"] * 2 < counts["bitserial"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("n_bits", [8, 16])
+def test_gbdt_exact_inference(arch, n_bits):
+    forest = G.ObliviousForest.random(num_trees=50, depth=6,
+                                      num_features=6, n_bits=n_bits, seed=2)
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 1 << n_bits, (12, 6), dtype=np.uint64)
+    want_addr = G.reference_leaf_addrs(forest, x)
+    want_pred = G.reference_predict(forest, x)
+    eng = G.GbdtPudEngine(forest, arch)
+    for i in range(x.shape[0]):
+        addrs, pred = eng.infer_one(x[i])
+        np.testing.assert_array_equal(addrs, want_addr[i])
+        assert abs(pred - want_pred[i]) < 1e-3
+    assert eng.ops_per_instance == G.gbdt_ops_per_instance(
+        forest, eng.num_chunks, arch)
+
+
+def test_gbdt_fit_learns():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, (600, 5), dtype=np.uint64)
+    y = (x[:, 0].astype(float) > 128).astype(float) * 2 - 1 \
+        + 0.5 * (x[:, 1].astype(float) / 255)
+    f = G.fit_oblivious_forest(x, y, num_trees=40, depth=4, n_bits=8)
+    pred = G.reference_predict(f, x)
+    base = np.abs(y - y.mean()).mean()
+    assert np.abs(y - pred).mean() < 0.6 * base
+
+
+def test_gbdt_pud_runs_fitted_model():
+    """End-to-end: fit -> load to PuD -> infer -> matches host inference."""
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 256, (300, 4), dtype=np.uint64)
+    y = (x[:, 0].astype(float) - x[:, 2].astype(float)) / 128.0
+    f = G.fit_oblivious_forest(x, y, num_trees=24, depth=5, n_bits=8)
+    eng = G.GbdtPudEngine(f, PuDArch.UNMODIFIED)
+    got = eng.infer(x[:8])
+    want = G.reference_predict(f, x[:8])
+    np.testing.assert_allclose(got, want, atol=1e-3)

@@ -1,0 +1,222 @@
+"""Core Clutch algorithm tests: correctness on the PuD machine model,
+paper op-count/row-budget claims, and hypothesis property sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitserial import BitSerialEngine, bitserial_op_count
+from repro.core.clutch import ClutchEngine, clutch_op_count, compare_lt
+from repro.core.encoding import (
+    ChunkPlan,
+    load_vector,
+    make_plan,
+    min_chunks_for_budget,
+    temporal_encode_planes,
+)
+from repro.core.machine import PuDArch, PuDOp, Subarray, pack_bits, unpack_bits
+
+ARCHS = [PuDArch.MODIFIED, PuDArch.UNMODIFIED]
+OPS = ["<", "<=", ">", ">=", "=="]
+
+
+# ------------------------- pack/unpack ------------------------------ #
+
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=300))
+def test_pack_unpack_roundtrip(bits):
+    arr = np.asarray(bits, np.uint8)
+    assert (unpack_bits(pack_bits(arr), len(bits)) == arr).all()
+
+
+# ------------------------- chunk plans ------------------------------ #
+
+@given(st.integers(1, 32), st.data())
+def test_plan_invariants(n_bits, data):
+    c = data.draw(st.integers(1, n_bits))
+    plan = make_plan(n_bits, c)
+    assert plan.n_bits == n_bits
+    assert plan.num_chunks == c
+    assert max(plan.widths) - min(plan.widths) <= 1   # even split
+    assert plan.rows_required == sum((1 << k) - 1 for k in plan.widths)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 32))
+def test_scalar_split_reassembles(value, chunks):
+    plan = make_plan(32, chunks)
+    parts = plan.split_scalar(value)
+    got = sum(p << s for p, s in zip(parts, plan.shifts))
+    assert got == value
+
+
+def test_paper_row_budget_claims():
+    # §4.2: 32-bit, 5 chunks -> (6,6,6,7,7) -> 443 rows, 17 PuD ops (U)
+    plan = make_plan(32, 5)
+    assert plan.widths == (6, 6, 6, 7, 7)
+    assert plan.rows_required == 63 + 63 + 63 + 127 + 127 == 443
+    assert clutch_op_count(5, PuDArch.UNMODIFIED) == 17
+    assert clutch_op_count(1, PuDArch.UNMODIFIED) == 1   # single RowCopy
+    # min-chunk selection used in §5.1 (one subarray, no complements)
+    assert min_chunks_for_budget(8, 1016).num_chunks == 1
+    assert min_chunks_for_budget(16, 1016).num_chunks == 2
+    assert min_chunks_for_budget(32, 1016).num_chunks == 5
+
+
+# --------------------- temporal coding property ---------------------- #
+
+@given(st.integers(1, 8), st.lists(st.integers(0, 255), min_size=1,
+                                   max_size=64))
+def test_temporal_encoding_is_comparison_table(k, values):
+    vals = np.asarray(values, np.uint64) & ((1 << k) - 1)
+    planes = temporal_encode_planes(vals, k)
+    for r in range((1 << k) - 1):
+        assert (planes[r] == (r < vals)).all()
+
+
+# ------------------------ full predicate sweep ----------------------- #
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("n_bits,chunks", [(8, 1), (8, 2), (16, 2),
+                                           (16, 4), (32, 5), (32, 8)])
+def test_clutch_all_operators(arch, n_bits, chunks):
+    rng = np.random.default_rng(42)
+    n = 777
+    vals = rng.integers(0, 1 << n_bits, n, dtype=np.uint64)
+    sub = Subarray(num_rows=2048, num_cols=32768, arch=arch)
+    eng = ClutchEngine(sub, vals, n_bits, num_chunks=chunks)
+    mx = (1 << n_bits) - 1
+    scalars = [0, 1, mx, mx - 1, int(rng.integers(0, mx)),
+               int(vals[0]), int(vals[-1])]
+    for a in scalars:
+        for op, fn in [("<", np.less), ("<=", np.less_equal),
+                       (">", np.greater), (">=", np.greater_equal),
+                       ("==", np.equal)]:
+            res = eng.predicate(op, a)
+            assert (eng.read_bitmap(res.row) == fn(vals, a)).all(), (op, a)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_clutch_op_count_matches_closed_form(arch):
+    rng = np.random.default_rng(0)
+    for n_bits, chunks in [(8, 1), (16, 2), (16, 3), (16, 5), (16, 8)]:
+        vals = rng.integers(0, 1 << n_bits, 256, dtype=np.uint64)
+        sub = Subarray(num_rows=2048, num_cols=8192, arch=arch)
+        eng = ClutchEngine(sub, vals, n_bits, num_chunks=chunks,
+                           support_negated=False)
+        sub.trace.clear()
+        eng.predicate(">", 123)
+        assert sub.trace.pud_ops == clutch_op_count(chunks, arch)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 16), st.integers(0, 2**16 - 1), st.data())
+def test_clutch_hypothesis_lt(n_bits_half, scalar, data):
+    """Property: for random widths/scalars, row-lookup + MAJ3 merge equals
+    the integer comparison."""
+    n_bits = 16
+    chunks = data.draw(st.integers(2, 6))   # 1 chunk @16b needs 64Ki rows
+    arch = data.draw(st.sampled_from(ARCHS))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    vals = rng.integers(0, 1 << n_bits, 128, dtype=np.uint64)
+    sub = Subarray(num_rows=2048, num_cols=4096, arch=arch)
+    eng = ClutchEngine(sub, vals, n_bits, num_chunks=chunks,
+                       support_negated=False)
+    a = scalar & ((1 << n_bits) - 1)
+    res = eng.predicate(">", a)   # vals > a  <=>  a < vals
+    assert (eng.read_bitmap(res.row) == (vals > a)).all()
+
+
+# --------------------------- bit-serial ------------------------------ #
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("n_bits", [8, 16, 32])
+def test_bitserial_operators_and_count(arch, n_bits):
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 1 << n_bits, 333, dtype=np.uint64)
+    sub = Subarray(num_rows=2048, num_cols=16384, arch=arch)
+    eng = BitSerialEngine(sub, vals, n_bits)
+    mx = (1 << n_bits) - 1
+    for a in [0, mx, int(rng.integers(0, mx))]:
+        for op, fn in [("<", np.less), ("<=", np.less_equal),
+                       (">", np.greater), (">=", np.greater_equal),
+                       ("==", np.equal)]:
+            row = eng.predicate(op, a)
+            assert (eng.read_bitmap(row) == fn(vals, a)).all()
+    sub.trace.clear()
+    eng.predicate(">", 5)
+    assert sub.trace.pud_ops == bitserial_op_count(n_bits, arch)
+
+
+def test_clutch_beats_bitserial_op_count():
+    """The paper's core claim at the op-count level."""
+    for n_bits, chunks in [(8, 1), (16, 2), (32, 5)]:
+        for arch in ARCHS:
+            assert clutch_op_count(chunks, arch) < \
+                bitserial_op_count(n_bits, arch)
+
+
+# ----------------------- machine-level details ----------------------- #
+
+def test_unmodified_requires_frac_before_apa():
+    sub = Subarray(num_rows=64, num_cols=64, arch=PuDArch.UNMODIFIED)
+    with pytest.raises(RuntimeError):
+        sub.apa()
+
+
+def test_modified_only_ops():
+    sub = Subarray(num_rows=64, num_cols=64, arch=PuDArch.UNMODIFIED)
+    with pytest.raises(RuntimeError):
+        sub.bulk_not(0, 1)
+    with pytest.raises(RuntimeError):
+        sub.tra()
+
+
+def test_row_budget_enforced():
+    sub = Subarray(num_rows=64, num_cols=64, arch=PuDArch.MODIFIED)
+    with pytest.raises(MemoryError):
+        sub.alloc(100)
+
+
+def test_complement_doubles_budget_on_unmodified():
+    """§6.2 footnote 4: negated operators double the row footprint on
+    Unmodified PuD (complement planes)."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 16, 64, dtype=np.uint64)
+    alloc = {}
+    for neg in (False, True):
+        sub = Subarray(num_rows=2048, num_cols=2048,
+                       arch=PuDArch.UNMODIFIED)
+        before = sub.rows_free
+        eng = ClutchEngine(sub, vals, 16, num_chunks=4, support_negated=neg)
+        alloc[neg] = before - sub.rows_free - 2   # minus scratch rows
+    assert alloc[True] == 2 * alloc[False]
+
+
+# ---------------- beyond-paper: signed / float operands ----------------- #
+
+def test_typed_engine_signed():
+    from repro.core.clutch import TypedClutchEngine
+
+    rng = np.random.default_rng(1)
+    vals = rng.integers(-(1 << 15), 1 << 15, 400).astype(np.int64)
+    sub = Subarray(num_rows=2048, num_cols=1024, arch=PuDArch.UNMODIFIED)
+    eng = TypedClutchEngine(sub, vals, 16, dtype="signed", num_chunks=4)
+    for a in (-(1 << 15), -1, 0, 1, (1 << 15) - 1):
+        for op, fn in [("<", np.less), ("<=", np.less_equal),
+                       (">", np.greater), (">=", np.greater_equal),
+                       ("==", np.equal)]:
+            got = eng.read_bitmap(eng.predicate(op, a).row)
+            assert (got == fn(vals, a)).all(), (op, a)
+
+
+def test_typed_engine_float32():
+    from repro.core.clutch import TypedClutchEngine
+
+    rng = np.random.default_rng(2)
+    vals = (rng.normal(size=300) * 50).astype(np.float32)
+    vals[:4] = [0.0, -0.0, 1e-30, -1e-30]
+    sub = Subarray(num_rows=2048, num_cols=512, arch=PuDArch.MODIFIED)
+    eng = TypedClutchEngine(sub, vals, 32, dtype="float32", num_chunks=8)
+    for a in (0.0, -3.25, 17.5, float(vals[10])):
+        for op, fn in [("<", np.less), (">", np.greater), ("==", np.equal)]:
+            got = eng.read_bitmap(eng.predicate(op, a).row)
+            assert (got == fn(vals, np.float32(a))).all(), (op, a)

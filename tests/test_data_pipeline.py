@@ -1,0 +1,55 @@
+"""Data pipeline invariants: determinism across restarts and host
+counts (the data-side half of elastic restart)."""
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM
+
+
+def test_batches_deterministic_by_step():
+    cfg = ARCHS["minitron-8b"].reduced()
+    shape = ShapeConfig("t", 64, 8, "train")
+    a = SyntheticLM(cfg, shape, seed=3)
+    b = SyntheticLM(cfg, shape, seed=3)
+    for step in (0, 5, 17):
+        ba, bb = a.batch_at(step), b.batch_at(step)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k])
+
+
+def test_labels_are_next_tokens():
+    cfg = ARCHS["minitron-8b"].reduced()
+    shape = ShapeConfig("t", 64, 4, "train")
+    src = SyntheticLM(cfg, shape, seed=0)
+    b = src.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][0, :, 1:], b["labels"][0, :, :-1])
+
+
+def test_prefetcher_orders_steps():
+    cfg = ARCHS["minitron-8b"].reduced()
+    shape = ShapeConfig("t", 32, 4, "train")
+    src = SyntheticLM(cfg, shape, seed=1)
+    pf = Prefetcher(src, start_step=7)
+    try:
+        for want in (7, 8, 9):
+            step, batch = pf.next()
+            assert step == want
+            ref = src.batch_at(step)
+            np.testing.assert_array_equal(batch["tokens"], ref["tokens"])
+    finally:
+        pf.close()
+
+
+def test_bigram_structure_is_learnable_signal():
+    """The synthetic stream must have sub-maximal entropy (a bigram
+    backbone), otherwise training-loss tests are meaningless."""
+    cfg = ARCHS["minitron-8b"].reduced()
+    shape = ShapeConfig("t", 256, 8, "train")
+    src = SyntheticLM(cfg, shape, seed=0)
+    b = src.batch_at(0)
+    toks, labels = b["tokens"].reshape(-1), b["labels"].reshape(-1)
+    # fraction of transitions following the deterministic bigram table
+    follow = (src._next[toks] == labels).mean()
+    assert follow > 0.7, follow

@@ -1,0 +1,173 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret mode on
+CPU) against its pure-jnp ref.py oracle, plus hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import make_plan
+from repro.kernels import ops, ref
+from repro.kernels.common import (
+    float_to_monotonic_u32,
+    pack_bits_jnp,
+    unpack_bits_jnp,
+)
+
+RNG = np.random.default_rng(7)
+
+
+# ------------------------- clutch_merge ------------------------------ #
+
+@pytest.mark.parametrize("n_bits,chunks", [(8, 1), (8, 2), (16, 2),
+                                           (16, 4), (32, 5), (32, 8),
+                                           (12, 3), (24, 6)])
+@pytest.mark.parametrize("n", [100, 4096, 5000])
+def test_clutch_merge_sweep(n_bits, chunks, n):
+    plan = make_plan(n_bits, chunks)
+    vals = jnp.asarray(RNG.integers(0, 1 << n_bits, n, dtype=np.uint32))
+    a = int(RNG.integers(0, 1 << n_bits))
+    got = ops.clutch_compare(vals, a, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals) > a)
+
+
+def test_clutch_merge_kernel_equals_ref():
+    plan = make_plan(16, 4)
+    vals = jnp.asarray(RNG.integers(0, 1 << 16, 3000, dtype=np.uint32))
+    lut = ops.encode_lut(vals, plan)
+    lt, le = ops.resolve_indices(plan, 12345)
+    k = ops.compare_gt_scalar(lut, jnp.asarray(lt), jnp.asarray(le))
+    r = ref.clutch_merge_ref(lut, jnp.asarray(lt), jnp.asarray(le))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**16 - 1), st.integers(1, 5))
+def test_clutch_merge_hypothesis(a, chunks):
+    plan = make_plan(16, chunks)
+    vals = jnp.asarray(RNG.integers(0, 1 << 16, 512, dtype=np.uint32))
+    got = ops.clutch_compare(vals, a, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals) > a)
+
+
+# ------------------------ temporal_encode ---------------------------- #
+
+@pytest.mark.parametrize("k", [1, 3, 6, 8])
+def test_temporal_encode_vs_ref(k):
+    n = 2048
+    vals = jnp.asarray(RNG.integers(0, 1 << k, n, dtype=np.uint32))
+    plan = make_plan(k, 1)
+    lut = ops.encode_lut(vals, plan)
+    want = ref.temporal_encode_ref(vals, k)
+    np.testing.assert_array_equal(
+        np.asarray(lut[: (1 << k) - 1, : want.shape[1]]), np.asarray(want))
+
+
+# ------------------------- bitserial_cmp ----------------------------- #
+
+@pytest.mark.parametrize("n_bits", [4, 8, 16, 32])
+@pytest.mark.parametrize("n", [77, 4096])
+def test_bitserial_kernel_sweep(n_bits, n):
+    vals = jnp.asarray(RNG.integers(0, 1 << n_bits, n, dtype=np.uint32))
+    planes = ops.encode_bitplanes(vals, n_bits)
+    a = int(RNG.integers(0, 1 << n_bits))
+    words = ops.bitserial_compare(planes, a, n_bits)
+    got = unpack_bits_jnp(words, n).astype(bool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals) > a)
+    r = ref.bitserial_cmp_ref(planes[:n_bits], np.uint32(a), n_bits)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(words))
+
+
+# ------------------------- fused_query -------------------------------- #
+
+@pytest.mark.parametrize("n_bits,chunks", [(8, 2), (16, 4), (32, 8)])
+def test_fused_range_count(n_bits, chunks):
+    plan = make_plan(n_bits, chunks)
+    n = 3333
+    vals = jnp.asarray(RNG.integers(0, 1 << n_bits, n, dtype=np.uint32))
+    lut = ops.encode_lut(vals, plan)
+    lut_c = ops.encode_lut(vals, plan, complement=True)
+    mx = (1 << n_bits) - 1
+    x0, x1 = mx // 5, 4 * mx // 5
+    gt = ops.resolve_indices(plan, x0)
+    lt = ops.resolve_indices(plan, mx - x1)
+    idx = jnp.asarray(np.concatenate([gt[0], gt[1], lt[0], lt[1]]))
+    bm, cnt = ops.range_count(lut, lut_c, idx, chunks)
+    got = unpack_bits_jnp(bm, n).astype(bool)
+    want = (np.asarray(vals) > x0) & (np.asarray(vals) < x1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert int(cnt) == int(want.sum())
+
+
+# ------------------------- leaf_gather -------------------------------- #
+
+@pytest.mark.parametrize("b,t,depth", [(8, 16, 4), (100, 64, 6),
+                                       (256, 128, 8), (33, 7, 5)])
+def test_leaf_gather_sweep(b, t, depth):
+    addrs = jnp.asarray(RNG.integers(0, 1 << depth, (b, t), dtype=np.int32))
+    leaves = jnp.asarray(
+        RNG.normal(size=(t, 1 << depth)).astype(np.float32))
+    got = ops.gbdt_leaf_sum(addrs, leaves)
+    want = ref.leaf_gather_ref(addrs, leaves)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+# -------------------------- minp_mask --------------------------------- #
+
+def test_monotonic_u32_is_order_preserving():
+    x = jnp.asarray(np.float32([-1e30, -5.5, -0.0, 0.0, 1e-9, 3.14, 2e30]))
+    u = np.asarray(float_to_monotonic_u32(x))
+    assert (np.diff(u.astype(np.int64)) >= 0).all()
+
+
+@pytest.mark.parametrize("b,v", [(1, 100), (4, 1024), (8, 50000), (3, 7)])
+def test_minp_mask_sweep(b, v):
+    logits = jnp.asarray(RNG.normal(size=(b, v)).astype(np.float32) * 8)
+    tau = jnp.asarray(RNG.normal(size=(b,)).astype(np.float32))
+    got = ops.sample_threshold_mask(logits, tau)
+    want = ref.minp_mask_ref(logits, tau)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.floats(-100, 100, width=32), st.integers(1, 4))
+def test_minp_mask_hypothesis(tau_val, b):
+    v = 300
+    logits = jnp.asarray(RNG.normal(size=(b, v)).astype(np.float32) * 50)
+    tau = jnp.full((b,), tau_val, jnp.float32)
+    got = ops.sample_threshold_mask(logits, tau)
+    want = ref.minp_mask_ref(logits, tau)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------- cross-substrate agreement -------------------------- #
+
+def test_machine_and_kernel_agree():
+    """The PuD machine simulation and the TPU kernel compute the same
+    bitmaps from the same encoded data."""
+    from repro.core.clutch import ClutchEngine
+    from repro.core.machine import PuDArch, Subarray
+
+    n_bits, chunks, n = 16, 4, 1000
+    vals_np = RNG.integers(0, 1 << n_bits, n, dtype=np.uint64)
+    plan = make_plan(n_bits, chunks)
+    a = int(RNG.integers(0, 1 << n_bits))
+    sub = Subarray(num_rows=1024, num_cols=1024, arch=PuDArch.MODIFIED)
+    eng = ClutchEngine(sub, vals_np, n_bits, plan=plan)
+    machine_bm = eng.read_bitmap(eng.predicate(">", a).row)
+    kernel_bm = np.asarray(ops.clutch_compare(
+        jnp.asarray(vals_np.astype(np.uint32)), a, plan))
+    np.testing.assert_array_equal(machine_bm, kernel_bm)
+
+
+@pytest.mark.parametrize("n", [100_000, 4096 + 128 * 32, 33 * 32])
+def test_clutch_merge_nondividing_word_counts(n):
+    """Regression: word counts that don't divide the preferred block size
+    must still process every block (bug: last 128-word block skipped)."""
+    plan = make_plan(16, 4)
+    vals = jnp.asarray(RNG.integers(0, 1 << 16, n, dtype=np.uint32))
+    a = int(RNG.integers(0, 1 << 16))
+    got = ops.clutch_compare(vals, a, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals) > a)

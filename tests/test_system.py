@@ -1,0 +1,77 @@
+"""End-to-end behaviour of the paper's system: data -> chunked temporal
+encoding -> PuD comparison -> application output -> cost model, and the
+cost model's reproduction of the paper's headline claims."""
+
+import numpy as np
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.clutch import clutch_op_count
+from repro.core.bitserial import paper_bitserial_op_count
+from repro.core.machine import PuDArch
+
+
+def test_end_to_end_database_pipeline():
+    """Table -> engines -> WHERE bitmap -> COUNT, exactly."""
+    t = P.Table.generate(5000, 16, seed=9)
+    e = P.PudQueryEngine(t, PuDArch.UNMODIFIED, "clutch")
+    mx = (1 << 16) - 1
+    got = e.q3(fi=2, x0=mx // 3, x1=2 * mx // 3, fj=5, y0=100, y1=mx - 100)
+    assert got == P.reference_q3(t, 2, mx // 3, 2 * mx // 3, 5, 100, mx - 100)
+
+
+def test_end_to_end_gbdt_pipeline():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 1 << 8, (200, 8), dtype=np.uint64)
+    y = np.sin(x[:, 0] / 40.0) + 0.1 * x[:, 3].astype(float) / 255
+    forest = G.fit_oblivious_forest(x, y, num_trees=32, depth=5, n_bits=8)
+    eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED)
+    got = eng.infer(x[:10])
+    np.testing.assert_allclose(got, G.reference_predict(forest, x[:10]),
+                               atol=1e-3)
+
+
+def test_paper_headline_op_reduction():
+    """Clutch's >10x PuD-op reduction at 32-bit (paper §4.2)."""
+    ours = clutch_op_count(5, PuDArch.UNMODIFIED)
+    baseline = paper_bitserial_op_count(32, PuDArch.UNMODIFIED)
+    assert ours == 17 and baseline == 192
+    assert baseline / ours > 10
+
+
+def test_cost_model_speedup_bands():
+    """Modeled kernel speedups must land in the paper's reported bands:
+    Clutch vs CPU grows with precision (up to ~36x), Clutch vs bit-serial
+    ~2-4x (Fig. 10)."""
+    sysconf = cost.DESKTOP
+    for n_bits, chunks in [(8, 1), (16, 2), (32, 5)]:
+        cl = cost.pud_compare_cost("clutch", n_bits, PuDArch.MODIFIED,
+                                   sysconf, chunks=chunks)
+        bs = cost.pud_compare_cost("bitserial", n_bits, PuDArch.MODIFIED,
+                                   sysconf)
+        cpu = cost.cpu_scan_cost(n_bits, sysconf.parallel_cols, sysconf)
+        vs_cpu = cl.throughput_geps / cpu.throughput_geps
+        vs_bs = cl.throughput_geps / bs.throughput_geps
+        assert vs_cpu > 2.0, (n_bits, vs_cpu)
+        assert vs_cpu < 60.0, (n_bits, vs_cpu)
+        if n_bits == 32:
+            assert 1.5 < vs_bs < 6.0, vs_bs
+    # speedup grows with precision (paper: "higher throughput as
+    # bit-precision increases")
+    sp = []
+    for n_bits, chunks in [(8, 1), (16, 2), (32, 5)]:
+        cl = cost.pud_compare_cost("clutch", n_bits, PuDArch.MODIFIED,
+                                   sysconf, chunks=chunks)
+        cpu = cost.cpu_scan_cost(n_bits, sysconf.parallel_cols, sysconf)
+        sp.append(cl.throughput_geps / cpu.throughput_geps)
+    assert sp[0] < sp[1] < sp[2]
+
+
+def test_energy_model_bands():
+    sysconf = cost.DESKTOP
+    cl = cost.pud_compare_cost("clutch", 32, PuDArch.MODIFIED, sysconf,
+                               chunks=5)
+    cpu = cost.cpu_scan_cost(32, sysconf.parallel_cols, sysconf)
+    ratio = cl.elems_per_uj / cpu.elems_per_uj
+    assert 20 < ratio < 300, ratio   # paper reports up to 96x at kernel level
