@@ -1,0 +1,72 @@
+"""Throughput vs bank count from REAL banked-machine traces.
+
+Unlike ``paper_figs`` (closed-form op histograms), these rows run the
+functional banked engines, capture their actual command traces, and feed
+them through the BLP cost model (``cost.trace_cost``) at each bank count
+-- the measurement path the multi-bank refactor enables.  Reported:
+
+  * GBDT: one batch (one instance per bank) per wave; derived column is
+    instances/ms of modeled DRAM time.
+  * Predicate Q2: a table sharded across ``banks``; derived column is
+    Giga-records/s of modeled DRAM time.
+  * functional-simulator wall-clock per broadcast wave (NumPy time, not
+    DRAM time) to show the simulator itself scales with vectorization.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.machine import PuDArch
+
+BANK_SWEEP = (1, 4, 16, 64)
+
+
+def gbdt_bank_scaling():
+    rows = []
+    forest = G.ObliviousForest.random(num_trees=64, depth=6,
+                                      num_features=8, n_bits=8, seed=0)
+    rng = np.random.default_rng(1)
+    for banks in BANK_SWEEP:
+        eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=banks)
+        x = rng.integers(0, 256, (banks, 8), dtype=np.uint64)
+        eng.sub.trace.clear()
+        t0 = time.perf_counter()
+        eng.infer(x)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        kc = cost.trace_cost(eng.sub.trace.counts(), cost.DESKTOP,
+                             banks=banks, cols_per_bank=eng.sub.num_cols)
+        inst_per_ms = banks / (kc.time_ns / 1e6)
+        rows.append((f"bank_scaling_gbdt_b{banks}",
+                     round(kc.time_ns / 1e3, 2), round(inst_per_ms, 1)))
+        rows.append((f"bank_scaling_gbdt_b{banks}_sim_wallclock",
+                     round(wall_us, 1), banks))
+    return rows
+
+
+def predicate_bank_scaling():
+    rows = []
+    for banks in (1, 4, 16):
+        n = banks * 4096
+        t = P.Table.generate(n, 8, seed=3)
+        e = P.PudQueryEngine(t, PuDArch.MODIFIED, "clutch",
+                             cols_per_bank=4096)
+        e.sub.trace.clear()
+        mx = 255
+        e.q2(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
+             y1=3 * mx // 4)
+        kc = cost.trace_cost(e.sub.trace.counts(), cost.DESKTOP,
+                             banks=banks, cols_per_bank=e.sub.num_cols)
+        grps = n / kc.time_ns  # records per ns == G-records/s
+        rows.append((f"bank_scaling_q2_b{banks}",
+                     round(kc.time_ns / 1e3, 2), round(grps, 3)))
+    return rows
+
+
+def run():
+    return gbdt_bank_scaling() + predicate_bank_scaling()

@@ -6,7 +6,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import kernel_wallclock, paper_figs, roofline_report
+from benchmarks import bank_scaling, kernel_wallclock, paper_figs, \
+    roofline_report
 
 
 def main() -> None:
@@ -15,6 +16,8 @@ def main() -> None:
         for name, us, derived in fig():
             print(f"{name},{us},{derived}")
     for name, us, derived in kernel_wallclock.run():
+        print(f"{name},{us},{derived}")
+    for name, us, derived in bank_scaling.run():
         print(f"{name},{us},{derived}")
     for name, us, derived in roofline_report.run():
         print(f"{name},{us},{derived}")

@@ -13,6 +13,14 @@ vector-scalar comparisons followed by mask operations.  Mapping:
   * after sweeping features, ONE row readout yields every tree's leaf
     address; the host (or the ``leaf_gather`` TPU kernel) sums leaf values.
 
+Batched scale-out (the paper's bank-level-parallelism mapping): the
+engine replicates the forest's thresholds/masks into ``num_banks`` banks
+and maps *one instance per bank*.  Each wave executes ONE broadcast
+command schedule whose Clutch lookups take per-bank row indices (the
+instances' feature values differ per bank), so a B-instance batch costs
+the same command count as one instance -- per-instance op counts stay
+equal to :func:`gbdt_ops_per_instance` at any batch size.
+
 Only the native ``a < B`` comparison is needed, so no complement planes
 are stored even on Unmodified PuD.
 """
@@ -24,7 +32,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.clutch import ClutchEngine, clutch_op_count
-from repro.core.machine import PuDArch, Subarray, pack_bits, unpack_bits
+from repro.core.machine import BankedSubarray, PuDArch, pack_bits, unpack_bits
 
 # Paper §5.1 kernel chunk counts (minimum fitting a single subarray).
 PAPER_GBDT_CHUNKS = {8: 1, 16: 2, 32: 5}
@@ -109,44 +117,75 @@ def reference_predict(forest: ObliviousForest, X: np.ndarray) -> np.ndarray:
 
 
 class GbdtPudEngine:
-    """One DRAM bank's worth of GBDT state: the forest's thresholds and
-    masks are loaded once; each call to :meth:`infer_one` simulates one
-    instance (the paper maps one instance per bank, banks in parallel)."""
+    """A bank group holding the forest's GBDT state, one instance per bank.
+
+    Thresholds and one-hot feature masks are loaded once (broadcast to all
+    ``num_banks`` banks); :meth:`infer` then processes ``num_banks``
+    instances per broadcast wave with per-bank Clutch scalars.  ``device``
+    optionally places the group on a :class:`~repro.core.device.PuDDevice`.
+    """
 
     def __init__(self, forest: ObliviousForest, arch: PuDArch,
-                 num_chunks: int | None = None, num_rows: int = 1024) -> None:
+                 num_chunks: int | None = None, num_rows: int = 1024,
+                 num_banks: int = 1, device=None) -> None:
+        if device is not None:
+            if device.arch is not arch:
+                raise ValueError(
+                    f"device arch {device.arch.value} != engine arch "
+                    f"{arch.value}")
+            num_rows = device.num_rows
         self.forest = forest
         self.arch = arch
+        self.num_banks = num_banks
         t, d, f = forest.num_trees, forest.depth, forest.num_features
         n_nodes = t * d
         n_cols = max(4096, 1 << (n_nodes - 1).bit_length())
         if n_nodes > 65536:
             raise ValueError("forest exceeds one bank's columns; shard trees")
-        self.sub = Subarray(num_rows=num_rows, num_cols=n_cols, arch=arch)
+        if device is not None:
+            self.sub = device.alloc_banks(num_banks, num_cols=n_cols,
+                                          label="gbdt")
+        else:
+            self.sub = BankedSubarray(num_banks=num_banks, num_rows=num_rows,
+                                      num_cols=n_cols, arch=arch)
         chunks = num_chunks or PAPER_GBDT_CHUNKS[forest.n_bits]
         # Only the native `<` is used => no complement planes needed.
         self.engine = ClutchEngine(
             self.sub, forest.thresholds.reshape(-1), forest.n_bits,
             num_chunks=chunks, support_negated=False)
         self.num_chunks = self.engine.plan.num_chunks
-        # One-hot feature mask rows (paper Fig. 12 layout).
+        # One-hot feature mask rows (paper Fig. 12 layout), written through
+        # the bulk path: one vectorized store, one WRITE entry per row.
         flat_feat = forest.feature_idx.reshape(-1)
+        mask_bits = (flat_feat[None, :] ==
+                     np.arange(f)[:, None]).astype(np.uint8)    # [F, nodes]
+        mask_bits = np.pad(
+            mask_bits, ((0, 0), (0, self.sub.num_cols - n_nodes)))
         self.mask_rows = self.sub.alloc(f)
-        for fi in range(f):
-            bits = (flat_feat == fi).astype(np.uint8)
-            bits = np.pad(bits, (0, self.sub.num_cols - bits.size))
-            self.sub.host_write_row(self.mask_rows + fi, pack_bits(bits))
+        self.sub.host_write_rows(self.mask_rows, pack_bits(mask_bits))
         self.acc_row = self.sub.alloc(1)
         self.ops_per_instance: int | None = None
 
-    def infer_one(self, x: np.ndarray) -> tuple[np.ndarray, float]:
-        """x: [F] quantized feature values.  Returns (leaf addresses [T],
-        prediction)."""
+    def _infer_wave(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """One broadcast wave over up to ``num_banks`` instances.
+
+        X: [W, F] quantized feature values (W <= num_banks).  Returns
+        (leaf addresses [W, T], predictions [W]).  The command schedule is
+        identical for every wave width: short waves pad with a repeat of
+        instance 0 and discard the extra banks' results.
+        """
         sub, forest = self.sub, self.forest
+        w = X.shape[0]
+        if w > self.num_banks:
+            raise ValueError(f"wave of {w} instances > {self.num_banks} banks")
+        if w < self.num_banks:
+            X = np.concatenate(
+                [X, np.repeat(X[:1], self.num_banks - w, axis=0)])
         before = sub.trace.pud_ops
         sub.rowcopy(sub.ROW_ZERO, self.acc_row)   # clear the leaf bitmap
         for fi in range(forest.num_features):
-            cmp_row = self.engine.predicate(">", int(x[fi])).row
+            scalars = np.asarray(X[:, fi], np.int64)
+            cmp_row = self.engine.predicate(">", scalars).row
             # masked = cmp AND mask_f   (cmp already in the MAJ accumulator)
             masked = sub.maj3_into_acc(cmp_row, self.mask_rows + fi,
                                        sub.ROW_ZERO)
@@ -156,17 +195,27 @@ class GbdtPudEngine:
         self.ops_per_instance = sub.trace.pud_ops - before
         bits = unpack_bits(sub.host_read_row(self.acc_row),
                            forest.num_trees * forest.depth)
-        bits = bits.reshape(forest.num_trees, forest.depth)
+        bits = bits.reshape(self.num_banks, forest.num_trees, forest.depth)
         weights = 1 << np.arange(forest.depth)[::-1]
-        addrs = (bits * weights).sum(-1).astype(np.int32)
-        pred = float(
-            forest.leaves[np.arange(forest.num_trees), addrs].sum())
-        return addrs, pred
+        addrs = (bits * weights).sum(-1).astype(np.int32)      # [B, T]
+        preds = forest.leaves[np.arange(forest.num_trees)[None],
+                              addrs].sum(-1).astype(np.float32)
+        return addrs[:w], preds[:w]
+
+    def infer_one(self, x: np.ndarray) -> tuple[np.ndarray, float]:
+        """x: [F] quantized feature values.  Returns (leaf addresses [T],
+        prediction)."""
+        addrs, preds = self._infer_wave(np.asarray(x)[None, :])
+        return addrs[0], float(preds[0])
 
     def infer(self, X: np.ndarray) -> np.ndarray:
-        """Batch inference (functional; the cost model maps the batch
-        across banks)."""
-        return np.array([self.infer_one(x)[1] for x in X], np.float32)
+        """Batch inference: ``num_banks`` instances per broadcast wave."""
+        X = np.asarray(X)
+        if X.shape[0] == 0:
+            return np.empty((0,), np.float32)
+        preds = [self._infer_wave(X[i:i + self.num_banks])[1]
+                 for i in range(0, X.shape[0], self.num_banks)]
+        return np.concatenate(preds).astype(np.float32)
 
 
 def gbdt_ops_per_instance(forest: ObliviousForest, chunks: int,

@@ -1,4 +1,4 @@
-"""Predicate evaluation on PuD (paper §6.2).
+"""Predicate evaluation on PuD (paper §6.2), sharded across banks.
 
 Implements the paper's benchmark queries Q1-Q5 (Table 4) over a table of
 8 uniformly-sampled feature columns, on three backends:
@@ -10,21 +10,27 @@ Implements the paper's benchmark queries Q1-Q5 (Table 4) over a table of
   * TPU kernels        -- ``repro.kernels.ops.range_count`` is benchmarked
     separately in ``benchmarks/``.
 
-Each DRAM column holds one record; all features of a record live in the
-same subarray column (vertical layout), enabling in-DRAM WHERE-clause
-reduction before any bitmap leaves the chip.
+Scale-out layout: each DRAM column holds one record; all features of a
+record live in the same subarray column (vertical layout).  Tables larger
+than one bank's columns are *sharded record-wise across banks* of a
+:class:`~repro.core.machine.BankedSubarray`: bank ``b`` owns records
+``[b * cols, (b+1) * cols)``.  Every predicate is one broadcast command
+stream (the scalar is the same for all banks), so WHERE-clause reduction
+happens in-DRAM in every bank concurrently, and only the final bitmaps
+leave the chip, where COUNT/AVERAGE merge host-side.  This removes the
+seed's 65536-record capacity cliff.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.bitserial import BitSerialEngine
 from repro.core.clutch import ClutchEngine
-from repro.core.encoding import make_plan
-from repro.core.machine import PuDArch, Subarray
+from repro.core.machine import BankedSubarray, PuDArch, unpack_bits
 
 
 @dataclass
@@ -72,21 +78,42 @@ class QueryStats:
 
 
 class PudQueryEngine:
-    """All feature vectors of one table slice resident in one subarray.
+    """All feature vectors of one table resident in one bank group,
+    sharded record-wise across as many banks as the table needs.
 
     ``method`` is "clutch" or "bitserial"; both expose the same predicate
     API so Q1-Q5 run identically, which is how the paper compares them.
+    ``device`` optionally allocates the bank group from a
+    :class:`~repro.core.device.PuDDevice` (engine-to-bank placement +
+    device-level cost aggregation) instead of standalone state.
     """
 
     def __init__(self, table: Table, arch: PuDArch, method: str = "clutch",
-                 num_chunks: int | None = None, num_rows: int = 1024) -> None:
-        if table.num_records > 65536:
-            raise ValueError("one engine handles <= one subarray of records;"
-                             " shard tables across engines")
+                 num_chunks: int | None = None, num_rows: int = 1024,
+                 cols_per_bank: int = 65536, device=None) -> None:
+        if device is not None:
+            if device.arch is not arch:
+                raise ValueError(
+                    f"device arch {device.arch.value} != engine arch "
+                    f"{arch.value}")
+            num_rows = device.num_rows
         self.table = table
         self.arch = arch
         self.method = method
-        n_cols = max(4096, 1 << (table.num_records - 1).bit_length())
+        records = table.num_records
+        self.num_banks = max(1, math.ceil(records / cols_per_bank))
+        per_bank = math.ceil(records / self.num_banks)
+        n_cols = max(4096, 1 << (per_bank - 1).bit_length())
+        self._shards = [self._shard(f, n_cols) for f in table.features]
+
+        def make_sub():
+            if device is not None:
+                return device.alloc_banks(self.num_banks, num_cols=n_cols,
+                                          label=f"query:{method}")
+            return BankedSubarray(num_banks=self.num_banks,
+                                  num_rows=num_rows, num_cols=n_cols,
+                                  arch=arch)
+
         if method == "clutch":
             chunks = num_chunks or PAPER_PREDICATE_CHUNKS[
                 (table.n_bits, arch)]
@@ -94,31 +121,54 @@ class PudQueryEngine:
             # configuration still exceeds the row budget, bump the chunk
             # count (paper §6.2 footnote 4: "a larger number of chunks can
             # be required to fit ... the row budget of a single subarray").
-            while True:
-                self.sub = Subarray(num_rows=num_rows, num_cols=n_cols,
-                                    arch=arch)
-                try:
-                    shared = (self.sub.alloc(1), self.sub.alloc(1))
-                    self.engines = [
-                        ClutchEngine(self.sub, f, table.n_bits,
-                                     num_chunks=chunks, scratch=shared)
-                        for f in table.features
-                    ]
-                    break
-                except MemoryError:
-                    chunks += 1
-                    if chunks > table.n_bits:
-                        raise
+            # Row demand is computed analytically BEFORE any allocation so
+            # a device-placed engine never leaks banks to failed attempts.
+            chunks = self._fit_chunks(chunks, num_rows)
+            self.sub = make_sub()
+            shared = (self.sub.alloc(1), self.sub.alloc(1))
+            self.engines = [
+                ClutchEngine(self.sub, shard, table.n_bits,
+                             num_chunks=chunks, scratch=shared)
+                for shard in self._shards
+            ]
             self.num_chunks = chunks
         elif method == "bitserial":
-            self.sub = Subarray(num_rows=num_rows, num_cols=n_cols, arch=arch)
+            self.sub = make_sub()
             self.engines = [
-                BitSerialEngine(self.sub, f, table.n_bits)
-                for f in table.features
+                BitSerialEngine(self.sub, shard, table.n_bits)
+                for shard in self._shards
             ]
         else:
             raise ValueError(method)
         self._save_rows = [self.sub.alloc(1) for _ in range(4)]
+
+    def _fit_chunks(self, chunks: int, num_rows: int) -> int:
+        """Smallest chunk count >= ``chunks`` whose full engine set (LUT
+        planes x features, complements on Unmodified, shared scratch and
+        save rows) fits the row budget."""
+        from repro.core.encoding import make_plan
+        from repro.core.machine import BankedSubarray as _B
+
+        budget = num_rows - _B.NUM_RESERVED
+        mult = 2 if self.arch is PuDArch.UNMODIFIED else 1
+        n_feat = len(self.table.features)
+        while True:
+            need = 2 + 4 + n_feat * mult * \
+                make_plan(self.table.n_bits, chunks).rows_required
+            if need <= budget:
+                return chunks
+            chunks += 1
+            if chunks > self.table.n_bits:
+                raise MemoryError(
+                    f"no chunking of {self.table.n_bits}-bit features fits "
+                    f"{num_rows} rows for {n_feat} features")
+
+    def _shard(self, feature: np.ndarray, n_cols: int) -> np.ndarray:
+        """[records] -> [banks, n_cols] record-wise shards, zero-padded."""
+        pad = self.num_banks * n_cols - feature.shape[0]
+        return np.concatenate(
+            [np.asarray(feature, np.uint64), np.zeros(pad, np.uint64)]
+        ).reshape(self.num_banks, n_cols)
 
     # ------------------------------------------------------------------ #
     def _pred(self, feat: int, op: str, x: int, save_slot: int) -> int:
@@ -138,9 +188,10 @@ class PudQueryEngine:
         return self._save_rows[save_slot]
 
     def _read(self, row: int) -> np.ndarray:
-        words = self.sub.host_read_row(row)
-        from repro.core.machine import unpack_bits
-        return unpack_bits(words, self.table.num_records).astype(bool)
+        """One broadcast row readout -> merged host bitmap [records]."""
+        words = self.sub.host_read_row(row)       # [banks, words]
+        bits = unpack_bits(words, self.sub.num_cols).astype(bool)
+        return bits.reshape(-1)[: self.table.num_records]
 
     # --------------------------- queries ------------------------------- #
     def q1(self, fi: int, x0: int, x1: int) -> np.ndarray:

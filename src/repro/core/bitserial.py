@@ -30,7 +30,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .encoding import load_binary_vector
-from .machine import PuDArch, Subarray, unpack_bits
+from .machine import BankedSubarray, PuDArch, unpack_bits
 
 
 def bitserial_op_count(n_bits: int, arch: PuDArch) -> int:
@@ -50,10 +50,15 @@ class BitSerialEngine:
     """Binary bit-plane layout + bit-serial comparison; mirrors the
     :class:`repro.core.clutch.ClutchEngine` predicate API."""
 
-    def __init__(self, sub: Subarray, values: np.ndarray, n_bits: int) -> None:
+    def __init__(self, sub: BankedSubarray, values: np.ndarray,
+                 n_bits: int) -> None:
+        """``values``: [n] (broadcast to every bank) or [banks, n] (one
+        shard per bank).  The borrow chain uses only broadcast row
+        addresses, so banked execution needs no per-bank gathers -- the
+        same scalar is compared against every bank's shard concurrently."""
         self.sub = sub
         self.n_bits = n_bits
-        self.n = int(np.asarray(values).shape[0])
+        self.n = int(np.asarray(values).shape[-1])
         self.max = (1 << n_bits) - 1
         self.base = load_binary_vector(sub, values, n_bits)
         if sub.arch is PuDArch.UNMODIFIED:

@@ -14,6 +14,16 @@ boundary cases: a_j == 2^k - 1 -> lt := const-0; a_j == 0 -> le := const-1.
 The MAJ3 form is exact because lt implies le, so (L,lt,le) never takes the
 ambiguous pattern where MAJ3 != (lt OR (le AND L)).
 
+Banked execution: ``a`` may be a *vector of scalars*, one per bank of a
+:class:`~repro.core.machine.BankedSubarray`.  The data-dependent lookups
+become per-bank gather row indices inside one broadcast command stream, so
+the per-bank PuD op count is identical to the scalar case and all banks
+compare concurrently (the paper's bank-level-parallelism axis; GBDT maps
+one instance per bank this way).  A per-bank scalar of ``-1`` denotes the
+always-true comparison ``-1 < B`` (both LUT lookups resolve to the
+constant-one row), which is how mixed boundary cases (e.g. ``>= 0``) stay
+inside the uniform broadcast stream.
+
 PuD op counts (validated in tests):
     Unmodified: 4C - 3   (C=5 -> 17, the paper's 32-bit example)
     Modified:   3C - 2   (C=5 -> 13)
@@ -27,14 +37,25 @@ from dataclasses import dataclass
 import numpy as np
 
 from .encoding import ChunkPlan, LutLayout, load_vector, make_plan
-from .machine import PuDArch, Subarray, unpack_bits
+from .machine import BankedSubarray, PuDArch, RowIdx, unpack_bits
 
 OPS = ("<", "<=", ">", ">=", "==")
 
 
-def compare_lt(sub: Subarray, layout: LutLayout, a: int) -> int:
+def _acc_home(sub: BankedSubarray) -> int:
+    return sub.T0 if sub.arch is PuDArch.MODIFIED else sub.G[0]
+
+
+def compare_lt(sub: BankedSubarray, layout: LutLayout,
+               a: int | np.ndarray) -> int:
     """Run Algorithm 1: returns the row index holding the bitmap of
-    ``a < B_i`` (over the vector encoded in ``layout``)."""
+    ``a < B_i`` (over the vector encoded in ``layout``).
+
+    ``a`` is one scalar (broadcast to all banks) or an int array [banks]
+    of per-bank scalars; entries may be ``-1`` for the always-true
+    comparison (see module docstring)."""
+    if isinstance(a, np.ndarray):
+        return _compare_lt_vec(sub, layout, a)
     plan = layout.plan
     chunks = plan.split_scalar(a)
     maxval = [(1 << k) - 1 for k in plan.widths]
@@ -50,7 +71,42 @@ def compare_lt(sub: Subarray, layout: LutLayout, a: int) -> int:
     acc = lt_row(0)
     if plan.num_chunks == 1:
         # Single-chunk Clutch: the comparison is one RowCopy (paper §4.1).
-        dst = sub.T0 if sub.arch is PuDArch.MODIFIED else sub.G[0]
+        dst = _acc_home(sub)
+        sub.rowcopy(acc, dst)
+        return dst
+    for j in range(1, plan.num_chunks):
+        acc = sub.maj3_into_acc(acc, lt_row(j), le_row(j))
+    return acc
+
+
+def _compare_lt_vec(sub: BankedSubarray, layout: LutLayout,
+                    a: np.ndarray) -> int:
+    """Vector-of-scalars Algorithm 1: per-bank gather lookups, one
+    broadcast MAJ3 merge sequence."""
+    plan = layout.plan
+    a = np.asarray(a, np.int64)
+    if a.shape != (sub.num_banks,):
+        raise ValueError(
+            f"need one scalar per bank: shape ({sub.num_banks},)")
+    if (a >= (1 << plan.n_bits)).any() or (a < -1).any():
+        raise ValueError("per-bank scalars out of range")
+    always = a < 0
+    chunks = plan.split_vector(np.where(always, 0, a).astype(np.uint64))
+    maxval = [(1 << k) - 1 for k in plan.widths]
+
+    def lt_row(j: int) -> np.ndarray:
+        r = layout.cp[j] + chunks[j].astype(np.int64)
+        r = np.where(chunks[j] == maxval[j], sub.ROW_ZERO, r)
+        return np.where(always, sub.ROW_ONE, r)
+
+    def le_row(j: int) -> np.ndarray:
+        r = layout.cp[j] + chunks[j].astype(np.int64) - 1
+        r = np.where(chunks[j] == 0, sub.ROW_ONE, r)
+        return np.where(always, sub.ROW_ONE, r)
+
+    acc: RowIdx = lt_row(0)
+    if plan.num_chunks == 1:
+        dst = _acc_home(sub)
         sub.rowcopy(acc, dst)
         return dst
     for j in range(1, plan.num_chunks):
@@ -59,7 +115,8 @@ def compare_lt(sub: Subarray, layout: LutLayout, a: int) -> int:
 
 
 def clutch_op_count(num_chunks: int, arch: PuDArch) -> int:
-    """Closed-form PuD op count of one Clutch comparison."""
+    """Closed-form PuD op count of one Clutch comparison (per bank;
+    identical for scalar and vector-of-scalars execution)."""
     if num_chunks == 1:
         return 1
     if arch is PuDArch.MODIFIED:
@@ -74,7 +131,13 @@ class PredicateResult:
 
 
 class ClutchEngine:
-    """A vector resident in one subarray, ready for arbitrary predicates.
+    """A vector resident in one bank group, ready for arbitrary predicates.
+
+    ``values`` is [n] (same vector in every bank) or [banks, n] (one shard
+    per bank).  ``predicate`` accepts one scalar (broadcast) or a per-bank
+    scalar vector; with per-bank scalars the boundary special cases are
+    folded into the uniform broadcast command stream (see module
+    docstring), so every bank executes the same op sequence.
 
     On Modified PuD, negated operators (``<``, ``<=``) use the native bulk
     NOT.  On Unmodified PuD there is no NOT, so the engine additionally
@@ -84,7 +147,7 @@ class ClutchEngine:
 
     def __init__(
         self,
-        sub: Subarray,
+        sub: BankedSubarray,
         values: np.ndarray,
         n_bits: int,
         num_chunks: int | None = None,
@@ -98,7 +161,7 @@ class ClutchEngine:
         evaluation of paper §5.1 runs in this mode."""
         self.sub = sub
         self.n_bits = n_bits
-        self.n = int(np.asarray(values).shape[0])
+        self.n = int(np.asarray(values).shape[-1])
         if plan is None:
             plan = make_plan(n_bits, num_chunks or 1)
         self.plan = plan
@@ -117,38 +180,48 @@ class ClutchEngine:
         self.max = (1 << n_bits) - 1
 
     # -------------------------------------------------------------- #
-    def _run_lt(self, a: int, complement: bool) -> int:
+    def _run_lt(self, a: int | np.ndarray, complement: bool) -> int:
         layout = self.layout_c if complement else self.layout
         assert layout is not None
         return compare_lt(self.sub, layout, a)
 
-    def predicate(self, op: str, x: int, save_to: int | None = None
-                  ) -> PredicateResult:
+    def predicate(self, op: str, x: int | np.ndarray,
+                  save_to: int | None = None) -> PredicateResult:
         """Evaluate ``B_i  <op>  x`` for every element; returns the bitmap
-        row.  ``save_to`` optionally RowCopies the result to a stable row
-        (the accumulator rows are clobbered by the next predicate)."""
-        if not 0 <= x <= self.max:
+        row.  ``x``: one scalar for all banks, or an int array [banks] of
+        per-bank scalars.  ``save_to`` optionally RowCopies the result to
+        a stable row (the accumulator rows are clobbered by the next
+        predicate)."""
+        vec = isinstance(x, np.ndarray)
+        if vec:
+            x = np.asarray(x, np.int64)
+            if (x < 0).any() or (x > self.max).any():
+                raise ValueError("per-bank scalar out of range")
+        elif not 0 <= x <= self.max:
             raise ValueError(f"scalar {x} out of range")
         before = self.sub.trace.pud_ops
         sub = self.sub
         if op == ">":        # B > x  <=>  x < B
             row = self._run_lt(x, complement=False)
         elif op == ">=":     # B >= x <=>  x <= B  <=> (x-1) < B
-            if x == 0:
+            if vec:          # x-1 == -1 encodes the always-true compare
+                row = self._run_lt(x - 1, complement=False)
+            elif x == 0:
                 row = sub.ROW_ONE
             else:
                 row = self._run_lt(x - 1, complement=False)
         elif op == "<":      # B < x  <=>  NOT(B >= x)
-            if x == 0:
+            if not vec and x == 0:
                 row = sub.ROW_ZERO
             elif sub.arch is PuDArch.MODIFIED:
+                # per-bank x-1 == -1 encodes always-true; NOT gives zeros
                 row = self._run_lt(x - 1, complement=False)
                 sub.bulk_not(row, sub.DCC0)
                 row = sub.DCC0
             else:            # MAX-x < MAX-B  <=>  B < x
                 row = self._run_lt(self.max - x, complement=True)
         elif op == "<=":     # B <= x <=>  NOT(B > x)
-            if x == self.max:
+            if not vec and x == self.max:
                 row = sub.ROW_ONE
             elif sub.arch is PuDArch.MODIFIED:
                 row = self._run_lt(x, complement=False)
@@ -173,14 +246,16 @@ class ClutchEngine:
         return PredicateResult(row, self.sub.trace.pud_ops - before)
 
     # ---------------- bitmap algebra (in-DRAM reductions) ----------- #
-    def bitmap_and(self, r1: int, r2: int) -> int:
+    def bitmap_and(self, r1: RowIdx, r2: RowIdx) -> int:
         return self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ZERO)
 
-    def bitmap_or(self, r1: int, r2: int) -> int:
+    def bitmap_or(self, r1: RowIdx, r2: RowIdx) -> int:
         return self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ONE)
 
     def read_bitmap(self, row: int) -> np.ndarray:
-        """Host readout: one DRAM row -> bool[n] (trace-counted)."""
+        """Host readout: one DRAM row -> bool bitmap (trace-counted).
+        Shape [n] on a single-bank :class:`Subarray`, [banks, n] on a
+        banked group."""
         words = self.sub.host_read_row(row)
         return unpack_bits(words, self.n).astype(bool)
 

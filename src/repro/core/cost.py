@@ -149,18 +149,22 @@ def op_latency(op: PuDOp, t: DramTimings) -> float:
     }[op]
 
 
-def wave_time(op: PuDOp, sys: SystemConfig) -> float:
-    """Time (ns) to apply one PuD primitive across *all* banks.
+def wave_time(op: PuDOp, sys: SystemConfig, banks: int | None = None
+              ) -> float:
+    """Time (ns) to apply one broadcast PuD primitive across ``banks``
+    concurrently active banks (default: every bank of a rank).
 
-    Within a channel, ACTs to the ``ranks_per_channel * banks_per_rank``
-    banks are staggered by the per-rank tFAW window (4 ACTs / tFAW) and
-    tRRD; channels are independent.  The wave completes when the last
-    bank's op finishes: stagger of the final ACT + per-bank op latency.
-    Consecutive PuD ops are data-dependent, so a sequence serializes waves.
+    Within a channel, ACTs to a rank's banks are staggered by the per-rank
+    tFAW window (4 ACTs / tFAW) and tRRD; channels/ranks are independent,
+    so only the banks sharing a rank (at most ``banks_per_rank``) bound
+    the stagger.  The wave completes when the last bank's op finishes:
+    stagger of the final ACT + per-bank op latency.  Consecutive PuD ops
+    are data-dependent, so a sequence serializes waves.
     """
     t = sys.timings
     acts = ACTS_PER_OP[op]
-    banks = sys.banks_per_rank
+    banks = sys.banks_per_rank if banks is None \
+        else min(banks, sys.banks_per_rank)
     # Per rank: ACT issue rate limited by max(tFAW/4, tRRD_L).
     act_gap = max(t.tFAW / 4.0, t.tRRD_L)
     total_acts_per_rank = acts * banks
@@ -170,20 +174,24 @@ def wave_time(op: PuDOp, sys: SystemConfig) -> float:
     return stagger + op_latency(op, t)
 
 
-def sequence_time_ns(op_counts: dict[str, int], sys: SystemConfig) -> float:
-    """Makespan (ns) of a dependent PuD op sequence across all banks."""
+def sequence_time_ns(op_counts: dict[str, int], sys: SystemConfig,
+                     banks: int | None = None) -> float:
+    """Makespan (ns) of a dependent PuD op sequence across ``banks``
+    active banks (default: all)."""
     total = 0.0
     for name, count in op_counts.items():
         op = PuDOp(name)
         if op in (PuDOp.READ, PuDOp.WRITE):
             continue  # host traffic is charged separately (transfer_time)
-        total += count * wave_time(op, sys)
+        total += count * wave_time(op, sys, banks)
     return total
 
 
-def sequence_energy_nj(op_counts: dict[str, int], sys: SystemConfig) -> float:
-    """Energy (nJ) of a PuD op sequence across all banks (paper model:
-    +22% activation energy per extra simultaneously opened row)."""
+def sequence_energy_nj(op_counts: dict[str, int], sys: SystemConfig,
+                       banks: int | None = None) -> float:
+    """Energy (nJ) of a PuD op sequence across ``banks`` active banks
+    (default: every bank of the system; paper model: +22% activation
+    energy per extra simultaneously opened row)."""
     rows_per_act = {
         PuDOp.ROWCOPY: 1,  # two single-row ACTs
         PuDOp.TRA: 3,      # one triple-row ACT
@@ -191,6 +199,7 @@ def sequence_energy_nj(op_counts: dict[str, int], sys: SystemConfig) -> float:
         PuDOp.FRAC: 1,
         PuDOp.NOT: 1,
     }
+    active = sys.total_banks if banks is None else banks
     e = 0.0
     for name, count in op_counts.items():
         op = PuDOp(name)
@@ -200,7 +209,7 @@ def sequence_energy_nj(op_counts: dict[str, int], sys: SystemConfig) -> float:
         e_act = sys.e_act_nj * (1.0 + sys.multi_act_overhead * (k - 1))
         # charge every ACT in the primitive; extra ACTs are single-row
         extra = ACTS_PER_OP[op] - 1
-        e += count * sys.total_banks * (e_act + extra * sys.e_act_nj)
+        e += count * active * (e_act + extra * sys.e_act_nj)
     return e
 
 
@@ -209,6 +218,31 @@ def transfer_time_ns(n_bytes: float, sys: SystemConfig) -> float:
 
 def transfer_energy_nj(n_bytes: float, sys: SystemConfig) -> float:
     return n_bytes * 8 * sys.e_io_pj_per_bit * 1e-3
+
+
+def trace_cost(op_counts: dict[str, int], sys: SystemConfig, *,
+               banks: int, cols_per_bank: int,
+               include_host_io: bool = True) -> "KernelCost":
+    """Cost of a *measured* machine trace: the op histogram of a
+    :class:`~repro.core.machine.CommandTrace` from a ``banks``-wide
+    :class:`~repro.core.machine.BankedSubarray` (one trace entry == one
+    broadcast wave across the group).
+
+    PuD waves go through the BLP model parameterized by the group's
+    actual bank count; READ/WRITE entries become off-chip transfers of
+    one row per bank each.  This is how the benchmarks turn functional
+    banked runs directly into latency/energy, instead of re-deriving op
+    histograms from closed forms.
+    """
+    t = sequence_time_ns(op_counts, sys, banks)
+    e = sequence_energy_nj(op_counts, sys, banks)
+    if include_host_io:
+        io_rows = op_counts.get("read", 0) + op_counts.get("write", 0)
+        io_bytes = io_rows * banks * cols_per_bank / 8
+        t += transfer_time_ns(io_bytes, sys)
+        e += transfer_energy_nj(io_bytes, sys)
+    e += sys.host_idle_power_w * t
+    return KernelCost(time_ns=t, energy_nj=e, elems=banks * cols_per_bank)
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,163 @@
+"""PuD device hierarchy: channels x ranks x banks owning bank allocation.
+
+The machine layer (:mod:`repro.core.machine`) models *one bank group* --
+a set of banks executing a broadcast command stream.  This module adds the
+device above it:
+
+  * :class:`PuDDevice` mirrors a :class:`~repro.core.cost.SystemConfig`'s
+    channel/rank/bank topology and hands out :class:`BankGroup` slices of
+    it.  Allocation is a bump pointer over the flat bank index space;
+    banks are addressed ``(channel, rank, bank)`` in row-major order, so a
+    contiguous group spans whole ranks before spilling to the next channel
+    (matching how the BLP cost model staggers ACTs per rank).
+  * Engine-to-bank placement: apps allocate their
+    :class:`~repro.core.machine.BankedSubarray` through the device
+    (``alloc_banks``), which records the placement so ``cost_summary`` can
+    turn every group's real command trace into device-level latency and
+    energy via the analytical model.
+
+Trace semantics: each group keeps its own :class:`CommandTrace`; one entry
+is one broadcast wave across that group's banks.  Groups on disjoint banks
+could overlap in time on real hardware -- ``cost_summary`` reports both
+the serialized sum and the max (perfectly-overlapped lower bound) so
+benchmarks can show the achievable range.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .machine import BankedSubarray, PuDArch
+
+
+@dataclass(frozen=True)
+class BankAddress:
+    channel: int
+    rank: int
+    bank: int
+
+
+@dataclass
+class BankGroup:
+    """A placed engine: which flat banks it owns and its machine state."""
+
+    first_bank: int
+    sub: BankedSubarray
+    label: str = ""
+
+    @property
+    def num_banks(self) -> int:
+        return self.sub.num_banks
+
+
+class PuDDevice:
+    """A whole PuD-enabled memory device (channels x ranks x banks)."""
+
+    def __init__(
+        self,
+        arch: PuDArch,
+        channels: int = 2,
+        ranks_per_channel: int = 2,
+        banks_per_rank: int = 16,
+        num_rows: int = 1024,
+        cols_per_bank: int = 65536,
+        seed: int | None = 0,
+    ) -> None:
+        self.arch = arch
+        self.channels = channels
+        self.ranks_per_channel = ranks_per_channel
+        self.banks_per_rank = banks_per_rank
+        self.num_rows = num_rows
+        self.cols_per_bank = cols_per_bank
+        self._seed = seed
+        self._next_bank = 0
+        self.groups: list[BankGroup] = []
+
+    @classmethod
+    def from_system(cls, sys_cfg, arch: PuDArch,
+                    num_rows: int = 1024) -> "PuDDevice":
+        """Build a device matching a cost-model SystemConfig topology."""
+        return cls(arch, channels=sys_cfg.channels,
+                   ranks_per_channel=sys_cfg.ranks_per_channel,
+                   banks_per_rank=sys_cfg.banks_per_rank,
+                   num_rows=num_rows, cols_per_bank=sys_cfg.cols_per_bank)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def total_banks(self) -> int:
+        return self.channels * self.ranks_per_channel * self.banks_per_rank
+
+    @property
+    def banks_free(self) -> int:
+        return self.total_banks - self._next_bank
+
+    @property
+    def parallel_cols(self) -> int:
+        """Device SIMD width when every bank computes."""
+        return self.total_banks * self.cols_per_bank
+
+    def address(self, flat_bank: int) -> BankAddress:
+        """(channel, rank, bank) of a flat bank index."""
+        if not 0 <= flat_bank < self.total_banks:
+            raise IndexError(flat_bank)
+        per_ch = self.ranks_per_channel * self.banks_per_rank
+        return BankAddress(
+            channel=flat_bank // per_ch,
+            rank=(flat_bank % per_ch) // self.banks_per_rank,
+            bank=flat_bank % self.banks_per_rank,
+        )
+
+    # ------------------------------------------------------------------ #
+    def alloc_banks(self, n: int, num_cols: int | None = None,
+                    label: str = "") -> BankedSubarray:
+        """Allocate ``n`` consecutive banks as one broadcast group and
+        return its machine state.  Raises MemoryError when the device is
+        out of banks (callers shard or queue waves above this layer)."""
+        if n < 1:
+            raise ValueError("need at least one bank")
+        if self._next_bank + n > self.total_banks:
+            raise MemoryError(
+                f"device bank budget exceeded: need {n} banks at "
+                f"{self._next_bank}, capacity {self.total_banks}")
+        sub = BankedSubarray(
+            num_banks=n, num_rows=self.num_rows,
+            num_cols=num_cols or self.cols_per_bank, arch=self.arch,
+            seed=None if self._seed is None
+            else self._seed + self._next_bank)
+        group = BankGroup(first_bank=self._next_bank, sub=sub, label=label)
+        self._next_bank += n
+        self.groups.append(group)
+        return sub
+
+    # ------------------------------------------------------------------ #
+    def cost_summary(self, sys_cfg) -> dict:
+        """Run every group's recorded trace through the analytical BLP
+        cost model.  Returns per-group and device-level time/energy:
+        ``time_serial_ns`` assumes groups execute back-to-back (shared
+        command bus), ``time_overlap_ns`` is the perfectly-overlapped
+        lower bound (disjoint banks, independent channels)."""
+        from . import cost
+
+        per_group = []
+        for g in self.groups:
+            kc = cost.trace_cost(g.sub.trace.counts(), sys_cfg,
+                                 banks=g.num_banks,
+                                 cols_per_bank=g.sub.num_cols)
+            per_group.append({
+                "label": g.label or f"banks[{g.first_bank}:"
+                                    f"{g.first_bank + g.num_banks}]",
+                "banks": g.num_banks,
+                "pud_ops": g.sub.trace.pud_ops,
+                "time_ns": kc.time_ns,
+                "energy_nj": kc.energy_nj,
+            })
+        return {
+            "groups": per_group,
+            "banks_used": self._next_bank,
+            "time_serial_ns": sum(g["time_ns"] for g in per_group),
+            "time_overlap_ns": max(
+                (g["time_ns"] for g in per_group), default=0.0),
+            "energy_nj": sum(g["energy_nj"] for g in per_group),
+        }

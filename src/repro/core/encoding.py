@@ -24,7 +24,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .machine import Subarray, pack_bits
+from .machine import BankedSubarray, pack_bits
 
 
 @dataclass(frozen=True)
@@ -93,15 +93,22 @@ def temporal_encode_planes(chunk_values: np.ndarray, k: int) -> np.ndarray:
     """Build the LUT bit-planes for one chunk.
 
     Args:
-      chunk_values: uint array [N] with the chunk's value per element.
+      chunk_values: uint array [N] (or [banks, N]) with the chunk's value
+        per element.
       k: chunk width in bits.
 
     Returns:
-      uint8 [2^k - 1, N]; plane ``r`` holds ``(r < chunk_values)`` -- i.e.
-      the temporal coding of each element's chunk value laid out vertically.
+      uint8 [..., 2^k - 1, N]; plane ``r`` holds ``(r < chunk_values)`` --
+      i.e. the temporal coding of each element's chunk value laid out
+      vertically.  Leading (bank) axes are preserved.
     """
-    r = np.arange((1 << k) - 1, dtype=np.uint64)[:, None]
-    return (r < np.asarray(chunk_values, np.uint64)[None, :]).astype(np.uint8)
+    # Chunk values are < 2^k, so compare in the narrowest dtype: uint64
+    # comparisons are ~5x slower in NumPy, and this is the hot loop of
+    # host-side conversion (paper Fig. 18a).
+    dt = np.uint8 if k <= 8 else (np.uint16 if k <= 16 else np.uint32)
+    vals = np.asarray(chunk_values).astype(dt, copy=False)
+    r = np.arange((1 << k) - 1, dtype=dt)[:, None]
+    return (r < vals[..., None, :]).view(np.uint8)
 
 
 @dataclass
@@ -113,8 +120,31 @@ class LutLayout:
     complement: bool = False     # planes encode (MAX - B) instead of B
 
 
+def _conform_values(sub: BankedSubarray, values: np.ndarray) -> np.ndarray:
+    """Normalize ``values`` to [1, num_cols] or [banks, num_cols] uint64:
+    a 1-D vector stays single-row (encoded ONCE; the machine's bulk store
+    broadcasts the packed planes to every bank), a [banks, n] shard matrix
+    is taken per bank.  Unused columns are zero-padded."""
+    values = np.asarray(values, dtype=np.uint64)
+    if values.ndim == 1:
+        values = values[None, :]
+    if values.ndim != 2 or values.shape[0] not in (1, sub.num_banks):
+        raise ValueError(
+            f"values must be [n] or [{sub.num_banks}, n], got {values.shape}")
+    if values.shape[1] > sub.num_cols:
+        raise ValueError("values must fit the subarray columns")
+    n = values.shape[1]
+    if n < sub.num_cols:  # pad unused columns with zeros
+        values = np.concatenate(
+            [values,
+             np.zeros((values.shape[0], sub.num_cols - n), np.uint64)],
+            axis=1,
+        )
+    return values
+
+
 def load_vector(
-    sub: Subarray,
+    sub: BankedSubarray,
     values: np.ndarray,
     plan: ChunkPlan,
     *,
@@ -123,46 +153,54 @@ def load_vector(
     """Encode ``values`` with chunked temporal coding and store the LUT
     bit-planes into freshly allocated subarray rows.
 
+    ``values`` is [n] (broadcast to every bank -- e.g. GBDT thresholds
+    shared by all instances) or [banks, n] (one vector shard per bank --
+    e.g. a sharded table column).  All planes of a chunk are encoded,
+    packed, and stored in one vectorized call; the WRITE trace still
+    carries one entry per row, so the host-side conversion accounting
+    (paper Fig. 18a / Fig. 21) is unchanged from row-at-a-time loading.
+
     With ``complement=True`` the planes encode ``MAX - B`` (MAX = 2^n - 1),
     which Unmodified PuD uses to derive the negated comparison operators
     without a native NOT (``B_i < a  <=>  MAX-a < MAX-B_i``).
-
-    The host-side conversion cost is accounted by the WRITE trace entries
-    (one per row), matching the paper's conversion-overhead analysis
-    (Fig. 18a / Fig. 21).
     """
-    values = np.asarray(values, dtype=np.uint64)
-    if values.ndim != 1 or values.shape[0] > sub.num_cols:
-        raise ValueError("values must be 1-D and fit the subarray columns")
+    values = _conform_values(sub, values)
     if complement:
         values = np.uint64((1 << plan.n_bits) - 1) - values
-    n = values.shape[0]
-    if n < sub.num_cols:  # pad unused columns with zeros
-        values = np.concatenate(
-            [values, np.zeros(sub.num_cols - n, np.uint64)]
-        )
     cp = []
-    for chunk_vals, k in zip(plan.split_vector(values), plan.widths):
-        start = sub.alloc((1 << k) - 1)
+    # One reusable bool plane buffer (comparisons write in place: the
+    # allocation of a fresh 8 MB output per chunk costs more than the
+    # comparison itself).
+    max_rows = max((1 << k) - 1 for k in plan.widths)
+    buf = np.empty((values.shape[0], max_rows, sub.num_cols), np.bool_)
+    # Split chunks in the narrowest dtype holding the operand (uint64
+    # shift/mask is several times slower than uint32 in NumPy).
+    wdt = np.uint32 if plan.n_bits <= 32 else np.uint64
+    vals_w = values.astype(wdt, copy=False)
+    for k, shift in zip(plan.widths, plan.shifts):
+        n_planes = (1 << k) - 1
+        start = sub.alloc(n_planes)
         cp.append(start)
-        planes = temporal_encode_planes(chunk_vals, k)
-        for r, plane in enumerate(planes):
-            sub.host_write_row(start + r, pack_bits(plane))
+        dt = np.uint8 if k <= 8 else (np.uint16 if k <= 16 else np.uint32)
+        chunk_vals = ((vals_w >> wdt(shift)) & wdt(n_planes)).astype(dt)
+        planes = buf[:, :n_planes]
+        np.less(np.arange(n_planes, dtype=dt)[None, :, None],
+                chunk_vals[:, None, :], out=planes)
+        sub.host_write_rows(start, pack_bits(planes))
     return LutLayout(plan=plan, cp=tuple(cp), complement=complement)
 
 
-def load_binary_vector(sub: Subarray, values: np.ndarray, n_bits: int) -> int:
+def load_binary_vector(sub: BankedSubarray, values: np.ndarray,
+                       n_bits: int) -> int:
     """Store plain binary bit-planes (LSB first) -- the layout used by the
-    bit-serial baseline.  Returns the starting row index."""
-    values = np.asarray(values, dtype=np.uint64)
-    if values.shape[0] < sub.num_cols:
-        values = np.concatenate(
-            [values, np.zeros(sub.num_cols - values.shape[0], np.uint64)]
-        )
+    bit-serial baseline -- via the bulk write path.  Returns the starting
+    row index."""
+    values = _conform_values(sub, values)
+    shifts = np.arange(n_bits, dtype=np.uint64)[:, None]
+    planes = ((values[..., None, :] >> shifts) & np.uint64(1)).astype(
+        np.uint8)                                       # [banks, n_bits, N]
     start = sub.alloc(n_bits)
-    for b in range(n_bits):
-        plane = ((values >> np.uint64(b)) & np.uint64(1)).astype(np.uint8)
-        sub.host_write_row(start + b, pack_bits(plane))
+    sub.host_write_rows(start, pack_bits(planes))
     return start
 
 

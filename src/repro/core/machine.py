@@ -1,4 +1,4 @@
-"""Functional model of a Processing-using-DRAM (PuD) subarray.
+"""Functional model of a Processing-using-DRAM (PuD) device.
 
 This module simulates the two PuD substrates evaluated in the paper:
 
@@ -11,25 +11,50 @@ This module simulates the two PuD substrates evaluated in the paper:
   neutralizing it, so the result equals the 3-input majority.  There is no
   native NOT; algorithms must be NOT-free (Clutch is) or keep complements.
 
-A subarray is a bit-matrix of ``num_rows`` rows x ``num_cols`` columns.  Rows
-are stored packed, 32 columns per ``uint32`` word, mirroring the vertical
-(bit-sliced) PuD data layout: element *i* of a vector lives in column *i*,
-one bit per row.
+Banked layout (the paper's primary throughput axis)
+---------------------------------------------------
+The machine state is a :class:`BankedSubarray`: a ``[banks, rows, words]``
+uint32 tensor modeling one PuD-enabled subarray in each of ``banks`` DRAM
+banks.  The host broadcasts ONE command stream to all banks; every
+primitive therefore executes as a single vectorized NumPy op across the
+bank axis (one *wave* in the cost model's tRRD/tFAW accounting).  Row
+addresses may be per-bank (``numpy`` int arrays of shape ``[banks]``):
+that is how data-dependent Clutch lookups differ per bank while the
+command *count* stays identical everywhere -- each bank's ACT simply
+targets a different row, which the BLP cost model already staggers.
 
-Every primitive appends to a command trace so the analytical cost model
-(:mod:`repro.core.cost`) can derive cycle-level latency and energy from the
-exact DRAM command sequence, and tests can assert the paper's op counts
-(e.g. 17 PuD ops for a 32-bit / 5-chunk Clutch comparison on Unmodified PuD).
+Rows are stored packed, 32 columns per ``uint32`` word, mirroring the
+vertical (bit-sliced) PuD data layout: element *i* of a bank's vector
+lives in column *i* of that bank, one bit per row.
+
+Trace semantics
+---------------
+Every primitive appends one entry to the subarray's :class:`CommandTrace`.
+One entry == one broadcast wave == ``banks`` per-bank command executions;
+per-bank op counts (what the paper reports, e.g. 17 PuD ops for a 32-bit /
+5-chunk Clutch comparison on Unmodified PuD) are therefore exactly the
+trace counts, independent of bank count.  The analytical cost model
+(:mod:`repro.core.cost`) turns trace histograms + the active bank count
+into cycle-level latency and energy.
+
+``Subarray`` remains as the single-bank special case (banks == 1) with
+the seed's 2-D ``rows`` view, so single-vector algorithms and tests are
+unchanged.
 """
 
 from __future__ import annotations
 
 import enum
+import sys
 from dataclasses import dataclass, field
+from typing import Union
 
 import numpy as np
 
 WORD_BITS = 32
+
+#: Row address operand: a broadcast row index, or per-bank indices [banks].
+RowIdx = Union[int, np.ndarray]
 
 
 class PuDArch(str, enum.Enum):
@@ -50,24 +75,29 @@ class PuDOp(str, enum.Enum):
 @dataclass
 class TraceEntry:
     op: PuDOp
-    rows: tuple[int, ...]
+    rows: tuple  # ints (broadcast) and/or [banks] int arrays (per-bank)
 
 
 @dataclass
 class CommandTrace:
-    """Ordered log of PuD primitives issued to one subarray."""
+    """Ordered log of broadcast PuD primitives issued to one bank group."""
 
     entries: list[TraceEntry] = field(default_factory=list)
 
-    def emit(self, op: PuDOp, *rows: int) -> None:
+    def emit(self, op: PuDOp, *rows: RowIdx) -> None:
         self.entries.append(TraceEntry(op, rows))
+
+    def emit_rows(self, op: PuDOp, start: int, n: int) -> None:
+        """Bulk-emit ``n`` consecutive single-row entries (host row I/O)."""
+        self.entries.extend(
+            TraceEntry(op, (r,)) for r in range(start, start + n))
 
     def count(self, op: PuDOp) -> int:
         return sum(1 for e in self.entries if e.op is op)
 
     @property
     def pud_ops(self) -> int:
-        """Number of in-DRAM PuD operations (excludes host READ/WRITE)."""
+        """Per-bank in-DRAM PuD op count (excludes host READ/WRITE)."""
         return sum(
             1 for e in self.entries if e.op not in (PuDOp.READ, PuDOp.WRITE)
         )
@@ -83,19 +113,26 @@ class CommandTrace:
 
 
 def pack_bits(bits: np.ndarray) -> np.ndarray:
-    """Pack a boolean/0-1 vector [N] into uint32 words [ceil(N/32)].
+    """Pack 0/1 bits [..., N] into uint32 words [..., ceil(N/32)].
 
     Bit *i* of the vector maps to bit ``i % 32`` of word ``i // 32``
     (little-endian within the word), matching ``jnp`` kernels in
-    :mod:`repro.kernels`.
+    :mod:`repro.kernels`.  Batched over any leading axes; the fast path
+    uses ``np.packbits`` (C speed) on little-endian hosts.
     """
-    bits = np.asarray(bits, dtype=np.uint8)
+    bits = np.asarray(bits)
+    # bool planes (comparison outputs) are already one byte per bit
+    bits = bits.view(np.uint8) if bits.dtype == np.bool_ \
+        else bits.astype(np.uint8, copy=False)
     n = bits.shape[-1]
     pad = (-n) % WORD_BITS
     if pad:
         bits = np.concatenate(
             [bits, np.zeros(bits.shape[:-1] + (pad,), np.uint8)], axis=-1
         )
+    if sys.byteorder == "little":
+        packed = np.packbits(bits, axis=-1, bitorder="little")
+        return np.ascontiguousarray(packed).view(np.uint32)
     b = bits.reshape(*bits.shape[:-1], -1, WORD_BITS).astype(np.uint32)
     shifts = np.arange(WORD_BITS, dtype=np.uint32)
     return (b << shifts).sum(axis=-1, dtype=np.uint32)
@@ -104,27 +141,37 @@ def pack_bits(bits: np.ndarray) -> np.ndarray:
 def unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
     """Inverse of :func:`pack_bits`; returns uint8 bits [..., n]."""
     words = np.asarray(words, dtype=np.uint32)
+    if sys.byteorder == "little":
+        as_bytes = np.ascontiguousarray(words).view(np.uint8)
+        bits = np.unpackbits(as_bytes, axis=-1, bitorder="little")
+        return bits[..., :n]
     shifts = np.arange(WORD_BITS, dtype=np.uint32)
     bits = (words[..., :, None] >> shifts) & np.uint32(1)
     bits = bits.reshape(*words.shape[:-1], -1)
     return bits[..., :n].astype(np.uint8)
 
 
-class Subarray:
-    """One PuD-enabled DRAM subarray with a command trace.
+class BankedSubarray:
+    """A group of ``num_banks`` PuD-enabled subarrays driven by one
+    broadcast command stream, with a shared command trace.
 
-    Row-space conventions (matching SIMDRAM/Ambit):
+    Row-space conventions (matching SIMDRAM/Ambit, identical per bank):
       * ``ROW_ZERO`` / ``ROW_ONE``: constant rows (all 0s / all 1s).
       * Modified: rows ``T0..T2`` are the designated compute rows for TRA;
         ``DCC0`` is the dual-contact row used by NOT.
       * Unmodified: rows ``G0..G3`` are a fixed 4-row activation group
         (hierarchical-decoder constraint); ``Frac`` targets a group member.
+
+    Any primitive's source row operand may be a ``[banks]`` int array for
+    per-bank (data-dependent) addressing; destination rows are always
+    broadcast, keeping all banks' row maps congruent.
     """
 
     NUM_RESERVED = 8  # T0,T1,T2 / G0..G3, DCC0, and the two constant rows
 
     def __init__(
         self,
+        num_banks: int = 1,
         num_rows: int = 1024,
         num_cols: int = 65536,
         arch: PuDArch = PuDArch.UNMODIFIED,
@@ -132,6 +179,9 @@ class Subarray:
     ) -> None:
         if num_cols % WORD_BITS:
             raise ValueError("num_cols must be a multiple of 32")
+        if num_banks < 1:
+            raise ValueError("need at least one bank")
+        self.num_banks = num_banks
         self.num_rows = num_rows
         self.num_cols = num_cols
         self.num_words = num_cols // WORD_BITS
@@ -139,15 +189,17 @@ class Subarray:
         rng = np.random.default_rng(seed)
         # DRAM content is undefined at power-up; randomize to catch bugs
         # that rely on zero-initialized rows.
-        self.rows = rng.integers(
-            0, 2**32, size=(num_rows, self.num_words), dtype=np.uint32
+        self.state = rng.integers(
+            0, 2**32, size=(num_banks, num_rows, self.num_words),
+            dtype=np.uint32,
         )
         self.trace = CommandTrace()
+        self._bidx = np.arange(num_banks)
         # Reserved row indices (placed at the top of the subarray).
         self.ROW_ZERO = num_rows - 1
         self.ROW_ONE = num_rows - 2
-        self.rows[self.ROW_ZERO] = 0
-        self.rows[self.ROW_ONE] = 0xFFFFFFFF
+        self.state[:, self.ROW_ZERO] = 0
+        self.state[:, self.ROW_ONE] = 0xFFFFFFFF
         if arch is PuDArch.MODIFIED:
             self.T0, self.T1, self.T2 = num_rows - 3, num_rows - 4, num_rows - 5
             self.DCC0 = num_rows - 6
@@ -158,10 +210,23 @@ class Subarray:
         self._alloc_ptr = 0  # bump allocator for data/LUT rows
 
     # ------------------------------------------------------------------ #
+    # Row addressing
+    # ------------------------------------------------------------------ #
+    def _fetch(self, idx: RowIdx) -> np.ndarray:
+        """Row content [banks, words]; per-bank gather for array ``idx``."""
+        if isinstance(idx, np.ndarray):
+            if idx.shape != (self.num_banks,):
+                raise ValueError(
+                    f"per-bank row index must have shape ({self.num_banks},)")
+            return self.state[self._bidx, idx.astype(np.int64)]
+        return self.state[:, idx]
+
+    # ------------------------------------------------------------------ #
     # Row allocation
     # ------------------------------------------------------------------ #
     def alloc(self, n: int) -> int:
-        """Allocate ``n`` consecutive data rows; returns the first index."""
+        """Allocate ``n`` consecutive data rows (same index in every
+        bank); returns the first index."""
         start = self._alloc_ptr
         if start + n > self.num_rows - self.NUM_RESERVED:
             raise MemoryError(
@@ -176,47 +241,64 @@ class Subarray:
         return self.num_rows - self.NUM_RESERVED - self._alloc_ptr
 
     # ------------------------------------------------------------------ #
-    # Host-side (off-chip) accessors -- modeled as row READ/WRITE traffic
+    # Host-side (off-chip) accessors -- modeled as row READ/WRITE traffic.
+    # One trace entry == that row transferred for every bank in the group.
     # ------------------------------------------------------------------ #
     def host_write_row(self, idx: int, words: np.ndarray) -> None:
-        self.rows[idx] = np.asarray(words, dtype=np.uint32)
+        """Write one row; ``words`` is [words] (broadcast to all banks)
+        or [banks, words]."""
+        self.state[:, idx] = np.asarray(words, dtype=np.uint32)
         self.trace.emit(PuDOp.WRITE, idx)
 
+    def host_write_rows(self, start: int, words: np.ndarray) -> None:
+        """Bulk write of consecutive rows in one vectorized store.
+
+        ``words``: [rows, words] (broadcast across banks) or
+        [banks, rows, words].  Emits one WRITE trace entry per row --
+        identical off-chip traffic accounting to row-at-a-time writes.
+        """
+        words = np.asarray(words, dtype=np.uint32)
+        n = words.shape[-2]
+        self.state[:, start:start + n] = words
+        self.trace.emit_rows(PuDOp.WRITE, start, n)
+
     def host_read_row(self, idx: int) -> np.ndarray:
+        """Read one row from every bank -> [banks, words]."""
         self.trace.emit(PuDOp.READ, idx)
-        return self.rows[idx].copy()
+        return self.state[:, idx].copy()
 
     def peek(self, idx: int) -> np.ndarray:
         """Debug view of a row without emitting trace traffic."""
-        return self.rows[idx].copy()
+        return self.state[:, idx].copy()
 
     # ------------------------------------------------------------------ #
-    # PuD primitives
+    # PuD primitives (one broadcast wave across all banks each)
     # ------------------------------------------------------------------ #
-    def rowcopy(self, src: int, dst: int) -> None:
-        """In-subarray bulk copy (RowClone-style back-to-back activation)."""
-        if src == dst:
+    def rowcopy(self, src: RowIdx, dst: int) -> None:
+        """In-subarray bulk copy (RowClone-style back-to-back activation).
+        ``src`` may be per-bank (data-dependent LUT lookups)."""
+        if not isinstance(src, np.ndarray) and src == dst:
             return
-        self.rows[dst] = self.rows[src]
+        self.state[:, dst] = self._fetch(src)
         if self._frac_row == dst:
             self._frac_row = None
         self.trace.emit(PuDOp.ROWCOPY, src, dst)
 
-    def bulk_not(self, src: int, dst: int) -> None:
+    def bulk_not(self, src: RowIdx, dst: int) -> None:
         if self.arch is not PuDArch.MODIFIED:
             raise RuntimeError("bulk NOT requires dual-contact cells "
                                "(Modified PuD only)")
-        self.rows[dst] = ~self.rows[src]
+        self.state[:, dst] = ~self._fetch(src)
         self.trace.emit(PuDOp.NOT, src, dst)
 
     def tra(self) -> None:
         """Triple-row activation: MAJ3(T0,T1,T2) -> written to all three."""
         if self.arch is not PuDArch.MODIFIED:
             raise RuntimeError("TRA requires Modified (SIMDRAM) PuD")
-        a, b, c = (self.rows[r] for r in (self.T0, self.T1, self.T2))
+        a, b, c = (self.state[:, r] for r in (self.T0, self.T1, self.T2))
         maj = (a & b) | (b & c) | (a & c)
         for r in (self.T0, self.T1, self.T2):
-            self.rows[r] = maj
+            self.state[:, r] = maj
         self.trace.emit(PuDOp.TRA, self.T0, self.T1, self.T2)
 
     def frac(self, group_slot: int) -> None:
@@ -236,17 +318,17 @@ class Subarray:
             raise RuntimeError("APA without a preceding Frac: result would "
                                "be a 4-input majority (undefined tie)")
         live = [r for r in self.G if r != self._frac_row]
-        a, b, c = (self.rows[r] for r in live)
+        a, b, c = (self.state[:, r] for r in live)
         maj = (a & b) | (b & c) | (a & c)
         for r in self.G:
-            self.rows[r] = maj
+            self.state[:, r] = maj
         self._frac_row = None
         self.trace.emit(PuDOp.APA, *self.G)
 
     # ------------------------------------------------------------------ #
     # Composite MAJ3 helper used by the algorithms
     # ------------------------------------------------------------------ #
-    def maj3_into_acc(self, acc: int, x: int, y: int) -> int:
+    def maj3_into_acc(self, acc: RowIdx, x: RowIdx, y: RowIdx) -> int:
         """Compute MAJ3(rows[acc], rows[x], rows[y]) using the substrate's
         native mechanism; returns the row index now holding the result.
 
@@ -257,19 +339,51 @@ class Subarray:
         Unmodified: the accumulator lives in G[0] (previous APA left the
                     result there); copies x,y into G[1],G[2], Fracs G[3],
                     fires APA.  4 PuD ops per call (+1 initial staging copy).
+
+        Per-bank row arrays are staged with gather RowCopies, so the
+        broadcast command count is the same as the scalar-address case.
         """
+        acc_is_vec = isinstance(acc, np.ndarray)
         if self.arch is PuDArch.MODIFIED:
-            if acc != self.T0:
+            if acc_is_vec or acc != self.T0:
                 self.rowcopy(acc, self.T0)
             self.rowcopy(x, self.T1)
             self.rowcopy(y, self.T2)
             self.tra()
             return self.T0
         else:
-            if acc != self.G[0]:
+            if acc_is_vec or acc != self.G[0]:
                 self.rowcopy(acc, self.G[0])
             self.rowcopy(x, self.G[1])
             self.rowcopy(y, self.G[2])
             self.frac(3)
             self.apa()
             return self.G[0]
+
+
+class Subarray(BankedSubarray):
+    """Single-bank view of :class:`BankedSubarray` (the seed's machine).
+
+    Keeps the original 2-D API: ``rows`` is the ``[num_rows, num_words]``
+    state of the only bank, and host reads return 1-D word vectors.
+    """
+
+    def __init__(
+        self,
+        num_rows: int = 1024,
+        num_cols: int = 65536,
+        arch: PuDArch = PuDArch.UNMODIFIED,
+        seed: int | None = 0,
+    ) -> None:
+        super().__init__(1, num_rows, num_cols, arch, seed)
+
+    @property
+    def rows(self) -> np.ndarray:
+        """2-D [num_rows, num_words] view of the single bank's state."""
+        return self.state[0]
+
+    def host_read_row(self, idx: int) -> np.ndarray:
+        return super().host_read_row(idx)[0]
+
+    def peek(self, idx: int) -> np.ndarray:
+        return super().peek(idx)[0]

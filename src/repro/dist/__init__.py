@@ -1,0 +1,10 @@
+"""Distribution layer: sharding-spec utilities, gradient compression,
+compressed data-parallel training, sequence-parallel flash decode, and
+collective pipeline parallelism.
+
+Everything here is mesh-agnostic: functions take an explicit ``Mesh`` (or
+read the ambient mesh context) so the same code path runs on 1 host CPU
+device in tests and on the 512-chip production mesh in the dry-run.
+"""
+
+from . import compression, ddp, pipeline, sharding, sp_decode  # noqa: F401

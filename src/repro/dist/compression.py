@@ -1,0 +1,28 @@
+"""Gradient compression for bandwidth-starved data parallelism.
+
+Symmetric per-tensor int8 quantization: ``q = round(g / scale)`` with
+``scale = max|g| / 127``, so the reconstruction error is bounded by
+``scale / 2`` elementwise.  Used by :mod:`repro.dist.ddp` with error
+feedback (the residual is carried to the next step), which keeps SGD/Adam
+convergence intact despite the 4x payload reduction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """float tensor -> (int8 tensor, f32 scalar scale)."""
+    g = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    scale = amax / INT8_MAX
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(g / safe), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

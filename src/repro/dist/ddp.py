@@ -1,0 +1,58 @@
+"""Data-parallel training step with error-feedback gradient compression.
+
+The step shards the batch over ``axis`` (GSPMD inserts the gradient
+all-reduce) and, with ``compress=True``, passes the reduced gradients
+through int8 quantization with an error-feedback accumulator:
+
+    t        = g + err          # re-inject last step's rounding residual
+    g_hat    = dequantize(quantize(t))
+    err'     = t - g_hat
+
+modeling the payload a compressed all-reduce would carry.  Error feedback
+makes the compression unbiased over time, which is what keeps convergence
+indistinguishable from fp32 DDP at these scales (validated in
+``tests/test_dist.py::test_compressed_ddp_learns_subprocess``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm as M
+from repro.train import optimizer as O
+
+from .compression import dequantize, quantize
+from .sharding import fit
+
+
+def init_error_state(params):
+    """Zero error-feedback residuals, one per parameter leaf (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_ddp_step(cfg, opt_cfg: O.OptConfig, mesh, axis: str,
+                  compress: bool = False):
+    """Returns jitted ``step(params, opt_state, err, batch) ->
+    (params, opt_state, err, loss)``; ``batch`` is an unsharded global
+    batch whose leading dim is sharded over ``axis`` inside the step."""
+
+    def step(params, opt_state, err, batch):
+        batch = {
+            k: jax.lax.with_sharding_constraint(
+                v, NamedSharding(mesh, fit(P(axis), v.shape, mesh)))
+            for k, v in batch.items()
+        }
+        loss, grads = jax.value_and_grad(
+            lambda p: M.forward_loss(cfg, p, batch))(params)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if compress:
+            total = jax.tree.map(jnp.add, grads, err)
+            grads = jax.tree.map(lambda t: dequantize(*quantize(t)), total)
+            err = jax.tree.map(jnp.subtract, total, grads)
+        params, opt_state, _ = O.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, err, loss
+
+    return jax.jit(step)

@@ -1,0 +1,103 @@
+"""PartitionSpec utilities shared by the trainer, dry-run and serving.
+
+The central problem these helpers solve: logical specs like
+``P(("pod", "data"), "model")`` are written once per parameter tree, but a
+concrete array may not divide the mesh axes (tiny smoke models, odd head
+counts, microbatch leading dims).  ``fit`` shrinks a spec to what the
+array/mesh pair actually supports instead of forcing every call site to
+special-case its shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    # Works for jax.sharding.Mesh (shape is an OrderedDict) and for test
+    # doubles exposing a plain ``shape`` dict.
+    return dict(mesh.shape)
+
+
+def fit(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Largest prefix of ``spec`` that evenly divides ``shape`` on ``mesh``.
+
+    Per dimension, axis names are kept left-to-right while their cumulative
+    mesh-axis product divides the dimension size; the first non-dividing
+    axis drops the rest of that dimension's names.  A dropped dimension
+    becomes ``None`` (replicated).  Dimensions beyond ``len(spec)`` are
+    replicated.
+    """
+    sizes = _axis_sizes(mesh)
+    entries: list[Any] = []
+    spec_t = tuple(spec)
+    for i, dim in enumerate(shape):
+        entry = spec_t[i] if i < len(spec_t) else None
+        if entry is None:
+            entries.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        keep: list[str] = []
+        prod = 1
+        for name in names:
+            size = sizes.get(name, 1)
+            if dim % (prod * size) != 0:
+                break
+            keep.append(name)
+            prod *= size
+        if not keep:
+            entries.append(None)
+        elif len(keep) == 1:
+            entries.append(keep[0])
+        elif len(keep) == len(names) and not isinstance(entry, str):
+            entries.append(entry)   # preserve the original tuple object
+        else:
+            entries.append(tuple(keep))
+    return P(*entries)
+
+
+def shardings(mesh, spec_tree, tree):
+    """NamedSharding tree for ``tree`` (arrays or ShapeDtypeStructs),
+    fitting each leaf's logical spec to its concrete shape."""
+    return jax.tree.map(
+        lambda spec, leaf: NamedSharding(mesh, fit(spec, leaf.shape, mesh)),
+        spec_tree, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _ambient_mesh():
+    """The mesh installed by ``with mesh:`` (empty mesh if none)."""
+    from jax._src.mesh import thread_resources
+
+    return thread_resources.env.physical_mesh
+
+
+def constrain(x, spec: P, allow_uneven: bool = False):
+    """``with_sharding_constraint`` against the ambient mesh context.
+
+    No-op outside a mesh context, so model code can annotate layouts
+    unconditionally.  ``allow_uneven=True`` keeps axis names even when they
+    do not divide the dimension (GSPMD pads); otherwise the spec is
+    ``fit`` to the array first.
+    """
+    mesh = _ambient_mesh()
+    if mesh.empty:
+        return x
+    if allow_uneven:
+        sizes = _axis_sizes(mesh)
+
+        def known(entry):
+            if entry is None:
+                return None
+            names = (entry,) if isinstance(entry, str) else tuple(entry)
+            kept = tuple(n for n in names if n in sizes)
+            if not kept:
+                return None
+            return kept[0] if len(kept) == 1 else kept
+
+        spec = P(*(known(e) for e in tuple(spec)))
+    else:
+        spec = fit(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

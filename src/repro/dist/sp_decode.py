@@ -1,0 +1,98 @@
+"""Sequence-parallel flash decode (the ``long_500k`` B=1 cell).
+
+At 500k context with batch 1, the KV cache is the only tensor large enough
+to shard, so it is laid out with the *sequence* dimension split over every
+mesh axis (see ``lm.cache_specs`` when ``cfg.sp_decode``).  The decode
+step then:
+
+  1. writes the new K/V at ``pos`` with a dynamic-update-slice (GSPMD
+     routes the write to the owning shard -- no gather of the cache), and
+  2. computes attention with a chunked online-softmax (flash) recurrence
+     over sequence blocks, carrying (running max, normalizer, weighted
+     accumulator), so no [S]-sized score tensor is ever materialized
+     unsharded.
+
+Per-step collectives are O(B * H * dh): the partial accumulators, not the
+cache.  (Measured HARMFUL at decode_32k where batch=128 already fills the
+mesh; gated to the B=1 long-context cell in ``dryrun.apply_variant``.)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .sharding import constrain
+
+_NEG = -2.0e38
+_BLOCK = 512
+
+
+def _softcap(x, cap):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def sp_flash_decode(cfg, q, cache_k, cache_v, k1, v1, pos):
+    """One-token decode against a sequence-sharded flat KV cache.
+
+    q: [B, 1, H, dh]; cache_k/v: [B, S, KV*dh]; k1/v1: [B, 1, KV*dh];
+    pos: scalar int32 position being written/attended.
+    Returns (attn_out [B, 1, H*dh], new_cache_k, new_cache_v).
+    """
+    b, _, h, dh = q.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    s_max = cache_k.shape[1]
+    seq_spec = P(None, ("data", "model"), None)
+
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k1.astype(cache_k.dtype), (0, pos, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v1.astype(cache_v.dtype), (0, pos, 0))
+    cache_k = constrain(cache_k, seq_spec, allow_uneven=True)
+    cache_v = constrain(cache_v, seq_spec, allow_uneven=True)
+
+    blk = min(_BLOCK, s_max)
+    pad = (-s_max) % blk
+    kh = cache_k.reshape(b, s_max, kv, dh)
+    vh = cache_v.reshape(b, s_max, kv, dh)
+    valid = jnp.arange(s_max) <= pos
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    n_blk = (s_max + pad) // blk
+    # scan carries run over [B, KV, G, ...]; xs have the block axis leading
+    kh = jnp.moveaxis(kh.reshape(b, n_blk, blk, kv, dh), 1, 0)
+    vh = jnp.moveaxis(vh.reshape(b, n_blk, blk, kv, dh), 1, 0)
+    valid = valid.reshape(n_blk, blk)
+    qg = q.reshape(b, kv, g, dh).astype(jnp.float32)
+    inv_sqrt = 1.0 / math.sqrt(dh)
+
+    def block(carry, xs):
+        m, l, acc = carry
+        kb, vb, vb_mask = xs
+        s = jnp.einsum("bkgd,btkd->bkgt", qg,
+                       kb.astype(jnp.float32)) * inv_sqrt
+        s = _softcap(s, cfg.attn_softcap)
+        s = jnp.where(vb_mask[None, None, None, :], s, _NEG)
+        m2 = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m2)
+        p = jnp.exp(s - m2[..., None])
+        l2 = l * alpha + p.sum(-1)
+        acc2 = acc * alpha[..., None] + jnp.einsum(
+            "bkgt,btkd->bkgd", p, vb.astype(jnp.float32))
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((b, kv, g), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), (kh, vh, valid))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(b, 1, h * dh).astype(q.dtype)
+    return out, cache_k, cache_v

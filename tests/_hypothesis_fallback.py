@@ -1,0 +1,124 @@
+"""Minimal deterministic stand-in for ``hypothesis``, used ONLY when the
+real package is not installed (see ``conftest.py``).
+
+The real dependency is declared in ``pyproject.toml`` (dev extra); this
+fallback exists so the test suite still *collects and runs* in hermetic
+environments where installing packages is not possible.  It implements
+just the surface this repo's tests use -- ``given``, ``settings`` and the
+``integers / floats / lists / sampled_from / data`` strategies -- drawing
+examples from a seeded ``numpy`` RNG, so runs are reproducible but do NOT
+provide hypothesis' shrinking or database features.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw_fn, name="strategy"):
+        self._draw = draw_fn
+        self._name = name
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"<fallback {self._name}>"
+
+
+class _DataMarker(_Strategy):
+    """Placeholder for ``st.data()``; resolved per-example to a
+    :class:`_DataObject` bound to that example's RNG."""
+
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng), "data()")
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value, max_value, width=64, **_kw):
+        def draw(rng):
+            x = float(rng.uniform(min_value, max_value))
+            return float(np.float32(x)) if width == 32 else x
+        return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw, f"lists(..., {min_size}, {max_size})")
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                         "sampled_from(...)")
+
+    @staticmethod
+    def data():
+        return _DataMarker()
+
+
+st = strategies
+
+
+def settings(deadline=None, max_examples=DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(n):
+                rng = np.random.default_rng((seed, i))
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **drawn_kw, **kwargs)
+
+        # drop the generated params from the signature so pytest does not
+        # expect fixtures for them
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_gen = len(arg_strategies)
+        kept = params[:len(params) - n_gen] if n_gen else params
+        kept = [p for p in kept if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return deco

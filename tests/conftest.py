@@ -4,3 +4,15 @@ import sys
 # Tests must see the real host device count (1), NOT the dry-run's 512 —
 # never set xla_force_host_platform_device_count here (per spec).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis when available (declared as a dev dep in
+# pyproject.toml).  In hermetic environments without it, register the
+# deterministic fallback BEFORE test modules import `hypothesis`.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback as _hf
+
+    sys.modules.setdefault("hypothesis", _hf)
+    sys.modules.setdefault("hypothesis.strategies", _hf.strategies)

@@ -1,0 +1,316 @@
+"""Banked machine / device-hierarchy tests: sharded queries beyond one
+subarray's capacity, batched GBDT over per-bank scalars, broadcast-trace
+op-count invariants, the device placement layer, and the bulk LUT-load
+path."""
+
+import numpy as np
+import pytest
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.clutch import ClutchEngine, clutch_op_count
+from repro.core.device import PuDDevice
+from repro.core.encoding import load_binary_vector, load_vector, make_plan
+from repro.core.machine import (
+    BankedSubarray,
+    PuDArch,
+    PuDOp,
+    Subarray,
+    pack_bits,
+    unpack_bits,
+)
+
+ARCHS = [PuDArch.MODIFIED, PuDArch.UNMODIFIED]
+
+
+# ------------------- banked machine primitives ------------------------ #
+
+def test_banked_rowcopy_gather_per_bank():
+    sub = BankedSubarray(num_banks=4, num_rows=64, num_cols=64,
+                         arch=PuDArch.MODIFIED)
+    base = sub.alloc(4)
+    for r in range(4):
+        sub.host_write_row(base + r, np.full((4, 2), r, np.uint32))
+    idx = np.array([3, 1, 0, 2])
+    dst = sub.alloc(1)
+    sub.rowcopy(idx, dst)
+    got = sub.peek(dst)[:, 0]
+    np.testing.assert_array_equal(got, idx.astype(np.uint32))
+
+
+def test_banked_broadcast_trace_counts_independent_of_banks():
+    """One broadcast wave == one trace entry, regardless of bank count."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 16, 256, dtype=np.uint64)
+    counts = {}
+    for banks in (1, 8):
+        sub = BankedSubarray(num_banks=banks, num_rows=1024, num_cols=4096,
+                             arch=PuDArch.UNMODIFIED)
+        eng = ClutchEngine(sub, vals, 16, num_chunks=4,
+                           support_negated=False)
+        sub.trace.clear()
+        eng.predicate(">", 12345)
+        counts[banks] = sub.trace.pud_ops
+    assert counts[1] == counts[8] == clutch_op_count(4, PuDArch.UNMODIFIED)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_vector_of_scalars_matches_per_bank_reference(arch):
+    """Per-bank scalars (gather lookups) against per-bank value shards,
+    including the boundary scalars 0 and MAX in the mix."""
+    rng = np.random.default_rng(7)
+    banks, n, n_bits = 6, 128, 16
+    vals = rng.integers(0, 1 << n_bits, (banks, n), dtype=np.uint64)
+    sub = BankedSubarray(num_banks=banks, num_rows=2048, num_cols=4096,
+                         arch=arch)
+    eng = ClutchEngine(sub, vals, n_bits, num_chunks=4)
+    mx = (1 << n_bits) - 1
+    scalars = np.array([0, mx, 1, mx - 1, 777, int(vals[5, 0])])
+    for op, fn in [("<", np.less), ("<=", np.less_equal),
+                   (">", np.greater), (">=", np.greater_equal),
+                   ("==", np.equal)]:
+        res = eng.predicate(op, scalars)
+        got = eng.read_bitmap(res.row)
+        want = fn(vals, scalars[:, None])
+        np.testing.assert_array_equal(got, want, err_msg=op)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_vector_scalar_op_count_matches_closed_form(arch):
+    """The broadcast command stream with per-bank scalars costs exactly
+    the scalar closed form per bank -- including boundary scalars."""
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 1 << 16, (4, 64), dtype=np.uint64)
+    for chunks in (1, 2, 4):
+        sub = BankedSubarray(num_banks=4, num_rows=65600 if chunks == 1
+                             else 2048, num_cols=2048, arch=arch)
+        eng = ClutchEngine(sub, vals, 16, num_chunks=chunks,
+                           support_negated=False)
+        sub.trace.clear()
+        eng.predicate(">", np.array([0, 65535, 123, 45678]))
+        assert sub.trace.pud_ops == clutch_op_count(chunks, arch)
+
+
+# --------------------- sharded predicate engine ----------------------- #
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("method", ["clutch", "bitserial"])
+def test_sharded_queries_beyond_one_subarray(arch, method):
+    """>65536 records forces a multi-bank shard; Q1-Q5 must equal the
+    NumPy references after the host-side merge."""
+    t = P.Table.generate(70_000, 8, seed=3)
+    e = P.PudQueryEngine(t, arch, method)
+    assert e.num_banks > 1
+    mx = (1 << 8) - 1
+    qa = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4, y1=3 * mx // 4)
+    assert (e.q1(0, mx // 8, mx // 2) ==
+            P.reference_q1(t, 0, mx // 8, mx // 2)).all()
+    assert (e.q2(**qa) == P.reference_q2(t, **qa)).all()
+    assert e.q3(**qa) == P.reference_q3(t, **qa)
+    assert abs(e.q4(fk=2, **qa) - P.reference_q4(t, 2, **qa)) < 1e-9
+    assert e.q5(fl=3, fk=2, **qa) == P.reference_q5(t, 3, 2, **qa)
+
+
+def test_sharded_queries_million_records():
+    """Acceptance: a 1,000,000-record table, sharded across 16 banks,
+    answers Q1-Q5 identically to the references."""
+    t = P.Table.generate(1_000_000, 8, seed=11)
+    e = P.PudQueryEngine(t, PuDArch.MODIFIED, "clutch")
+    assert e.num_banks == 16
+    mx = (1 << 8) - 1
+    qa = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4, y1=3 * mx // 4)
+    assert (e.q1(0, mx // 8, mx // 2) ==
+            P.reference_q1(t, 0, mx // 8, mx // 2)).all()
+    assert (e.q2(**qa) == P.reference_q2(t, **qa)).all()
+    assert e.q3(**qa) == P.reference_q3(t, **qa)
+    assert abs(e.q4(fk=2, **qa) - P.reference_q4(t, 2, **qa)) < 1e-9
+    assert e.q5(fl=3, fk=2, **qa) == P.reference_q5(t, 3, 2, **qa)
+
+
+def test_sharded_query_op_count_matches_single_bank():
+    """Sharding multiplies column parallelism, not command count: the
+    broadcast Q2 stream is the same length at 1 bank and at many."""
+    ops = {}
+    for n in (2_000, 70_000):
+        t = P.Table.generate(n, 8, seed=5)
+        e = P.PudQueryEngine(t, PuDArch.MODIFIED, "clutch")
+        e.sub.trace.clear()
+        mx = 255
+        e.q2(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4, y1=3 * mx // 4)
+        ops[n] = e.sub.trace.pud_ops
+    assert ops[2_000] == ops[70_000]
+
+
+# ------------------------- batched GBDT -------------------------------- #
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_gbdt_batched_inference_64_instances(arch):
+    """Acceptance: a 64-instance batch in ONE broadcast wave across 64
+    banks matches reference_predict, with per-instance op counts equal to
+    the closed form."""
+    forest = G.ObliviousForest.random(num_trees=40, depth=6,
+                                      num_features=5, n_bits=8, seed=9)
+    rng = np.random.default_rng(13)
+    x = rng.integers(0, 256, (64, 5), dtype=np.uint64)
+    eng = G.GbdtPudEngine(forest, arch, num_banks=64)
+    eng.sub.trace.clear()
+    got = eng.infer(x)
+    np.testing.assert_allclose(got, G.reference_predict(forest, x),
+                               atol=1e-3)
+    assert eng.ops_per_instance == G.gbdt_ops_per_instance(
+        forest, eng.num_chunks, arch)
+    # one wave: exactly one broadcast schedule + one row readout
+    assert eng.sub.trace.pud_ops == eng.ops_per_instance
+    assert eng.sub.trace.count(PuDOp.READ) == 1
+
+
+def test_gbdt_batched_equals_sequential_and_ragged_tail():
+    forest = G.ObliviousForest.random(num_trees=24, depth=5,
+                                      num_features=4, n_bits=16, seed=2)
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 1 << 16, (19, 4), dtype=np.uint64)  # ragged: 19 % 8
+    batched = G.GbdtPudEngine(forest, PuDArch.UNMODIFIED, num_banks=8)
+    single = G.GbdtPudEngine(forest, PuDArch.UNMODIFIED, num_banks=1)
+    np.testing.assert_allclose(batched.infer(x), single.infer(x), atol=1e-5)
+
+
+def test_gbdt_mask_write_counts_unchanged_by_bulk_path():
+    """The bulk mask/threshold loads must emit exactly one WRITE per row
+    (same off-chip accounting as the seed's per-row loop)."""
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=6, n_bits=8, seed=0)
+    eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=4)
+    plan = make_plan(8, eng.num_chunks)
+    want = plan.rows_required + forest.num_features   # LUT planes + masks
+    assert eng.sub.trace.count(PuDOp.WRITE) == want
+
+
+# ---------------------- bulk load equivalence -------------------------- #
+
+def test_bulk_load_vector_matches_per_row_reference():
+    """The vectorized loader writes bit-identical rows and the same WRITE
+    trace count as the seed's per-row loop."""
+    rng = np.random.default_rng(4)
+    vals = rng.integers(0, 1 << 16, 512, dtype=np.uint64)
+    plan = make_plan(16, 4)
+
+    fast = Subarray(num_rows=1024, num_cols=512, arch=PuDArch.MODIFIED)
+    layout = load_vector(fast, vals, plan)
+
+    slow = Subarray(num_rows=1024, num_cols=512, arch=PuDArch.MODIFIED)
+    from repro.core.encoding import temporal_encode_planes
+    cp = []
+    for chunk_vals, k in zip(plan.split_vector(
+            np.pad(vals, (0, 0))), plan.widths):
+        start = slow.alloc((1 << k) - 1)
+        cp.append(start)
+        planes = temporal_encode_planes(chunk_vals, k)
+        for r, plane in enumerate(planes):
+            slow.host_write_row(start + r, pack_bits(plane))
+    assert tuple(cp) == layout.cp
+    np.testing.assert_array_equal(
+        fast.rows[:plan.rows_required], slow.rows[:plan.rows_required])
+    assert fast.trace.count(PuDOp.WRITE) == slow.trace.count(PuDOp.WRITE) \
+        == plan.rows_required
+
+
+def test_bulk_binary_load_write_counts_and_content():
+    rng = np.random.default_rng(6)
+    vals = rng.integers(0, 1 << 8, (3, 128), dtype=np.uint64)
+    sub = BankedSubarray(num_banks=3, num_rows=64, num_cols=128,
+                         arch=PuDArch.MODIFIED)
+    start = load_binary_vector(sub, vals, 8)
+    assert sub.trace.count(PuDOp.WRITE) == 8
+    for b in range(8):
+        got = unpack_bits(sub.peek(start + b), 128)
+        np.testing.assert_array_equal(got, (vals >> np.uint64(b)) & 1)
+
+
+# --------------------------- device layer ------------------------------ #
+
+def test_device_placement_and_addressing():
+    dev = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=2,
+                    banks_per_rank=16)
+    assert dev.total_banks == 64
+    s1 = dev.alloc_banks(16, num_cols=4096, label="a")
+    s2 = dev.alloc_banks(32, num_cols=4096, label="b")
+    assert (s1.num_banks, s2.num_banks) == (16, 32)
+    assert dev.banks_free == 16
+    addr = dev.address(40)       # second channel, rank 0, bank 8
+    assert (addr.channel, addr.rank, addr.bank) == (1, 0, 8)
+    with pytest.raises(MemoryError):
+        dev.alloc_banks(17)
+
+
+def test_device_cost_summary_from_real_traces():
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=4, n_bits=8, seed=1)
+    eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=16,
+                          device=dev)
+    rng = np.random.default_rng(0)
+    eng.infer(rng.integers(0, 256, (16, 4), dtype=np.uint64))
+    summary = dev.cost_summary(cost.DESKTOP)
+    assert summary["banks_used"] == 16
+    (grp,) = summary["groups"]
+    assert grp["banks"] == 16 and grp["time_ns"] > 0
+    assert summary["energy_nj"] > 0
+
+
+def test_device_no_bank_leak_on_chunk_retry():
+    """A config that needs chunk-bumping to fit must size itself BEFORE
+    allocating device banks -- exactly one group, no dead allocations."""
+    dev = PuDDevice(PuDArch.UNMODIFIED, channels=1, ranks_per_channel=1,
+                    banks_per_rank=8)
+    t = P.Table.generate(2000, 32, seed=0)
+    e = P.PudQueryEngine(t, PuDArch.UNMODIFIED, "clutch", num_chunks=8,
+                         device=dev)   # 8 chunks cannot fit; must bump
+    assert e.num_chunks > 8
+    assert len(dev.groups) == 1
+    assert dev.banks_free == dev.total_banks - e.num_banks
+
+
+def test_device_arch_mismatch_rejected():
+    dev = PuDDevice(PuDArch.MODIFIED)
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=0)
+    with pytest.raises(ValueError, match="arch"):
+        G.GbdtPudEngine(forest, PuDArch.UNMODIFIED, device=dev)
+    t = P.Table.generate(100, 8, seed=0)
+    with pytest.raises(ValueError, match="arch"):
+        P.PudQueryEngine(t, PuDArch.UNMODIFIED, device=dev)
+
+
+def test_gbdt_empty_batch():
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=0)
+    eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=2)
+    out = eng.infer(np.empty((0, 3), np.uint64))
+    assert out.shape == (0,) and out.dtype == np.float32
+
+
+def test_broadcast_values_encoded_once_stored_everywhere():
+    """1-D values load identical planes into every bank without per-bank
+    re-encoding (the packed store broadcasts)."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 8, 256, dtype=np.uint64)
+    sub = BankedSubarray(num_banks=5, num_rows=128, num_cols=256,
+                         arch=PuDArch.MODIFIED)
+    layout = load_vector(sub, vals, make_plan(8, 2))
+    for cp, k in zip(layout.cp, (4, 4)):
+        for r in range((1 << k) - 1):
+            row = sub.peek(cp + r)                  # [banks, words]
+            assert (row == row[0]).all()
+    eng_bits = unpack_bits(sub.peek(layout.cp[0]), 256)
+    np.testing.assert_array_equal(eng_bits[0], (vals & 15) > 0)
+
+
+def test_trace_cost_monotonic_in_banks():
+    """More active banks => longer waves (tFAW) but more elems; throughput
+    must still improve with bank count (the paper's BLP scaling)."""
+    counts = {"rowcopy": 10, "tra": 3, "read": 1}
+    costs = [cost.trace_cost(counts, cost.DESKTOP, banks=b,
+                             cols_per_bank=65536) for b in (1, 4, 16)]
+    thr = [c.elems / c.time_ns for c in costs]
+    assert thr[0] < thr[1] < thr[2]
