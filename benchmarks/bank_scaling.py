@@ -15,7 +15,13 @@ them through the BLP cost model (``cost.trace_cost``) at each bank count
 
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
 
 import numpy as np
 
@@ -27,14 +33,16 @@ from repro.core.machine import PuDArch
 BANK_SWEEP = (1, 4, 16, 64)
 
 
-def gbdt_bank_scaling():
+def gbdt_bank_scaling(smoke: bool = False):
     rows = []
-    forest = G.ObliviousForest.random(num_trees=64, depth=6,
-                                      num_features=8, n_bits=8, seed=0)
+    trees, feats = (8, 3) if smoke else (64, 8)
+    forest = G.ObliviousForest.random(num_trees=trees, depth=4 if smoke
+                                      else 6, num_features=feats,
+                                      n_bits=8, seed=0)
     rng = np.random.default_rng(1)
-    for banks in BANK_SWEEP:
+    for banks in BANK_SWEEP[:2] if smoke else BANK_SWEEP:
         eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=banks)
-        x = rng.integers(0, 256, (banks, 8), dtype=np.uint64)
+        x = rng.integers(0, 256, (banks, feats), dtype=np.uint64)
         eng.sub.trace.clear()
         t0 = time.perf_counter()
         eng.infer(x)
@@ -49,9 +57,9 @@ def gbdt_bank_scaling():
     return rows
 
 
-def predicate_bank_scaling():
+def predicate_bank_scaling(smoke: bool = False):
     rows = []
-    for banks in (1, 4, 16):
+    for banks in (1, 2) if smoke else (1, 4, 16):
         n = banks * 4096
         t = P.Table.generate(n, 8, seed=3)
         e = P.PudQueryEngine(t, PuDArch.MODIFIED, "clutch",
@@ -68,5 +76,19 @@ def predicate_bank_scaling():
     return rows
 
 
-def run():
-    return gbdt_bank_scaling() + predicate_bank_scaling()
+def run(smoke: bool = False):
+    return gbdt_bank_scaling(smoke) + predicate_bank_scaling(smoke)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI regression smoke")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,18 +21,37 @@ instances' feature values differ per bank), so a B-instance batch costs
 the same command count as one instance -- per-instance op counts stay
 equal to :func:`gbdt_ops_per_instance` at any batch size.
 
+Forests wider than one bank's columns are *column-sharded*: the node
+table is split into ``col_shards`` bank-sized slices and one instance
+occupies ``col_shards`` consecutive banks (bank ``i * S + s`` holds node
+slice ``s`` of instance ``i``).  The broadcast command stream is
+unchanged -- every bank compares its slice's thresholds against its
+instance's feature value -- and the partial leaf-address rows are merged
+host-side after the single readout, which lifts the old 65536-node
+rejection.
+
+Async host pipeline: :class:`GbdtBatchPipeline` places several engine
+groups on distinct device channels, splits a batch into waves, and
+double-buffers each group's leaf-bitmap row so host readout/merge of
+wave N overlaps PuD execution of wave N+1.  The recorded stream carries
+that structure as dependency-tagged segments, which the per-channel bus
+scheduler turns into overlapped device time.
+
 Only the native ``a < B`` comparison is needed, so no complement planes
 are stored even on Unmodified PuD.
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.clutch import ClutchEngine, clutch_op_count
 from repro.core.machine import BankedSubarray, PuDArch, pack_bits, unpack_bits
+
+from .pipeline import HostTimer, PipelineStats, stats_from_timeline
 
 # Paper §5.1 kernel chunk counts (minimum fitting a single subarray).
 PAPER_GBDT_CHUNKS = {8: 1, 16: 2, 32: 5}
@@ -117,41 +136,64 @@ def reference_predict(forest: ObliviousForest, X: np.ndarray) -> np.ndarray:
 
 
 class GbdtPudEngine:
-    """A bank group holding the forest's GBDT state, one instance per bank.
+    """A bank group holding the forest's GBDT state.
 
-    Thresholds and one-hot feature masks are loaded once (broadcast to all
-    ``num_banks`` banks); :meth:`infer` then processes ``num_banks``
-    instances per broadcast wave with per-bank Clutch scalars.  ``device``
-    optionally places the group on a :class:`~repro.core.device.PuDDevice`.
+    Small forests map one instance per bank; forests wider than
+    ``cols_per_bank`` columns are column-sharded so one instance spans
+    ``col_shards`` consecutive banks (``num_banks`` must then be a
+    multiple of ``col_shards``; ``wave_width`` instances run per wave).
+    Thresholds and one-hot feature masks are loaded once; :meth:`infer`
+    then processes ``wave_width`` instances per broadcast wave with
+    per-bank Clutch scalars.  ``device`` optionally places the group on
+    a :class:`~repro.core.device.PuDDevice`; ``channels`` selects the
+    device placement policy (e.g. a channel index, or ``"spread"``).
+
+    The leaf-bitmap accumulator is double-buffered (``acc_rows``): wave
+    N's result row survives while wave N+1 computes into the other
+    buffer, which is what lets :class:`GbdtBatchPipeline` defer wave N's
+    readout until after wave N+1 has been issued.
     """
 
     def __init__(self, forest: ObliviousForest, arch: PuDArch,
                  num_chunks: int | None = None, num_rows: int = 1024,
-                 num_banks: int = 1, device=None) -> None:
+                 num_banks: int = 1, device=None,
+                 cols_per_bank: int = 65536, channels=None,
+                 label: str = "gbdt") -> None:
         if device is not None:
             if device.arch is not arch:
                 raise ValueError(
                     f"device arch {device.arch.value} != engine arch "
                     f"{arch.value}")
             num_rows = device.num_rows
+            cols_per_bank = min(cols_per_bank, device.cols_per_bank)
         self.forest = forest
         self.arch = arch
         self.num_banks = num_banks
         t, d, f = forest.num_trees, forest.depth, forest.num_features
         n_nodes = t * d
+        self.n_nodes = n_nodes
         n_cols = max(4096, 1 << (n_nodes - 1).bit_length())
-        if n_nodes > 65536:
-            raise ValueError("forest exceeds one bank's columns; shard trees")
+        if n_cols > cols_per_bank:
+            n_cols = cols_per_bank
+        self.col_shards = math.ceil(n_nodes / n_cols)
+        if num_banks % self.col_shards:
+            raise ValueError(
+                f"forest needs {self.col_shards} column shards per "
+                f"instance; num_banks={num_banks} must be a multiple")
+        self.wave_width = num_banks // self.col_shards
         if device is not None:
             self.sub = device.alloc_banks(num_banks, num_cols=n_cols,
-                                          label="gbdt")
+                                          label=label, channels=channels)
         else:
             self.sub = BankedSubarray(num_banks=num_banks, num_rows=num_rows,
                                       num_cols=n_cols, arch=arch)
+        self.label = label
         chunks = num_chunks or PAPER_GBDT_CHUNKS[forest.n_bits]
         # Only the native `<` is used => no complement planes needed.
+        thresholds = self._shard_cols(
+            forest.thresholds.reshape(-1).astype(np.uint64))
         self.engine = ClutchEngine(
-            self.sub, forest.thresholds.reshape(-1), forest.n_bits,
+            self.sub, thresholds, forest.n_bits,
             num_chunks=chunks, support_negated=False)
         self.num_chunks = self.engine.plan.num_chunks
         # One-hot feature mask rows (paper Fig. 12 layout), written through
@@ -159,45 +201,87 @@ class GbdtPudEngine:
         flat_feat = forest.feature_idx.reshape(-1)
         mask_bits = (flat_feat[None, :] ==
                      np.arange(f)[:, None]).astype(np.uint8)    # [F, nodes]
-        mask_bits = np.pad(
-            mask_bits, ((0, 0), (0, self.sub.num_cols - n_nodes)))
         self.mask_rows = self.sub.alloc(f)
-        self.sub.host_write_rows(self.mask_rows, pack_bits(mask_bits))
-        self.acc_row = self.sub.alloc(1)
+        self.sub.host_write_rows(
+            self.mask_rows, pack_bits(self._shard_cols(mask_bits)))
+        self.acc_rows = (self.sub.alloc(1), self.sub.alloc(1))
+        self.acc_row = self.acc_rows[0]
         self.ops_per_instance: int | None = None
 
-    def _infer_wave(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """One broadcast wave over up to ``num_banks`` instances.
+    def _shard_cols(self, rows: np.ndarray) -> np.ndarray:
+        """[..., n_nodes] node-indexed data -> per-bank layout.
 
-        X: [W, F] quantized feature values (W <= num_banks).  Returns
-        (leaf addresses [W, T], predictions [W]).  The command schedule is
-        identical for every wave width: short waves pad with a repeat of
-        instance 0 and discard the extra banks' results.
+        With one column shard this is the broadcast layout (zero-padded
+        to ``num_cols``); with ``S`` shards, slice ``s`` of the node
+        axis goes to banks ``i * S + s`` (tiled over the ``wave_width``
+        instances), so every bank holds exactly its node slice."""
+        n_cols, s = self.sub.num_cols, self.col_shards
+        pad = [(0, 0)] * (rows.ndim - 1) + [(0, s * n_cols - rows.shape[-1])]
+        padded = np.pad(rows, pad)
+        if s == 1:
+            return padded
+        shards = padded.reshape(*rows.shape[:-1], s, n_cols)
+        shards = np.moveaxis(shards, -2, 0)            # [S, ..., n_cols]
+        return np.tile(shards,
+                       (self.wave_width,) + (1,) * (shards.ndim - 1))
+
+    def _infer_wave(self, X: np.ndarray, buf: int = 0
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """One broadcast wave: compute + immediate readout (serial path)."""
+        w = self._compute_wave(X, buf)
+        return self._merge_wave(self._read_wave(buf), w)
+
+    def _compute_wave(self, X: np.ndarray, buf: int = 0) -> int:
+        """Record + execute one broadcast compute wave over up to
+        ``wave_width`` instances into accumulator buffer ``buf``.
+
+        X: [W, F] quantized feature values (W <= wave_width).  Returns
+        W.  The command schedule is identical for every wave width:
+        short waves pad with a repeat of instance 0 and discard the
+        extra banks' results at merge time.
         """
         sub, forest = self.sub, self.forest
         w = X.shape[0]
-        if w > self.num_banks:
-            raise ValueError(f"wave of {w} instances > {self.num_banks} banks")
-        if w < self.num_banks:
+        if w > self.wave_width:
+            raise ValueError(
+                f"wave of {w} instances > {self.wave_width} lanes")
+        if w < self.wave_width:
             X = np.concatenate(
-                [X, np.repeat(X[:1], self.num_banks - w, axis=0)])
+                [X, np.repeat(X[:1], self.wave_width - w, axis=0)])
+        acc_row = self.acc_rows[buf]
         before = sub.trace.pud_ops
-        sub.rowcopy(sub.ROW_ZERO, self.acc_row)   # clear the leaf bitmap
+        sub.rowcopy(sub.ROW_ZERO, acc_row)        # clear the leaf bitmap
         for fi in range(forest.num_features):
-            scalars = np.asarray(X[:, fi], np.int64)
+            # per-bank scalar: instance value repeated over column shards
+            scalars = np.repeat(np.asarray(X[:, fi], np.int64),
+                                self.col_shards)
             cmp_row = self.engine.predicate(">", scalars).row
             # masked = cmp AND mask_f   (cmp already in the MAJ accumulator)
             masked = sub.maj3_into_acc(cmp_row, self.mask_rows + fi,
                                        sub.ROW_ZERO)
             # acc = acc OR masked
-            merged = sub.maj3_into_acc(masked, self.acc_row, sub.ROW_ONE)
-            sub.rowcopy(merged, self.acc_row)
+            merged = sub.maj3_into_acc(masked, acc_row, sub.ROW_ONE)
+            sub.rowcopy(merged, acc_row)
         self.ops_per_instance = sub.trace.pud_ops - before
-        bits = unpack_bits(sub.host_read_row(self.acc_row),
-                           forest.num_trees * forest.depth)
-        bits = bits.reshape(self.num_banks, forest.num_trees, forest.depth)
+        return w
+
+    def _read_wave(self, buf: int = 0) -> np.ndarray:
+        """Read back buffer ``buf``'s leaf-bitmap row -> [banks, words]."""
+        return self.sub.host_read_row(self.acc_rows[buf])
+
+    def _merge_wave(self, words: np.ndarray, w: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side merge of one wave's readout: concatenate the
+        column-shard partial rows, split leaf-address bits, gather and
+        sum leaves.  Returns (addrs [W, T], preds [W])."""
+        forest = self.forest
+        bits = unpack_bits(words, self.sub.num_cols)   # [banks, n_cols]
+        bits = bits.reshape(self.wave_width,
+                            self.col_shards * self.sub.num_cols)
+        bits = bits[:, :self.n_nodes].reshape(
+            self.wave_width, forest.num_trees, forest.depth)
         weights = 1 << np.arange(forest.depth)[::-1]
-        addrs = (bits * weights).sum(-1).astype(np.int32)      # [B, T]
+        addrs = (bits * weights).sum(-1).astype(np.int32)      # [W, T]
         preds = forest.leaves[np.arange(forest.num_trees)[None],
                               addrs].sum(-1).astype(np.float32)
         return addrs[:w], preds[:w]
@@ -209,13 +293,138 @@ class GbdtPudEngine:
         return addrs[0], float(preds[0])
 
     def infer(self, X: np.ndarray) -> np.ndarray:
-        """Batch inference: ``num_banks`` instances per broadcast wave."""
+        """Batch inference: ``wave_width`` instances per broadcast wave
+        (serial readout; see :class:`GbdtBatchPipeline` for the async
+        pipeline)."""
         X = np.asarray(X)
         if X.shape[0] == 0:
             return np.empty((0,), np.float32)
-        preds = [self._infer_wave(X[i:i + self.num_banks])[1]
-                 for i in range(0, X.shape[0], self.num_banks)]
+        preds = [self._infer_wave(X[i:i + self.wave_width], buf=j % 2)[1]
+                 for j, i in enumerate(
+                     range(0, X.shape[0], self.wave_width))]
         return np.concatenate(preds).astype(np.float32)
+
+
+class GbdtBatchPipeline:
+    """Async host/PuD GBDT inference across channel-spread engine groups.
+
+    ``num_groups`` :class:`GbdtPudEngine` replicas are placed on the
+    device round-robin over its channels (deliberate channel-aware
+    placement: disjoint command buses overlap in the scheduler).  A
+    batch is split into waves of ``num_groups * wave_width`` instances;
+    for each wave the pipeline issues every group's compute stream,
+    *then* reads back and merges the previous wave's double-buffered
+    result rows -- host readout/merge of wave N overlaps PuD execution
+    of wave N+1, and the recorded segments declare exactly that
+    dependency structure (compute ``w`` after compute ``w-1`` and the
+    readout that freed its buffer; readout ``w`` after compute ``w``
+    only).
+
+    :meth:`infer` returns predictions; :meth:`last_stats` replays the
+    device's scheduled timeline into a :class:`PipelineStats` for the
+    batch that just ran.
+    """
+
+    _uid = 0
+
+    def __init__(self, forest: ObliviousForest, arch: PuDArch, device,
+                 num_groups: int = 2, banks_per_group: int = 4,
+                 num_chunks: int | None = None) -> None:
+        if num_groups < 1:
+            raise ValueError("need at least one group")
+        GbdtBatchPipeline._uid += 1
+        self._tag = f"gbdt.p{GbdtBatchPipeline._uid}"
+        self.device = device
+        self.engines = [
+            GbdtPudEngine(forest, arch, num_chunks=num_chunks,
+                          num_banks=banks_per_group, device=device,
+                          channels=g % device.channels,
+                          label=f"{self._tag}.g{g}")
+            for g in range(num_groups)
+        ]
+        self.wave_width = sum(e.wave_width for e in self.engines)
+        self._batch = 0
+        self._last_tags: list[list[str]] = []
+        self._last_host = HostTimer()
+
+    def infer(self, X: np.ndarray) -> np.ndarray:
+        """Pipelined batch inference; functionally identical to the
+        serial path (tested), differing only in recorded stream order
+        and the resulting overlap accounting."""
+        X = np.asarray(X)
+        if X.shape[0] == 0:
+            return np.empty((0,), np.float32)
+        self._batch += 1
+        base = f"{self._tag}.b{self._batch}"
+        self._last_tags = []
+        self._last_host = HostTimer()
+        engines = self.engines
+        # per-engine (compute segment id, readout segment id) history
+        prev_c = [None] * len(engines)
+        prev_r = [None] * len(engines)
+        pending: tuple[int, list[tuple[int, int]]] | None = None
+        preds_out: list[np.ndarray] = []
+
+        def collect(w: int,
+                    widths: list[tuple[int, int, int | None]]) -> None:
+            words = []
+            for g, (wd, buf, c_seg) in enumerate(widths):
+                if wd == 0:
+                    words.append(None)
+                    continue
+                tr = engines[g].sub.trace
+                # the readout depends only on the compute segment that
+                # filled this buffer, not on later waves
+                prev_r[g] = tr.begin_segment(
+                    f"{base}.w{w}:r", after=(c_seg,))
+                words.append(engines[g]._read_wave(buf))
+
+            def merge() -> None:
+                for g, (wd, _, _) in enumerate(widths):
+                    if wd:
+                        preds_out.append(
+                            engines[g]._merge_wave(words[g], wd)[1])
+            self._last_host.measure(merge)
+
+        n_waves = math.ceil(X.shape[0] / self.wave_width)
+        off = 0
+        for w in range(n_waves):
+            Xw = X[off:off + self.wave_width]
+            off += self.wave_width
+            widths: list[tuple[int, int, int | None]] = []
+            lo = 0
+            buf = w % 2
+            for g, eng in enumerate(engines):
+                Xg = Xw[lo:lo + eng.wave_width]
+                lo += eng.wave_width
+                if Xg.shape[0] == 0:
+                    widths.append((0, buf, None))
+                    continue
+                after = None
+                if prev_c[g] is not None:
+                    after = (prev_c[g],) + (
+                        (prev_r[g],) if prev_r[g] is not None else ())
+                prev_c[g] = eng.sub.trace.begin_segment(
+                    f"{base}.w{w}:c", after=after)
+                eng._compute_wave(Xg, buf)
+                widths.append((Xg.shape[0], buf, prev_c[g]))
+            self._last_tags.append([f"{base}.w{w}:c", f"{base}.w{w}:r"])
+            if pending is not None:
+                collect(*pending)
+            pending = (w, widths)
+        if pending is not None:
+            collect(*pending)
+        return np.concatenate(preds_out).astype(np.float32)
+
+    def last_stats(self, sys_cfg, timeline=None) -> PipelineStats:
+        """Project the last batch's waves + measured host merges into
+        pipeline totals.  ``timeline`` reuses an existing device
+        schedule; by default the device's streams are (re)scheduled."""
+        if timeline is None:
+            timeline = self.device.schedule(sys_cfg)
+        return stats_from_timeline(
+            timeline, [e.label for e in self.engines],
+            self._last_tags, self._last_host.samples_ns)
 
 
 def gbdt_ops_per_instance(forest: ObliviousForest, chunks: int,

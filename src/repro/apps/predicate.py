@@ -19,6 +19,15 @@ stream (the scalar is the same for all banks), so WHERE-clause reduction
 happens in-DRAM in every bank concurrently, and only the final bitmaps
 leave the chip, where COUNT/AVERAGE merge host-side.  This removes the
 seed's 65536-record capacity cliff.
+
+Async query pipeline: :class:`ShardedQueryPipeline` splits the table
+record-wise across several engine *groups* placed on distinct device
+channels, and runs a batch of queries double-buffered: each query's
+WHERE bitmap is parked in one of two result rows, the next query's PuD
+stream is issued, and only then is the parked row read back and merged
+(COUNT/AVERAGE) on the host -- so host readout/merge of query N
+overlaps PuD execution of query N+1, and shard readouts on one channel
+overlap other shards' compute on other channels in the bus scheduler.
 """
 
 from __future__ import annotations
@@ -31,6 +40,8 @@ import numpy as np
 from repro.core.bitserial import BitSerialEngine
 from repro.core.clutch import ClutchEngine
 from repro.core.machine import BankedSubarray, PuDArch, unpack_bits
+
+from .pipeline import HostTimer, PipelineStats, stats_from_timeline
 
 
 @dataclass
@@ -90,13 +101,16 @@ class PudQueryEngine:
 
     def __init__(self, table: Table, arch: PuDArch, method: str = "clutch",
                  num_chunks: int | None = None, num_rows: int = 1024,
-                 cols_per_bank: int = 65536, device=None) -> None:
+                 cols_per_bank: int = 65536, device=None, channels=None,
+                 label: str | None = None) -> None:
         if device is not None:
             if device.arch is not arch:
                 raise ValueError(
                     f"device arch {device.arch.value} != engine arch "
                     f"{arch.value}")
             num_rows = device.num_rows
+            cols_per_bank = min(cols_per_bank, device.cols_per_bank)
+        self.label = label or f"query:{method}"
         self.table = table
         self.arch = arch
         self.method = method
@@ -109,7 +123,8 @@ class PudQueryEngine:
         def make_sub():
             if device is not None:
                 return device.alloc_banks(self.num_banks, num_cols=n_cols,
-                                          label=f"query:{method}")
+                                          label=self.label,
+                                          channels=channels)
             return BankedSubarray(num_banks=self.num_banks,
                                   num_rows=num_rows, num_cols=n_cols,
                                   arch=arch)
@@ -141,11 +156,14 @@ class PudQueryEngine:
         else:
             raise ValueError(method)
         self._save_rows = [self.sub.alloc(1) for _ in range(4)]
+        # Double-buffered park rows for the async query pipeline: query
+        # N's WHERE bitmap survives here while query N+1 computes.
+        self._park_rows = (self.sub.alloc(1), self.sub.alloc(1))
 
     def _fit_chunks(self, chunks: int, num_rows: int) -> int:
         """Smallest chunk count >= ``chunks`` whose full engine set (LUT
-        planes x features, complements on Unmodified, shared scratch and
-        save rows) fits the row budget."""
+        planes x features, complements on Unmodified, shared scratch,
+        save and park rows) fits the row budget."""
         from repro.core.encoding import make_plan
         from repro.core.machine import BankedSubarray as _B
 
@@ -153,7 +171,7 @@ class PudQueryEngine:
         mult = 2 if self.arch is PuDArch.UNMODIFIED else 1
         n_feat = len(self.table.features)
         while True:
-            need = 2 + 4 + n_feat * mult * \
+            need = 2 + 4 + 2 + n_feat * mult * \
                 make_plan(self.table.n_bits, chunks).rows_required
             if need <= budget:
                 return chunks
@@ -189,9 +207,49 @@ class PudQueryEngine:
 
     def _read(self, row: int) -> np.ndarray:
         """One broadcast row readout -> merged host bitmap [records]."""
-        words = self.sub.host_read_row(row)       # [banks, words]
+        return self.merge_words(self.sub.host_read_row(row))
+
+    def merge_words(self, words: np.ndarray) -> np.ndarray:
+        """Host-side half of a readout: unpack one row's [banks, words]
+        into the table-order bitmap [records]."""
         bits = unpack_bits(words, self.sub.num_cols).astype(bool)
         return bits.reshape(-1)[: self.table.num_records]
+
+    # --------------------- pipelined submit/collect -------------------- #
+    def submit(self, kind: str, params: tuple, buf: int,
+               segment: str | None = None,
+               after: tuple[int, ...] | None = None) -> int:
+        """Record (and functionally execute) one WHERE-clause bitmap
+        stream, parking the result in double-buffer row ``buf`` so it
+        survives the next submission.  ``kind``: ``"range"`` (x0<f<x1),
+        ``"and2"`` / ``"or2"`` (two ranges combined).  ``segment`` opens
+        a labeled trace segment for the scheduler.  Returns the park
+        row."""
+        if segment is not None:
+            self.sub.trace.begin_segment(segment, after=after)
+        elif after is not None:
+            raise ValueError("`after` requires a `segment` label: without "
+                             "a new segment the dependency would be "
+                             "silently dropped")
+        if kind == "range":
+            fi, x0, x1 = params
+            row = self._range(fi, x0, x1, 0)
+        elif kind in ("and2", "or2"):
+            fi, x0, x1, fj, y0, y1 = params
+            r1 = self._range(fi, x0, x1, 0)
+            r2 = self._range(fj, y0, y1, 1)
+            const = self.sub.ROW_ZERO if kind == "and2" else self.sub.ROW_ONE
+            row = self.sub.maj3_into_acc(r1, r2, const)
+        else:
+            raise ValueError(f"unknown bitmap kind {kind!r}")
+        park = self._park_rows[buf]
+        self.sub.rowcopy(row, park)
+        return park
+
+    def read_parked(self, buf: int) -> np.ndarray:
+        """Device half of collecting a parked bitmap: one row readout
+        -> [banks, words] (host unpacking happens in merge_words)."""
+        return self.sub.host_read_row(self._park_rows[buf])
 
     # --------------------------- queries ------------------------------- #
     def q1(self, fi: int, x0: int, x1: int) -> np.ndarray:
@@ -238,6 +296,180 @@ class PudQueryEngine:
         if avg >= hi:
             return 0
         return int(self.q1(fl, avg, hi).sum())
+
+
+class ShardedQueryPipeline:
+    """Q1-Q5 over a table record-sharded across channel-spread groups,
+    with the async host/PuD query pipeline.
+
+    The table is split record-wise into ``num_shards`` sub-tables, each
+    resident in its own :class:`PudQueryEngine` bank group placed
+    round-robin over the device's channels.  :meth:`run` executes a
+    batch of queries double-buffered: query N+1's WHERE streams are
+    issued on every shard before query N's parked bitmaps are read back
+    and merged host-side, so the host work overlaps PuD execution and
+    shard readouts overlap other channels' compute in the bus
+    scheduler.  Q5's second phase takes its scalar from the first
+    phase's host merge (a host barrier): the dependent wave is created
+    during that merge, which naturally inserts a pipeline bubble.
+
+    Queries are tuples: ``("q1", fi, x0, x1)``, ``("q2"|"q3", fi, x0,
+    x1, fj, y0, y1)``, ``("q4", fk, fi, x0, x1, fj, y0, y1)``,
+    ``("q5", fl, fk, fi, x0, x1, fj, y0, y1)`` -- results match the
+    ``reference_*`` functions element-for-element.
+    """
+
+    _uid = 0
+
+    def __init__(self, table: Table, arch: PuDArch, device,
+                 num_shards: int = 2, method: str = "clutch",
+                 num_chunks: int | None = None,
+                 cols_per_bank: int = 65536) -> None:
+        if num_shards < 1:
+            raise ValueError("need at least one shard")
+        ShardedQueryPipeline._uid += 1
+        self._tag = f"query.p{ShardedQueryPipeline._uid}"
+        self.table = table
+        self.device = device
+        n = table.num_records
+        per = math.ceil(n / num_shards)
+        self.bounds = [(s * per, min((s + 1) * per, n))
+                       for s in range(num_shards)]
+        self.engines = [
+            PudQueryEngine(
+                Table(table.n_bits, [f[lo:hi] for f in table.features]),
+                arch, method, num_chunks=num_chunks, device=device,
+                channels=s % device.channels,
+                label=f"{self._tag}.s{s}", cols_per_bank=cols_per_bank)
+            for s, (lo, hi) in enumerate(self.bounds)
+        ]
+        self._batch = 0
+        self._last_tags: list[list[str]] = []
+        self._last_host = HostTimer()
+
+    # ------------------------------------------------------------------ #
+    def run(self, queries: list[tuple]) -> list:
+        """Run a batch of queries through the async pipeline; returns
+        one result per query (bitmap for q1/q2, int for q3/q5, float
+        for q4), identical to the serial reference path."""
+        from collections import deque
+
+        self._batch += 1
+        base = f"{self._tag}.b{self._batch}"
+        self._last_tags = []
+        self._last_host = HostTimer()
+        results: list = [None] * len(queries)
+        work_ref: list = []  # lets Q5's merge enqueue its phase-2 wave
+        work = deque(self._make_wave(qi, q, results, work_ref)
+                     for qi, q in enumerate(queries))
+        work_ref.append(work)
+
+        engines = self.engines
+        prev_c: list[int | None] = [None] * len(engines)
+        last_r_by_buf: list[dict[int, int]] = [dict() for _ in engines]
+        pending = None
+        w = 0
+
+        def submit(wave) -> tuple:
+            tag = f"{base}.w{w}"
+            buf = w % 2
+            c_segs = []
+            for s, eng in enumerate(engines):
+                after = None
+                if prev_c[s] is not None:
+                    after = (prev_c[s],)
+                    if buf in last_r_by_buf[s]:
+                        after += (last_r_by_buf[s][buf],)
+                eng.submit(wave["kind"], wave["params"], buf,
+                           segment=f"{tag}:c", after=after)
+                prev_c[s] = eng.sub.trace.current_segment
+                c_segs.append(prev_c[s])
+            self._last_tags.append([f"{tag}:c", f"{tag}:r"])
+            return (wave, w, buf, c_segs)
+
+        def collect(item) -> None:
+            wave, wi, buf, c_segs = item
+            tag = f"{base}.w{wi}"
+            words = []
+            for s, eng in enumerate(engines):
+                # the readout depends only on the compute segment that
+                # parked this buffer, not on later waves
+                last_r_by_buf[s][buf] = eng.sub.trace.begin_segment(
+                    f"{tag}:r", after=(c_segs[s],))
+                words.append(eng.read_parked(buf))
+
+            def merge() -> None:
+                bitmap = np.concatenate(
+                    [eng.merge_words(ws)
+                     for eng, ws in zip(engines, words)])
+                wave["merge"](bitmap)
+            self._last_host.measure(merge)
+
+        while work or pending is not None:
+            if work:
+                item = submit(work.popleft())
+                w += 1
+                if pending is not None:
+                    collect(pending)
+                pending = item
+            else:
+                collect(pending)
+                pending = None
+        return results
+
+    # ------------------------------------------------------------------ #
+    def _make_wave(self, qi: int, q: tuple, results: list,
+                   work_ref: list) -> dict:
+        name, *p = q
+        mx = (1 << self.table.n_bits) - 1
+
+        if name == "q1":
+            return {"kind": "range", "params": tuple(p),
+                    "merge": lambda bm: results.__setitem__(qi, bm)}
+        if name == "q2":
+            return {"kind": "and2", "params": tuple(p),
+                    "merge": lambda bm: results.__setitem__(qi, bm)}
+        if name == "q3":
+            return {"kind": "or2", "params": tuple(p),
+                    "merge": lambda bm: results.__setitem__(
+                        qi, int(bm.sum()))}
+        if name == "q4":
+            fk, *rest = p
+
+            def merge_q4(bm):
+                vals = self.table.features[fk][bm]
+                results[qi] = float(vals.mean()) if vals.size else 0.0
+            return {"kind": "and2", "params": tuple(rest),
+                    "merge": merge_q4}
+        if name == "q5":
+            fl, fk, *rest = p
+
+            def merge_phase1(bm):
+                vals = self.table.features[fk][bm]
+                avg = int(vals.mean()) if vals.size else 0
+                hi = min(2 * avg, mx)
+                if avg >= hi:
+                    results[qi] = 0
+                    return
+                # host barrier: the dependent wave exists only now
+                work_ref[0].appendleft({
+                    "kind": "range", "params": (fl, avg, hi),
+                    "merge": lambda bm2: results.__setitem__(
+                        qi, int(bm2.sum())),
+                })
+            return {"kind": "or2", "params": tuple(rest),
+                    "merge": merge_phase1}
+        raise ValueError(f"unknown query {name!r}")
+
+    def last_stats(self, sys_cfg, timeline=None) -> PipelineStats:
+        """Project the last batch's waves + measured host merges into
+        pipeline totals.  ``timeline`` reuses an existing device
+        schedule; by default the device's streams are (re)scheduled."""
+        if timeline is None:
+            timeline = self.device.schedule(sys_cfg)
+        return stats_from_timeline(
+            timeline, [e.label for e in self.engines],
+            self._last_tags, self._last_host.samples_ns)
 
 
 # ------------------------- NumPy ground truth -------------------------- #

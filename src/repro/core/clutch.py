@@ -28,6 +28,14 @@ PuD op counts (validated in tests):
     Unmodified: 4C - 3   (C=5 -> 17, the paper's 32-bit example)
     Modified:   3C - 2   (C=5 -> 13)
     C == 1:     exactly one RowCopy.
+
+Stream recording: every operation a predicate issues lands in the bank
+group's recorded command stream (:class:`~repro.core.machine.CommandTrace`)
+and is costed by the per-channel bus scheduler at the device layer.
+``predicate(..., segment=...)`` opens a labeled, dependency-tagged trace
+segment right before the first wave issues, which is how the async host
+pipelines attribute scheduled time spans back to individual queries /
+inference waves and declare double-buffer independence.
 """
 
 from __future__ import annotations
@@ -186,12 +194,23 @@ class ClutchEngine:
         return compare_lt(self.sub, layout, a)
 
     def predicate(self, op: str, x: int | np.ndarray,
-                  save_to: int | None = None) -> PredicateResult:
+                  save_to: int | None = None,
+                  segment: str | None = None,
+                  after: tuple[int, ...] | None = None) -> PredicateResult:
         """Evaluate ``B_i  <op>  x`` for every element; returns the bitmap
         row.  ``x``: one scalar for all banks, or an int array [banks] of
         per-bank scalars.  ``save_to`` optionally RowCopies the result to
         a stable row (the accumulator rows are clobbered by the next
-        predicate)."""
+        predicate).  ``segment`` opens a labeled trace segment (with
+        dependency set ``after``; default chains to the current segment)
+        before the first wave issues, so pipelined callers can tag this
+        predicate's waves for the scheduler."""
+        if segment is not None:
+            self.sub.trace.begin_segment(segment, after=after)
+        elif after is not None:
+            raise ValueError("`after` requires a `segment` label: without "
+                             "a new segment the dependency would be "
+                             "silently dropped")
         vec = isinstance(x, np.ndarray)
         if vec:
             x = np.asarray(x, np.int64)

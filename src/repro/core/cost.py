@@ -7,6 +7,22 @@ baselines are modeled as memory-bandwidth-bound streaming kernels
 (BitWeaving-V reads exactly ``n_bits`` per element; the paper confirms the
 kernel is bandwidth-bound on real hardware).
 
+Two accounting paths coexist:
+
+* **Histogram path** (``sequence_time_ns`` / ``trace_cost``): a single
+  group's op histogram, every wave back-to-back.  Exact for one group
+  executing alone; it is also the per-group building block the
+  benchmarks report.
+* **Timeline path** (``timeline_cost``): the whole device.  The
+  per-channel command-bus scheduler
+  (:class:`~repro.core.scheduler.ChannelScheduler`) places every
+  recorded wave of every group on absolute time; latency is the
+  timeline's makespan (channel contention and cross-channel overlap
+  included, host I/O charged at per-channel bandwidth) and energy is
+  summed per scheduled wave.  ``PuDDevice.cost_summary`` reports this
+  next to the old serialized/overlapped brackets, which survive as
+  bounds: scheduled time always lies in [max-of-groups, sum-of-groups].
+
 All constants are explicit dataclass fields so benchmarks can report
 sensitivity.  Energy follows the paper: each additional simultaneously
 activated row adds 22% of single-row activation energy [197]; CPU/GPU
@@ -187,30 +203,35 @@ def sequence_time_ns(op_counts: dict[str, int], sys: SystemConfig,
     return total
 
 
+#: Simultaneously opened rows in each primitive's multi-row ACT.
+ROWS_PER_ACT = {
+    PuDOp.ROWCOPY: 1,  # two single-row ACTs
+    PuDOp.TRA: 3,      # one triple-row ACT
+    PuDOp.APA: 4,      # one quad-row ACT (second ACT of the APA pair)
+    PuDOp.FRAC: 1,
+    PuDOp.NOT: 1,
+}
+
+
+def wave_energy_nj(op: PuDOp, banks: int, sys: SystemConfig) -> float:
+    """Energy (nJ) of ONE broadcast wave of ``op`` across ``banks``
+    concurrently active banks (paper model: +22% activation energy per
+    extra simultaneously opened row; extra ACTs are single-row)."""
+    if op in (PuDOp.READ, PuDOp.WRITE):
+        return 0.0  # off-chip transfer energy is charged per byte
+    k = ROWS_PER_ACT[op]
+    e_act = sys.e_act_nj * (1.0 + sys.multi_act_overhead * (k - 1))
+    extra = ACTS_PER_OP[op] - 1
+    return banks * (e_act + extra * sys.e_act_nj)
+
+
 def sequence_energy_nj(op_counts: dict[str, int], sys: SystemConfig,
                        banks: int | None = None) -> float:
     """Energy (nJ) of a PuD op sequence across ``banks`` active banks
-    (default: every bank of the system; paper model: +22% activation
-    energy per extra simultaneously opened row)."""
-    rows_per_act = {
-        PuDOp.ROWCOPY: 1,  # two single-row ACTs
-        PuDOp.TRA: 3,      # one triple-row ACT
-        PuDOp.APA: 4,      # one quad-row ACT (second ACT of the APA pair)
-        PuDOp.FRAC: 1,
-        PuDOp.NOT: 1,
-    }
+    (default: every bank of the system)."""
     active = sys.total_banks if banks is None else banks
-    e = 0.0
-    for name, count in op_counts.items():
-        op = PuDOp(name)
-        if op in (PuDOp.READ, PuDOp.WRITE):
-            continue
-        k = rows_per_act[op]
-        e_act = sys.e_act_nj * (1.0 + sys.multi_act_overhead * (k - 1))
-        # charge every ACT in the primitive; extra ACTs are single-row
-        extra = ACTS_PER_OP[op] - 1
-        e += count * active * (e_act + extra * sys.e_act_nj)
-    return e
+    return sum(count * wave_energy_nj(PuDOp(name), active, sys)
+               for name, count in op_counts.items())
 
 
 def transfer_time_ns(n_bytes: float, sys: SystemConfig) -> float:
@@ -243,6 +264,33 @@ def trace_cost(op_counts: dict[str, int], sys: SystemConfig, *,
         e += transfer_energy_nj(io_bytes, sys)
     e += sys.host_idle_power_w * t
     return KernelCost(time_ns=t, energy_nj=e, elems=banks * cols_per_bank)
+
+
+def timeline_cost(timeline, sys: SystemConfig) -> "KernelCost":
+    """Device-level cost of a *scheduled* timeline
+    (:class:`~repro.core.scheduler.Timeline`).
+
+    Latency is the makespan -- channel contention between co-resident
+    groups and overlap across disjoint channels are both already in the
+    wave placement, and host row I/O was charged at per-channel
+    bandwidth by the scheduler.  Energy sums every scheduled wave
+    (activation energy for compute waves, per-byte transfer energy for
+    I/O waves) plus host idle power over the makespan.  ``elems`` is the
+    total SIMD width that computed: sum over waves is wrong (waves
+    repeat per group), so we count each group's banks once via the
+    timeline's per-group tallies and the wave metadata.
+    """
+    from .machine import PuDOp as _Op
+
+    e = 0.0
+    for w in timeline.waves:
+        if w.op in (_Op.READ, _Op.WRITE):
+            e += transfer_energy_nj(w.io_bytes, sys)
+        else:
+            e += wave_energy_nj(w.op, w.banks, sys)
+    e += sys.host_idle_power_w * timeline.makespan_ns
+    return KernelCost(time_ns=timeline.makespan_ns, energy_nj=e,
+                      elems=sum(timeline.group_elems.values()))
 
 
 # --------------------------------------------------------------------- #

@@ -1,4 +1,5 @@
-"""PuD device hierarchy: channels x ranks x banks owning bank allocation.
+"""PuD device hierarchy: channels x ranks x banks owning bank placement
+and command-stream scheduling.
 
 The machine layer (:mod:`repro.core.machine`) models *one bank group* --
 a set of banks executing a broadcast command stream.  This module adds the
@@ -6,30 +7,36 @@ device above it:
 
   * :class:`PuDDevice` mirrors a :class:`~repro.core.cost.SystemConfig`'s
     channel/rank/bank topology and hands out :class:`BankGroup` slices of
-    it.  Allocation is a bump pointer over the flat bank index space;
-    banks are addressed ``(channel, rank, bank)`` in row-major order, so a
-    contiguous group spans whole ranks before spilling to the next channel
-    (matching how the BLP cost model staggers ACTs per rank).
-  * Engine-to-bank placement: apps allocate their
-    :class:`~repro.core.machine.BankedSubarray` through the device
-    (``alloc_banks``), which records the placement so ``cost_summary`` can
-    turn every group's real command trace into device-level latency and
-    energy via the analytical model.
-
-Trace semantics: each group keeps its own :class:`CommandTrace`; one entry
-is one broadcast wave across that group's banks.  Groups on disjoint banks
-could overlap in time on real hardware -- ``cost_summary`` reports both
-the serialized sum and the max (perfectly-overlapped lower bound) so
-benchmarks can show the achievable range.
+    it.  Banks are addressed ``(channel, rank, bank)`` in row-major order
+    over the flat index space.
+  * **Channel-aware placement**: ``alloc_banks`` takes a ``channels``
+    argument -- ``None`` (first-fit contiguous, the bump-pointer
+    behavior), a channel index (place the whole group inside that
+    channel), an explicit list of channels, or ``"spread"`` (balance the
+    group's banks round-robin over every channel).  Apps use this to put
+    independent shards on disjoint command buses so their streams
+    overlap, or co-resident on one bus when capacity matters more than
+    latency.
+  * **Execution model**: engines *record* typed command streams while
+    they run (each group's :class:`~repro.core.machine.CommandTrace`,
+    with dependency segments); :meth:`schedule` hands every placed
+    group's stream + physical footprint to the per-channel command-bus
+    scheduler (:mod:`repro.core.scheduler`) and returns the scheduled
+    :class:`~repro.core.scheduler.Timeline`.  :meth:`cost_summary`
+    derives device latency/energy from that timeline
+    (``cost.timeline_cost``) and keeps the old serialized-sum /
+    perfect-overlap numbers as the bracketing bounds the scheduler must
+    land between.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from .machine import BankedSubarray, PuDArch
+from .scheduler import ChannelScheduler, Footprint, GroupStream, Timeline
 
 
 @dataclass(frozen=True)
@@ -43,9 +50,13 @@ class BankAddress:
 class BankGroup:
     """A placed engine: which flat banks it owns and its machine state."""
 
-    first_bank: int
+    banks: tuple[int, ...]
     sub: BankedSubarray
     label: str = ""
+
+    @property
+    def first_bank(self) -> int:
+        return self.banks[0]
 
     @property
     def num_banks(self) -> int:
@@ -72,7 +83,7 @@ class PuDDevice:
         self.num_rows = num_rows
         self.cols_per_bank = cols_per_bank
         self._seed = seed
-        self._next_bank = 0
+        self._free = np.ones(self.total_banks, dtype=bool)
         self.groups: list[BankGroup] = []
 
     @classmethod
@@ -91,18 +102,22 @@ class PuDDevice:
 
     @property
     def banks_free(self) -> int:
-        return self.total_banks - self._next_bank
+        return int(self._free.sum())
 
     @property
     def parallel_cols(self) -> int:
         """Device SIMD width when every bank computes."""
         return self.total_banks * self.cols_per_bank
 
+    @property
+    def banks_per_channel(self) -> int:
+        return self.ranks_per_channel * self.banks_per_rank
+
     def address(self, flat_bank: int) -> BankAddress:
         """(channel, rank, bank) of a flat bank index."""
         if not 0 <= flat_bank < self.total_banks:
             raise IndexError(flat_bank)
-        per_ch = self.ranks_per_channel * self.banks_per_rank
+        per_ch = self.banks_per_channel
         return BankAddress(
             channel=flat_bank // per_ch,
             rank=(flat_bank % per_ch) // self.banks_per_rank,
@@ -110,54 +125,149 @@ class PuDDevice:
         )
 
     # ------------------------------------------------------------------ #
+    # Placement
+    # ------------------------------------------------------------------ #
+    def _take_contiguous(self, n: int, lo: int, hi: int) -> list[int]:
+        """First-fit run of ``n`` free banks inside [lo, hi); [] if none."""
+        run: list[int] = []
+        for b in range(lo, hi):
+            if self._free[b]:
+                run.append(b)
+                if len(run) == n:
+                    return run
+            else:
+                run = []
+        return []
+
+    def _channel_free(self, c: int) -> int:
+        per_ch = self.banks_per_channel
+        return int(self._free[c * per_ch:(c + 1) * per_ch].sum())
+
+    def _resolve_placement(self, n: int, channels) -> list[int]:
+        per_ch = self.banks_per_channel
+        if channels is None:
+            picked = self._take_contiguous(n, 0, self.total_banks)
+            if picked:
+                return picked
+            raise MemoryError(
+                f"device bank budget exceeded: no contiguous run of {n} "
+                f"banks free ({self.banks_free}/{self.total_banks} free)")
+        if isinstance(channels, (int, np.integer)):
+            channels = [int(channels)]
+        if channels == "spread":
+            channels = list(range(self.channels))
+        channels = list(dict.fromkeys(channels))  # dedupe, keep order
+        if any(not 0 <= c < self.channels for c in channels):
+            raise IndexError(f"channel out of range: {channels}")
+        # Balanced split over the requested channels, preferring emptier
+        # ones for the remainder banks.
+        base, rem = divmod(n, len(channels))
+        order = sorted(channels, key=lambda c: -self._channel_free(c))
+        want = {c: base for c in channels}
+        for c in order[:rem]:
+            want[c] += 1
+        picked: list[int] = []
+        for c in channels:
+            if want[c] == 0:
+                continue
+            got = self._take_contiguous(want[c], c * per_ch,
+                                        (c + 1) * per_ch)
+            if not got:
+                raise MemoryError(
+                    f"channel {c} cannot place {want[c]} contiguous banks "
+                    f"({self._channel_free(c)} free)")
+            picked.extend(got)
+        return picked
+
     def alloc_banks(self, n: int, num_cols: int | None = None,
-                    label: str = "") -> BankedSubarray:
-        """Allocate ``n`` consecutive banks as one broadcast group and
-        return its machine state.  Raises MemoryError when the device is
-        out of banks (callers shard or queue waves above this layer)."""
+                    label: str = "", channels=None) -> BankedSubarray:
+        """Allocate ``n`` banks as one broadcast group and return its
+        machine state.  ``channels`` selects the placement policy (see
+        module docstring).  Raises MemoryError when the requested
+        placement does not fit (callers shard or queue waves above this
+        layer)."""
         if n < 1:
             raise ValueError("need at least one bank")
-        if self._next_bank + n > self.total_banks:
-            raise MemoryError(
-                f"device bank budget exceeded: need {n} banks at "
-                f"{self._next_bank}, capacity {self.total_banks}")
+        banks = self._resolve_placement(n, channels)
         sub = BankedSubarray(
             num_banks=n, num_rows=self.num_rows,
             num_cols=num_cols or self.cols_per_bank, arch=self.arch,
             seed=None if self._seed is None
-            else self._seed + self._next_bank)
-        group = BankGroup(first_bank=self._next_bank, sub=sub, label=label)
-        self._next_bank += n
+            else self._seed + banks[0])
+        group = BankGroup(banks=tuple(banks), sub=sub, label=label)
+        self._free[banks] = False
         self.groups.append(group)
         return sub
 
+    def footprint(self, group: BankGroup) -> Footprint:
+        """{channel: {rank: bank count}} of a group's placement."""
+        out: Footprint = {}
+        for b in group.banks:
+            a = self.address(b)
+            out.setdefault(a.channel, {}).setdefault(a.rank, 0)
+            out[a.channel][a.rank] += 1
+        return out
+
     # ------------------------------------------------------------------ #
+    # Scheduling + cost
+    # ------------------------------------------------------------------ #
+    def _group_label(self, i: int, g: BankGroup) -> str:
+        base = g.label or "group"
+        return f"{base}@{g.first_bank}" if any(
+            j != i and (h.label or "group") == base
+            for j, h in enumerate(self.groups)) else base
+
+    def streams(self) -> list[GroupStream]:
+        """Every placed group's recorded stream + physical footprint."""
+        return [
+            GroupStream.from_trace(self._group_label(i, g), g.sub.trace,
+                                   self.footprint(g), g.sub.num_cols)
+            for i, g in enumerate(self.groups)
+        ]
+
+    def schedule(self, sys_cfg) -> Timeline:
+        """Run every group's recorded stream through the per-channel
+        command-bus scheduler -> scheduled device timeline."""
+        return ChannelScheduler(sys_cfg).schedule(self.streams())
+
     def cost_summary(self, sys_cfg) -> dict:
-        """Run every group's recorded trace through the analytical BLP
-        cost model.  Returns per-group and device-level time/energy:
-        ``time_serial_ns`` assumes groups execute back-to-back (shared
-        command bus), ``time_overlap_ns`` is the perfectly-overlapped
-        lower bound (disjoint banks, independent channels)."""
+        """Device-level latency/energy from the scheduled timeline.
+
+        ``time_scheduled_ns`` is the makespan of the per-channel bus
+        schedule -- the primary number.  ``time_serial_ns`` (all groups
+        back-to-back on one bus) and ``time_overlap_ns`` (perfect
+        overlap) remain as the bracketing bounds; per-group entries keep
+        the standalone histogram cost (``cost.trace_cost``) so
+        benchmarks can still report each engine in isolation.
+        """
         from . import cost
 
+        timeline = self.schedule(sys_cfg)
+        kc = cost.timeline_cost(timeline, sys_cfg)
         per_group = []
-        for g in self.groups:
-            kc = cost.trace_cost(g.sub.trace.counts(), sys_cfg,
+        for i, g in enumerate(self.groups):
+            label = self._group_label(i, g)
+            tc = cost.trace_cost(g.sub.trace.counts(), sys_cfg,
                                  banks=g.num_banks,
                                  cols_per_bank=g.sub.num_cols)
+            span = timeline.group_span_ns.get(label)
             per_group.append({
-                "label": g.label or f"banks[{g.first_bank}:"
-                                    f"{g.first_bank + g.num_banks}]",
+                "label": label,
                 "banks": g.num_banks,
+                "channels": sorted(self.footprint(g)),
                 "pud_ops": g.sub.trace.pud_ops,
-                "time_ns": kc.time_ns,
-                "energy_nj": kc.energy_nj,
+                "time_ns": tc.time_ns,
+                "sched_busy_ns": timeline.group_busy_ns.get(label, 0.0),
+                "sched_span_ns": span,
+                "energy_nj": tc.energy_nj,
             })
         return {
             "groups": per_group,
-            "banks_used": self._next_bank,
-            "time_serial_ns": sum(g["time_ns"] for g in per_group),
-            "time_overlap_ns": max(
-                (g["time_ns"] for g in per_group), default=0.0),
+            "banks_used": self.total_banks - self.banks_free,
+            "time_scheduled_ns": timeline.makespan_ns,
+            "time_serial_ns": timeline.serial_bound_ns,
+            "time_overlap_ns": timeline.overlap_bound_ns,
+            "channel_busy_ns": timeline.channel_busy_ns,
             "energy_nj": sum(g["energy_nj"] for g in per_group),
+            "energy_scheduled_nj": kc.energy_nj,
         }

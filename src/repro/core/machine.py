@@ -27,15 +27,40 @@ Rows are stored packed, 32 columns per ``uint32`` word, mirroring the
 vertical (bit-sliced) PuD data layout: element *i* of a bank's vector
 lives in column *i* of that bank, one bit per row.
 
-Trace semantics
----------------
+Stream semantics (recording + replay)
+-------------------------------------
 Every primitive appends one entry to the subarray's :class:`CommandTrace`.
 One entry == one broadcast wave == ``banks`` per-bank command executions;
 per-bank op counts (what the paper reports, e.g. 17 PuD ops for a 32-bit /
 5-chunk Clutch comparison on Unmodified PuD) are therefore exactly the
-trace counts, independent of bank count.  The analytical cost model
-(:mod:`repro.core.cost`) turns trace histograms + the active bank count
-into cycle-level latency and energy.
+trace counts, independent of bank count.
+
+The trace is not just a histogram source: it is the *recorded command
+stream* of the group.  Execution is eager (each primitive mutates state
+immediately), but the recorded stream fully determines that execution --
+:func:`replay` re-runs a stream's compute waves on another subarray and
+reproduces the same state, which is what lets the per-channel command-bus
+scheduler (:mod:`repro.core.scheduler`) reason about the stream *after*
+the fact without changing results.
+
+Waves carry two scheduling tags:
+
+* their **bank group** -- implicit: one trace per
+  :class:`BankedSubarray`, and the device layer knows which banks each
+  group owns;
+* their **data dependencies** -- a *segment* id.  Waves within a segment
+  are a dependency chain (consecutive PuD ops read each other's rows);
+  segments declare which earlier segments they depend on
+  (:meth:`CommandTrace.begin_segment`).  The default is a single chain,
+  matching the old serialized semantics; double-buffered pipelines open
+  independent segments so a result-row readout only depends on the wave
+  that produced it, not on later waves that compute into the other
+  buffer.
+
+The analytical cost model (:mod:`repro.core.cost`) turns trace
+histograms + the active bank count into cycle-level latency and energy;
+the scheduler turns whole streams + bank placement into a device
+timeline.
 
 ``Subarray`` remains as the single-bank special case (banks == 1) with
 the seed's 2-D ``rows`` view, so single-vector algorithms and tests are
@@ -76,21 +101,62 @@ class PuDOp(str, enum.Enum):
 class TraceEntry:
     op: PuDOp
     rows: tuple  # ints (broadcast) and/or [banks] int arrays (per-bank)
+    seg: int = 0  # segment id (dependency tag; see CommandTrace)
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One dependency-tagged span of a command stream.  Waves inside a
+    segment form a chain; the segment's first wave waits for every wave
+    of every segment in ``after``."""
+
+    sid: int
+    label: str
+    after: tuple[int, ...]
 
 
 @dataclass
 class CommandTrace:
-    """Ordered log of broadcast PuD primitives issued to one bank group."""
+    """Ordered record of broadcast PuD primitives issued to one bank
+    group -- the group's command *stream*.
+
+    Entries are appended in host issue order and tagged with the current
+    segment.  ``begin_segment`` opens a new segment; by default it
+    depends on the previous one (plain serialized stream).  Pipelined
+    apps pass explicit ``after`` sets so the scheduler knows a readout
+    only depends on the waves that produced its buffer.
+    """
 
     entries: list[TraceEntry] = field(default_factory=list)
+    segments: list[Segment] = field(
+        default_factory=lambda: [Segment(0, "", ())])
+    _cur_seg: int = 0
+
+    def begin_segment(self, label: str = "",
+                      after: tuple[int, ...] | None = None) -> int:
+        """Open a new segment and make it current; returns its id.
+        ``after=None`` chains to the current segment (serialized
+        default); pass an explicit tuple of segment ids for independent
+        (double-buffered) streams."""
+        if after is None:
+            after = (self._cur_seg,)
+        sid = len(self.segments)
+        self.segments.append(Segment(sid, label, tuple(after)))
+        self._cur_seg = sid
+        return sid
+
+    @property
+    def current_segment(self) -> int:
+        return self._cur_seg
 
     def emit(self, op: PuDOp, *rows: RowIdx) -> None:
-        self.entries.append(TraceEntry(op, rows))
+        self.entries.append(TraceEntry(op, rows, self._cur_seg))
 
     def emit_rows(self, op: PuDOp, start: int, n: int) -> None:
         """Bulk-emit ``n`` consecutive single-row entries (host row I/O)."""
         self.entries.extend(
-            TraceEntry(op, (r,)) for r in range(start, start + n))
+            TraceEntry(op, (r,), self._cur_seg)
+            for r in range(start, start + n))
 
     def count(self, op: PuDOp) -> int:
         return sum(1 for e in self.entries if e.op is op)
@@ -110,6 +176,39 @@ class CommandTrace:
 
     def clear(self) -> None:
         self.entries.clear()
+        self.segments[:] = [Segment(0, "", ())]
+        self._cur_seg = 0
+
+
+def replay(entries, sub: "BankedSubarray") -> None:
+    """Re-execute a recorded stream's waves on ``sub``.
+
+    Compute waves (RowCopy/TRA/APA/Frac/NOT) are replayed exactly --
+    including per-bank gather addressing -- so a subarray holding the
+    same pre-stream state (e.g. a snapshot taken after LUT loading)
+    reaches the same post-stream state.  READ waves re-issue the
+    readout (trace traffic) and discard the data; WRITE waves are
+    skipped, since the stream records the command, not the payload --
+    replay therefore validates the *compute* stream, the part whose
+    ordering the scheduler reasons about.
+    """
+    for e in entries:
+        if e.op is PuDOp.ROWCOPY:
+            sub.rowcopy(*e.rows)
+        elif e.op is PuDOp.TRA:
+            sub.tra()
+        elif e.op is PuDOp.APA:
+            sub.apa()
+        elif e.op is PuDOp.FRAC:
+            sub.frac(sub.G.index(e.rows[0]))
+        elif e.op is PuDOp.NOT:
+            sub.bulk_not(*e.rows)
+        elif e.op is PuDOp.READ:
+            sub.host_read_row(e.rows[0])
+        elif e.op is PuDOp.WRITE:
+            pass  # payload not recorded; state assumed pre-loaded
+        else:  # pragma: no cover - enum is closed
+            raise ValueError(e.op)
 
 
 def pack_bits(bits: np.ndarray) -> np.ndarray:

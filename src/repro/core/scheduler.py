@@ -1,0 +1,282 @@
+"""Per-channel DRAM command-bus scheduler for recorded PuD streams.
+
+The machine layer records each bank group's command *stream*
+(:class:`~repro.core.machine.CommandTrace`); the device layer knows which
+banks -- and therefore which channels and ranks -- each group owns.  This
+module turns those two facts into a scheduled device timeline, the §5
+move of deriving time from the exact command sequence instead of
+bracketing it between "serialized sum" and "perfect overlap".
+
+Bus model
+---------
+* One command bus per **channel**; channels are fully independent.
+* A PuD wave is a *precisely-timed* multi-ACT sequence (the timing
+  violation IS the compute mechanism), so a wave holds every channel its
+  group spans exclusively from its first ACT to the completion of the
+  last bank's operation.  Interleaving foreign commands mid-wave would
+  perturb the charge-sharing timing, so the bus is never split within a
+  wave.  Consequently two groups sharing a channel serialize (makespan ==
+  sum of their busy times) while groups on disjoint channels overlap
+  (makespan == max) -- the scheduler recovers the whole range in between
+  for partial sharing.
+* Within a wave, ACTs to the banks of one **rank** are staggered by the
+  JEDEC windows: issue gap ``max(tFAW/4, tRRD_L)`` per rank.  Ranks of a
+  channel stagger in parallel (they only share the bus, 1 cmd/tCK, never
+  binding here), and a group spanning several channels drives them in
+  lockstep (one broadcast stream), so the wave's duration is
+
+      max over channels c of (ACTs_per_op * max_rank_banks_c - 1) * gap
+          +  op latency.
+
+  Rank-to-rank ACT spacing *between* consecutive waves is subsumed by
+  the exclusive hold: a wave's hold ends op-latency (>= tRAS + tRP) after
+  its last ACT, which always exceeds the inter-ACT gap.
+* READ/WRITE waves move one row per bank over the channel's data pins:
+  duration = max over channels of (bytes on that channel / per-channel
+  bandwidth), holding the same exclusivity (a burst cannot interleave
+  with a timed ACT sequence on the same channel).
+
+Dependency model
+----------------
+Waves carry the segment ids recorded by the engines
+(:meth:`CommandTrace.begin_segment`): waves of a segment chain, a
+segment's first wave waits for all waves of its ``after`` segments, and
+different groups are always independent (disjoint banks).  The scheduler
+is an earliest-start list scheduler over the ready frontier: at each
+step it issues the ready wave with the earliest feasible start,
+breaking ties in favor of host I/O (drain results early so the host
+pipeline can start merging) and then least-recently-served group, which
+interleaves co-resident groups instead of running one to completion.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .machine import CommandTrace, PuDOp, Segment
+
+#: Footprint of a group: {channel: {rank: number of the group's banks}}.
+Footprint = dict[int, dict[int, int]]
+
+
+@dataclass(frozen=True)
+class GroupStream:
+    """One bank group's recorded stream plus its physical placement."""
+
+    label: str
+    footprint: Footprint
+    cols_per_bank: int
+    ops: tuple[PuDOp, ...]            # one entry per wave, record order
+    segs: tuple[int, ...]             # segment id per wave
+    segments: tuple[Segment, ...]     # segment table (id -> label, deps)
+
+    @property
+    def banks(self) -> int:
+        return sum(sum(r.values()) for r in self.footprint.values())
+
+    @property
+    def channels(self) -> tuple[int, ...]:
+        return tuple(sorted(self.footprint))
+
+    @staticmethod
+    def from_trace(label: str, trace: CommandTrace, footprint: Footprint,
+                   cols_per_bank: int) -> "GroupStream":
+        return GroupStream(
+            label=label, footprint=footprint, cols_per_bank=cols_per_bank,
+            ops=tuple(e.op for e in trace.entries),
+            segs=tuple(e.seg for e in trace.entries),
+            segments=tuple(trace.segments),
+        )
+
+
+@dataclass(frozen=True)
+class ScheduledWave:
+    group: str
+    op: PuDOp
+    seg: int
+    seg_label: str
+    start_ns: float
+    end_ns: float
+    channels: tuple[int, ...]
+    banks: int
+    io_bytes: float = 0.0            # nonzero only for READ/WRITE waves
+
+    @property
+    def duration_ns(self) -> float:
+        return self.end_ns - self.start_ns
+
+
+@dataclass
+class Timeline:
+    """A scheduled device execution: every wave with absolute times."""
+
+    waves: list[ScheduledWave]
+    makespan_ns: float
+    channel_busy_ns: dict[int, float]
+    group_busy_ns: dict[str, float]       # sum of each group's durations
+    group_span_ns: dict[str, tuple[float, float]]
+    group_elems: dict[str, int] = field(default_factory=dict)  # SIMD width
+
+    def channel_utilization(self, channel: int) -> float:
+        if self.makespan_ns <= 0:
+            return 0.0
+        return self.channel_busy_ns.get(channel, 0.0) / self.makespan_ns
+
+    def segment_spans(self) -> dict[tuple[str, str], tuple[float, float]]:
+        """(group label, segment label) -> (first start, last end), for
+        labeled segments only -- how apps map pipeline waves back to
+        scheduled time."""
+        spans: dict[tuple[str, str], tuple[float, float]] = {}
+        for w in self.waves:
+            if not w.seg_label:
+                continue
+            key = (w.group, w.seg_label)
+            if key in spans:
+                s, e = spans[key]
+                spans[key] = (min(s, w.start_ns), max(e, w.end_ns))
+            else:
+                spans[key] = (w.start_ns, w.end_ns)
+        return spans
+
+    @property
+    def serial_bound_ns(self) -> float:
+        """Serialized upper bound: every wave back-to-back on one bus."""
+        return sum(self.group_busy_ns.values())
+
+    @property
+    def overlap_bound_ns(self) -> float:
+        """Perfect-overlap lower bound: the slowest group alone."""
+        return max(self.group_busy_ns.values(), default=0.0)
+
+
+class ChannelScheduler:
+    """Schedules recorded group streams onto a SystemConfig's channels."""
+
+    def __init__(self, sys_cfg) -> None:
+        self.sys = sys_cfg
+        t = sys_cfg.timings
+        self._act_gap = max(t.tFAW / 4.0, t.tRRD_L)
+        # Per-channel share of the device's peak off-chip bandwidth.
+        self._channel_bw = sys_cfg.bandwidth_gbps / sys_cfg.channels
+
+    # ------------------------------------------------------------------ #
+    def wave_duration_ns(self, op: PuDOp, stream: GroupStream) -> float:
+        """Duration of one broadcast wave of ``stream`` (see bus model)."""
+        from . import cost
+
+        if op in (PuDOp.READ, PuDOp.WRITE):
+            per_ch = [sum(ranks.values()) * stream.cols_per_bank / 8
+                      for ranks in stream.footprint.values()]
+            return max(per_ch) / self._channel_bw
+        acts = cost.ACTS_PER_OP[op]
+        stagger = max(
+            (acts * max(ranks.values()) - 1) * self._act_gap
+            for ranks in stream.footprint.values()
+        )
+        return stagger + cost.op_latency(op, self.sys.timings)
+
+    def io_bytes(self, op: PuDOp, stream: GroupStream) -> float:
+        if op not in (PuDOp.READ, PuDOp.WRITE):
+            return 0.0
+        return stream.banks * stream.cols_per_bank / 8
+
+    # ------------------------------------------------------------------ #
+    def schedule(self, streams: list[GroupStream]) -> Timeline:
+        channel_free: dict[int, float] = {}
+        scheduled: list[ScheduledWave] = []
+        group_busy = {s.label: 0.0 for s in streams}
+        group_span: dict[str, tuple[float, float]] = {}
+        group_last_served = {i: -1 for i in range(len(streams))}
+        serve_counter = 0
+
+        # Per (group, segment) wave queues in record order.
+        queues: list[dict[int, list[int]]] = []
+        for s in streams:
+            q: dict[int, list[int]] = {}
+            for w, sid in enumerate(s.segs):
+                q.setdefault(sid, []).append(w)
+            queues.append(q)
+        # Dependency bookkeeping: per (group, seg): waves left, end time,
+        # and the end of the last scheduled wave inside the segment.
+        seg_left = [
+            {sid: len(ws) for sid, ws in q.items()} for q in queues
+        ]
+        seg_end = [dict.fromkeys(q, 0.0) for q in queues]
+        seg_prev_end = [dict.fromkeys(q, None) for q in queues]
+
+        # Effective deps: segments that never emitted a wave are skipped
+        # over transitively so chains survive empty segments.
+        eff_after: list[dict[int, tuple[int, ...]]] = []
+        for gi, s in enumerate(streams):
+            def expand(sid: int, seen: set[int]) -> list[int]:
+                out: list[int] = []
+                for d in s.segments[sid].after:
+                    if d in seen:
+                        continue
+                    seen.add(d)
+                    if d in queues[gi]:
+                        out.append(d)
+                    else:
+                        out.extend(expand(d, seen))
+                return out
+            eff_after.append(
+                {sid: tuple(expand(sid, set())) for sid in queues[gi]})
+
+        def seg_ready(gi: int, sid: int) -> bool:
+            return all(seg_left[gi][d] == 0 for d in eff_after[gi][sid])
+
+        def seg_dep_end(gi: int, sid: int) -> float:
+            return max((seg_end[gi][d] for d in eff_after[gi][sid]),
+                       default=0.0)
+
+        remaining = sum(len(s.ops) for s in streams)
+        while remaining:
+            best = None
+            for gi, s in enumerate(streams):
+                for sid, ws in queues[gi].items():
+                    if not ws or not seg_ready(gi, sid):
+                        continue
+                    w = ws[0]
+                    op = s.ops[w]
+                    prev = seg_prev_end[gi][sid]
+                    dep = seg_dep_end(gi, sid) if prev is None else prev
+                    bus = max((channel_free.get(c, 0.0)
+                               for c in s.channels), default=0.0)
+                    start = max(dep, bus)
+                    is_io = op in (PuDOp.READ, PuDOp.WRITE)
+                    key = (start, not is_io, group_last_served[gi], gi, sid)
+                    if best is None or key < best[0]:
+                        best = (key, gi, sid, w, op, start)
+            assert best is not None, "dependency cycle in stream segments"
+            _, gi, sid, w, op, start = best
+            s = streams[gi]
+            dur = self.wave_duration_ns(op, s)
+            end = start + dur
+            scheduled.append(ScheduledWave(
+                group=s.label, op=op, seg=sid,
+                seg_label=s.segments[sid].label,
+                start_ns=start, end_ns=end, channels=s.channels,
+                banks=s.banks, io_bytes=self.io_bytes(op, s)))
+            for c in s.channels:
+                channel_free[c] = end
+            queues[gi][sid].pop(0)
+            seg_left[gi][sid] -= 1
+            seg_end[gi][sid] = max(seg_end[gi][sid], end)
+            seg_prev_end[gi][sid] = end
+            group_busy[s.label] += dur
+            lo, hi = group_span.get(s.label, (start, end))
+            group_span[s.label] = (min(lo, start), max(hi, end))
+            group_last_served[gi] = serve_counter
+            serve_counter += 1
+            remaining -= 1
+
+        makespan = max((w.end_ns for w in scheduled), default=0.0)
+        busy: dict[int, float] = {}
+        for w in scheduled:
+            for c in w.channels:
+                busy[c] = busy.get(c, 0.0) + w.duration_ns
+        return Timeline(waves=scheduled, makespan_ns=makespan,
+                        channel_busy_ns=busy, group_busy_ns=group_busy,
+                        group_span_ns=group_span,
+                        group_elems={s.label: s.banks * s.cols_per_bank
+                                     for s in streams})

@@ -56,3 +56,49 @@ def clutch_merge(lut: jnp.ndarray, lt_idx: jnp.ndarray, le_idx: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
         interpret=use_interpret(),
     )(lt_idx, le_idx, lut)
+
+
+def _banked_kernel(lt_idx_ref, le_idx_ref, lut_ref, out_ref, *,
+                   num_chunks: int):
+    # refs carry a leading singleton bank axis selected by the grid
+    def row(idx):
+        return pl.load(lut_ref,
+                       (pl.ds(0, 1), pl.ds(idx, 1), slice(None)))[0, 0]
+
+    acc = row(lt_idx_ref[0, 0])
+    for j in range(1, num_chunks):
+        acc = maj3(acc, row(lt_idx_ref[0, j]), row(le_idx_ref[0, j]))
+    out_ref[0, ...] = acc
+
+
+def clutch_merge_banked(lut: jnp.ndarray, lt_idx: jnp.ndarray,
+                        le_idx: jnp.ndarray,
+                        block_words: int = 1024) -> jnp.ndarray:
+    """Bank-batched Clutch merge: one grid program per (bank shard,
+    word block), mirroring how the banked machine runs one broadcast
+    stream whose per-bank lookups differ.
+
+    lut: [B, R, W] uint32 (per-bank stacked LUT planes); lt_idx/le_idx:
+    [B, C] int32 per-bank Algorithm 1 row indices (each bank compares
+    its own scalar).  Returns [B, W] uint32 bitmaps of ``a_b < B_b``.
+    """
+    b, r, w = lut.shape
+    assert r % SUBLANES == 0 and w % 128 == 0, (r, w)
+    assert lt_idx.shape == le_idx.shape == (b, lt_idx.shape[1])
+    c = lt_idx.shape[1]
+    from .common import choose_block
+    bw = choose_block(w, min(block_words, w))
+    grid = (b, w // bw)
+    kernel = functools.partial(_banked_kernel, num_chunks=c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, c), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, r, bw), lambda bi, i: (bi, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bw), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.uint32),
+        interpret=use_interpret(),
+    )(lt_idx, le_idx, lut)

@@ -18,7 +18,7 @@ from repro.core.encoding import ChunkPlan
 
 from . import ref
 from .bitserial_cmp import bitserial_cmp
-from .clutch_merge import clutch_merge
+from .clutch_merge import clutch_merge, clutch_merge_banked
 from .common import (
     LANES,
     SUBLANES,
@@ -108,6 +108,40 @@ def clutch_compare(values: jnp.ndarray, a: int, plan: ChunkPlan
     lut = encode_lut(values, plan)
     lt_idx, le_idx = resolve_indices(plan, a)
     words = compare_gt_scalar(lut, jnp.asarray(lt_idx), jnp.asarray(le_idx))
+    return unpack_bits_jnp(words, n).astype(bool)
+
+
+def resolve_indices_banked(plan: ChunkPlan, a: np.ndarray
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-bank Algorithm 1 index resolution: ``a`` is [B] int64 with
+    the machine's convention that ``-1`` means the always-true
+    comparison (both lookups resolve to the constant-one row).  Returns
+    ([B, C], [B, C]) int32 lt/le row indices."""
+    a = np.asarray(a, np.int64)
+    lt = np.empty((a.shape[0], plan.num_chunks), np.int32)
+    le = np.empty_like(lt)
+    _, _, one_row = lut_offsets(plan)
+    for b, ab in enumerate(a):
+        if ab < 0:
+            lt[b] = le[b] = one_row
+        else:
+            lt[b], le[b] = resolve_indices(plan, int(ab))
+    return lt, le
+
+
+def clutch_compare_banked(values: jnp.ndarray, a: np.ndarray,
+                          plan: ChunkPlan) -> jnp.ndarray:
+    """Bank-batched end-to-end compare: ``values`` [B, N] (one vector
+    shard per bank), ``a`` [B] per-bank scalars (``-1`` == always
+    true).  One kernel program per (bank shard, word block) -- the TPU
+    analogue of the banked machine's single broadcast stream with
+    per-bank gather lookups.  Returns bool [B, N] of ``a_b < B_b``.
+    """
+    b, n = values.shape
+    lut = jnp.stack([encode_lut(values[i], plan) for i in range(b)])
+    lt_idx, le_idx = resolve_indices_banked(plan, a)
+    words = clutch_merge_banked(lut, jnp.asarray(lt_idx),
+                                jnp.asarray(le_idx))
     return unpack_bits_jnp(words, n).astype(bool)
 
 

@@ -142,6 +142,46 @@ def test_minp_mask_hypothesis(tau_val, b):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# ---------------------- banked clutch_merge --------------------------- #
+
+@pytest.mark.parametrize("n_bits,chunks,banks", [(8, 2, 3), (16, 4, 4),
+                                                 (16, 2, 1), (32, 5, 2)])
+def test_clutch_compare_banked_sweep(n_bits, chunks, banks):
+    """One kernel program per bank shard == per-bank numpy comparisons,
+    including boundary scalars and the always-true -1 encoding."""
+    plan = make_plan(n_bits, chunks)
+    n = 700
+    vals = RNG.integers(0, 1 << n_bits, (banks, n), dtype=np.uint32)
+    mx = (1 << n_bits) - 1
+    pool = [0, mx, -1, 123 % mx, int(RNG.integers(0, mx))]
+    a = np.array(pool[:banks], np.int64)
+    got = ops.clutch_compare_banked(jnp.asarray(vals), a, plan)
+    want = vals.astype(np.int64) > a[:, None]   # -1 < everything
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_clutch_compare_banked_matches_machine():
+    """The banked kernel and the banked PuD machine produce identical
+    bitmaps from the same per-bank shards and per-bank scalars."""
+    from repro.core.clutch import ClutchEngine
+    from repro.core.machine import BankedSubarray, PuDArch
+
+    banks, n, n_bits, chunks = 5, 1000, 16, 4
+    vals = RNG.integers(0, 1 << n_bits, (banks, n), dtype=np.uint64)
+    scalars = np.array([0, (1 << n_bits) - 1, 777, 12345,
+                        int(vals[4, 0])], np.int64)
+    plan = make_plan(n_bits, chunks)
+
+    sub = BankedSubarray(num_banks=banks, num_rows=1024, num_cols=1024,
+                         arch=PuDArch.MODIFIED)
+    eng = ClutchEngine(sub, vals, n_bits, plan=plan, support_negated=False)
+    machine_bm = eng.read_bitmap(eng.predicate(">", scalars).row)
+
+    kernel_bm = np.asarray(ops.clutch_compare_banked(
+        jnp.asarray(vals.astype(np.uint32)), scalars, plan))
+    np.testing.assert_array_equal(machine_bm, kernel_bm[:, :n])
+
+
 # ----------------- cross-substrate agreement -------------------------- #
 
 def test_machine_and_kernel_agree():

@@ -1,0 +1,308 @@
+"""Command-stream scheduler + async pipeline tests: hand-built streams
+against analytic expectations, [max, sum] bound properties, channel-aware
+placement, stream replay, and the app pipelines' functional equivalence
+with the NumPy references (including the acceptance-scale 1M-record
+predicate batch and 64-instance GBDT batch)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.clutch import ClutchEngine
+from repro.core.device import PuDDevice
+from repro.core.machine import (
+    BankedSubarray,
+    PuDArch,
+    PuDOp,
+    Segment,
+    replay,
+)
+from repro.core.scheduler import ChannelScheduler, GroupStream
+
+SEGS = (Segment(0, "", ()),)
+
+
+def _stream(label, footprint, ops, cols=65536, segs=None, segments=None):
+    ops = tuple(ops)
+    return GroupStream(label=label, footprint=footprint,
+                       cols_per_bank=cols, ops=ops,
+                       segs=tuple(segs) if segs else (0,) * len(ops),
+                       segments=tuple(segments) if segments else SEGS)
+
+
+# ------------------- hand-built analytic expectations ------------------ #
+
+def test_disjoint_channels_fully_overlap():
+    """Two groups on different channels: makespan == max of group times."""
+    a = _stream("a", {0: {0: 16}}, [PuDOp.ROWCOPY] * 10)
+    b = _stream("b", {1: {0: 16}}, [PuDOp.ROWCOPY] * 6)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([a, b])
+    assert tl.makespan_ns == pytest.approx(tl.group_busy_ns["a"])
+    assert tl.group_busy_ns["a"] > tl.group_busy_ns["b"]
+    assert tl.makespan_ns == pytest.approx(tl.overlap_bound_ns)
+
+
+def test_shared_channel_serializes():
+    """Two groups sharing one channel's command bus: makespan == sum
+    (precisely-timed waves hold the bus exclusively)."""
+    a = _stream("a", {0: {0: 16}}, [PuDOp.ROWCOPY] * 10)
+    b = _stream("b", {0: {1: 16}}, [PuDOp.ROWCOPY] * 6)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([a, b])
+    assert tl.makespan_ns == pytest.approx(
+        tl.group_busy_ns["a"] + tl.group_busy_ns["b"])
+    assert tl.makespan_ns == pytest.approx(tl.serial_bound_ns)
+
+
+def test_shared_channel_interleaves_groups():
+    """Co-resident groups interleave on the bus rather than running one
+    group to completion."""
+    a = _stream("a", {0: {0: 8}}, [PuDOp.ROWCOPY] * 4)
+    b = _stream("b", {0: {1: 8}}, [PuDOp.ROWCOPY] * 4)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([a, b])
+    order = [w.group for w in sorted(tl.waves, key=lambda w: w.start_ns)]
+    assert order == ["a", "b"] * 4
+
+
+def test_wave_duration_matches_blp_wave_time():
+    """The scheduler's per-wave duration equals the histogram model's
+    wave_time for a single-rank group (model consistency)."""
+    s = _stream("a", {0: {0: 16}}, [PuDOp.ROWCOPY])
+    sch = ChannelScheduler(cost.DESKTOP)
+    assert sch.wave_duration_ns(PuDOp.ROWCOPY, s) == pytest.approx(
+        cost.wave_time(PuDOp.ROWCOPY, cost.DESKTOP, banks=16))
+
+
+def test_multi_channel_group_lockstep_and_io_split():
+    """A group spanning 2 channels: compute stagger is bounded by its
+    largest per-rank bank count; a row readout moves each channel's
+    share concurrently (per-channel bandwidth)."""
+    fp = {0: {0: 8}, 1: {0: 8}}
+    s = _stream("a", fp, [PuDOp.READ], cols=65536)
+    sch = ChannelScheduler(cost.DESKTOP)
+    one = _stream("b", {0: {0: 16}}, [PuDOp.READ], cols=65536)
+    # 16 banks on one channel move 2x the bytes over one bus
+    assert sch.wave_duration_ns(PuDOp.READ, one) == pytest.approx(
+        2 * sch.wave_duration_ns(PuDOp.READ, s))
+
+
+def test_readout_hoisted_before_independent_compute():
+    """With segment deps, a buffered readout recorded AFTER the next
+    compute can still schedule right after its producer (the host
+    drains results early)."""
+    segments = (Segment(0, "c0", ()), Segment(1, "c1", (0,)),
+                Segment(2, "r0", (0,)))
+    # record order: c0, c1, r0 -- but r0 only depends on c0
+    s = _stream("a", {0: {0: 4}},
+                [PuDOp.ROWCOPY, PuDOp.ROWCOPY, PuDOp.READ],
+                segs=(0, 1, 2), segments=segments)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([s])
+    starts = {w.seg_label: w.start_ns for w in tl.waves}
+    assert starts["r0"] < starts["c1"]
+
+
+def test_dependent_readout_not_hoisted():
+    """The default chained stream keeps record order."""
+    segments = (Segment(0, "c0", ()), Segment(1, "c1", (0,)),
+                Segment(2, "r0", (1,)))
+    s = _stream("a", {0: {0: 4}},
+                [PuDOp.ROWCOPY, PuDOp.ROWCOPY, PuDOp.READ],
+                segs=(0, 1, 2), segments=segments)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([s])
+    starts = {w.seg_label: w.start_ns for w in tl.waves}
+    assert starts["r0"] > starts["c1"]
+
+
+# --------------------------- bound property ---------------------------- #
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 4))
+def test_scheduled_time_within_bounds(seed, n_groups, channels):
+    """Scheduled makespan always lies in [max group time, sum of group
+    times] regardless of placement and op mix."""
+    rng = np.random.default_rng(seed)
+    ops_pool = [PuDOp.ROWCOPY, PuDOp.TRA, PuDOp.FRAC, PuDOp.READ]
+    streams = []
+    for g in range(n_groups):
+        n_ops = int(rng.integers(1, 20))
+        ops = [ops_pool[i] for i in rng.integers(0, len(ops_pool), n_ops)]
+        fp = {}
+        for _ in range(int(rng.integers(1, 3))):
+            ch = int(rng.integers(0, channels))
+            rank = int(rng.integers(0, 2))
+            fp.setdefault(ch, {})[rank] = int(rng.integers(1, 17))
+        streams.append(_stream(f"g{g}", fp, ops, cols=4096))
+    sys_cfg = cost.DESKTOP
+    tl = ChannelScheduler(sys_cfg).schedule(streams)
+    lo, hi = tl.overlap_bound_ns, tl.serial_bound_ns
+    assert lo - 1e-6 <= tl.makespan_ns <= hi + 1e-6
+
+
+# ------------------------ device integration --------------------------- #
+
+def test_device_cost_summary_scheduled_between_bounds():
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=4, n_bits=8, seed=1)
+    for ch in (0, 1):
+        eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=8,
+                              device=dev, channels=ch, label=f"g{ch}")
+        rng = np.random.default_rng(ch)
+        eng.infer(rng.integers(0, 256, (8, 4), dtype=np.uint64))
+    s = dev.cost_summary(cost.DESKTOP)
+    assert s["time_overlap_ns"] - 1e-6 <= s["time_scheduled_ns"] \
+        <= s["time_serial_ns"] + 1e-6
+    # groups on disjoint channels with near-identical streams: the
+    # schedule must beat full serialization by a wide margin
+    assert s["time_scheduled_ns"] < 0.75 * s["time_serial_ns"]
+
+
+def test_channel_aware_placement():
+    dev = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=1,
+                    banks_per_rank=8)
+    s0 = dev.alloc_banks(4, num_cols=4096, label="a", channels=1)
+    g0 = dev.groups[0]
+    assert set(dev.footprint(g0)) == {1}
+    sp = dev.alloc_banks(8, num_cols=4096, label="b", channels="spread")
+    fp = dev.footprint(dev.groups[1])
+    assert {c: sum(r.values()) for c, r in fp.items()} == {0: 4, 1: 4}
+    with pytest.raises(MemoryError):
+        dev.alloc_banks(2, channels=1)   # channel 1 is now full
+    assert dev.banks_free == 4
+
+
+def test_channel_scaling_throughput_acceptance():
+    """Acceptance: the same 4-group pipelined GBDT workload gains >1.5x
+    scheduled throughput from 1 -> 4 channels."""
+    from dataclasses import replace
+
+    forest = G.ObliviousForest.random(num_trees=8, depth=4,
+                                      num_features=3, n_bits=8, seed=0)
+    rng = np.random.default_rng(1)
+    makespan = {}
+    for ch in (1, 4):
+        sys_cfg = replace(cost.DESKTOP, channels=ch,
+                          bandwidth_gbps=21.3 * ch)
+        dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+        pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
+                                   num_groups=4, banks_per_group=2)
+        x = rng.integers(0, 256, (2 * pipe.wave_width, 3), dtype=np.uint64)
+        for e in pipe.engines:
+            e.sub.trace.clear()
+        pipe.infer(x)
+        makespan[ch] = dev.schedule(sys_cfg).makespan_ns
+    assert makespan[1] / makespan[4] > 1.5
+
+
+# ------------------------- stream replay ------------------------------- #
+
+@pytest.mark.parametrize("arch", [PuDArch.MODIFIED, PuDArch.UNMODIFIED])
+def test_recorded_stream_replays_to_same_state(arch):
+    """The recorded compute stream fully determines execution: replaying
+    it on a snapshot of the post-load state reproduces the bitmap."""
+    rng = np.random.default_rng(5)
+    vals = rng.integers(0, 1 << 16, (3, 256), dtype=np.uint64)
+    sub = BankedSubarray(num_banks=3, num_rows=2048, num_cols=4096,
+                         arch=arch)
+    eng = ClutchEngine(sub, vals, 16, num_chunks=4)
+    snapshot = sub.state.copy()
+    sub.trace.clear()
+    res = eng.predicate("<", np.array([77, 30000, 4095]))
+    want = sub.peek(res.row).copy()
+
+    twin = BankedSubarray(num_banks=3, num_rows=2048, num_cols=4096,
+                          arch=arch, seed=None)
+    twin.state[...] = snapshot
+    replay(sub.trace.entries, twin)
+    np.testing.assert_array_equal(twin.peek(res.row), want)
+
+
+def test_predicate_segment_tagging():
+    """ClutchEngine.predicate(segment=...) opens a labeled segment whose
+    waves the scheduler can attribute."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 8, 128, dtype=np.uint64)
+    sub = BankedSubarray(num_banks=1, num_rows=1024, num_cols=128,
+                         arch=PuDArch.MODIFIED)
+    eng = ClutchEngine(sub, vals, 8, num_chunks=2)
+    n_before = len(sub.trace.entries)
+    eng.predicate(">", 100, segment="qX")
+    sid = sub.trace.current_segment
+    assert sub.trace.segments[sid].label == "qX"
+    assert all(e.seg == sid for e in sub.trace.entries[n_before:])
+
+
+# ---------------------- pipeline == references ------------------------- #
+
+def test_gbdt_pipeline_matches_reference_64_instances():
+    """Acceptance: a 64-instance batch through the async pipeline path
+    (2 channel-spread groups, double-buffered waves) matches
+    reference_predict exactly like the serial path."""
+    forest = G.ObliviousForest.random(num_trees=40, depth=6,
+                                      num_features=5, n_bits=8, seed=9)
+    rng = np.random.default_rng(13)
+    x = rng.integers(0, 256, (64, 5), dtype=np.uint64)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
+                               num_groups=2, banks_per_group=8)
+    got = pipe.infer(x)
+    np.testing.assert_allclose(got, G.reference_predict(forest, x),
+                               atol=1e-3)
+    stats = pipe.last_stats(cost.DESKTOP)
+    assert stats.num_waves == 4
+    assert stats.overlapped_ns <= stats.serialized_ns + 1e-6
+
+
+def test_gbdt_pipeline_ragged_tail():
+    forest = G.ObliviousForest.random(num_trees=24, depth=5,
+                                      num_features=4, n_bits=8, seed=2)
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 256, (19, 4), dtype=np.uint64)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
+                               num_groups=3, banks_per_group=3)
+    np.testing.assert_allclose(pipe.infer(x),
+                               G.reference_predict(forest, x), atol=1e-3)
+
+
+def test_gbdt_forest_wider_than_one_bank():
+    """ROADMAP item: >65536-node forests shard node columns across banks
+    and merge partial leaf-address rows host-side."""
+    forest = G.ObliviousForest.random(num_trees=11_000, depth=6,
+                                      num_features=4, n_bits=8, seed=4)
+    assert forest.num_trees * forest.depth > 65536
+    eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=4)
+    assert eng.col_shards == 2 and eng.wave_width == 2
+    rng = np.random.default_rng(8)
+    x = rng.integers(0, 256, (3, 4), dtype=np.uint64)
+    np.testing.assert_allclose(eng.infer(x),
+                               G.reference_predict(forest, x), atol=1e-2)
+    assert eng.ops_per_instance == G.gbdt_ops_per_instance(
+        forest, eng.num_chunks, PuDArch.MODIFIED)
+
+
+def test_query_pipeline_matches_references_1m_records():
+    """Acceptance: Q1-Q5 on a 1M-record table through the async sharded
+    pipeline equal the NumPy references."""
+    t = P.Table.generate(1_000_000, 8, seed=11)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev, num_shards=2)
+    mx = 255
+    qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    res = qp.run([
+        ("q1", 0, mx // 8, mx // 2),
+        ("q2", *qa),
+        ("q3", *qa),
+        ("q4", 2, *qa),
+        ("q5", 3, 2, *qa),
+    ])
+    assert (res[0] == P.reference_q1(t, 0, mx // 8, mx // 2)).all()
+    assert (res[1] == P.reference_q2(t, *qa)).all()
+    assert res[2] == P.reference_q3(t, *qa)
+    assert abs(res[3] - P.reference_q4(t, 2, *qa)) < 1e-9
+    assert res[4] == P.reference_q5(t, 3, 2, *qa)
+    stats = qp.last_stats(cost.DESKTOP)
+    assert stats.num_waves == 6   # five queries + Q5's phase 2
+    assert stats.overlapped_ns <= stats.serialized_ns + 1e-6
