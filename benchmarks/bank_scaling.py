@@ -33,6 +33,13 @@ from repro.core.machine import PuDArch
 BANK_SWEEP = (1, 4, 16, 64)
 
 
+def _channels_spanned(banks: int, sys_cfg: cost.SystemConfig) -> int:
+    """Channels a contiguous ``banks``-bank placement would span --
+    charge host I/O at that share, matching the bus scheduler."""
+    per_ch = sys_cfg.ranks_per_channel * sys_cfg.banks_per_rank
+    return min(sys_cfg.channels, -(-banks // per_ch))
+
+
 def gbdt_bank_scaling(smoke: bool = False):
     rows = []
     trees, feats = (8, 3) if smoke else (64, 8)
@@ -48,7 +55,8 @@ def gbdt_bank_scaling(smoke: bool = False):
         eng.infer(x)
         wall_us = (time.perf_counter() - t0) * 1e6
         kc = cost.trace_cost(eng.sub.trace.counts(), cost.DESKTOP,
-                             banks=banks, cols_per_bank=eng.sub.num_cols)
+                             banks=banks, cols_per_bank=eng.sub.num_cols,
+                             channels=_channels_spanned(banks, cost.DESKTOP))
         inst_per_ms = banks / (kc.time_ns / 1e6)
         rows.append((f"bank_scaling_gbdt_b{banks}",
                      round(kc.time_ns / 1e3, 2), round(inst_per_ms, 1)))
@@ -69,7 +77,8 @@ def predicate_bank_scaling(smoke: bool = False):
         e.q2(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
              y1=3 * mx // 4)
         kc = cost.trace_cost(e.sub.trace.counts(), cost.DESKTOP,
-                             banks=banks, cols_per_bank=e.sub.num_cols)
+                             banks=banks, cols_per_bank=e.sub.num_cols,
+                             channels=_channels_spanned(banks, cost.DESKTOP))
         grps = n / kc.time_ns  # records per ns == G-records/s
         rows.append((f"bank_scaling_q2_b{banks}",
                      round(kc.time_ns / 1e3, 2), round(grps, 3)))

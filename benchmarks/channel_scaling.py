@@ -1,11 +1,16 @@
 """Throughput vs channel count + pipeline overlap, from REAL scheduled
-timelines.
+timelines (host-barrier-aware).
 
 Unlike the serialized/overlapped brackets the device used to report,
 these rows run the functional engines, record their command streams, and
-put every wave on absolute time with the per-channel command-bus
-scheduler -- so the reported scaling is what the bus model actually
-admits, not a bound.  Reported:
+put every wave -- and every host merge, as a host-lane event -- on
+absolute time with the per-channel command-bus scheduler, so the
+reported scaling is what the bus model actually admits, not a bound.
+Throughput rows are normalized to the scheduled DRAM span
+(``Timeline.device_span_ns``: the host lane is channel-independent
+measured wall-clock, but host *barriers* still delay dependent waves
+inside that span); overlap rows use the full host-aware schedule.
+Reported:
 
   * GBDT batch pipeline: the same 4-group workload on a device with 1,
     2, 4 channels (groups placed round-robin); derived column is
@@ -16,6 +21,11 @@ admits, not a bound.  Reported:
     derived column is G-records/s of scheduled time.
   * Pipeline overlap efficiency (serialized / overlapped totals with
     measured host merges) at each channel count.
+
+Every pipeline run is checked against the sanity invariant that the
+barrier-aware overlapped total never exceeds the fully serialized
+total -- a violation (the optimistic-schedule class of bug) aborts the
+benchmark with a nonzero exit, which is what the CI smoke run guards.
 
 All RNG is fixed-seed so numbers are reproducible run-to-run.
 """
@@ -39,6 +49,16 @@ from repro.core.device import PuDDevice
 from repro.core.machine import PuDArch
 
 CHANNEL_SWEEP = (1, 2, 4)
+
+
+def _check_overlap_invariant(stats, name: str) -> None:
+    """Barrier-aware overlapped total may never beat full serialization
+    (would mean the schedule dropped a dependency or a host barrier)."""
+    if stats.overlapped_ns > stats.serialized_ns * (1 + 1e-9) + 1e-6:
+        raise SystemExit(
+            f"{name}: overlapped_ns={stats.overlapped_ns} exceeds "
+            f"serialized_ns={stats.serialized_ns} -- the schedule is "
+            "optimistic (missing host barrier or dependency)")
 
 
 def _system(channels: int) -> cost.SystemConfig:
@@ -70,17 +90,23 @@ def gbdt_channel_scaling(smoke: bool = False):
         pipe.infer(x)
         tl = dev.schedule(sys_cfg)
         stats = pipe.last_stats(sys_cfg, timeline=tl)
-        inst_per_ms = n_inst / (tl.makespan_ns / 1e6)
+        _check_overlap_invariant(stats, f"gbdt_c{ch}")
+        inst_per_ms = n_inst / (tl.device_span_ns / 1e6)
         thr[ch] = inst_per_ms
         rows.append((f"channel_scaling_gbdt_c{ch}",
-                     round(tl.makespan_ns / 1e3, 2), round(inst_per_ms, 1)))
+                     round(tl.device_span_ns / 1e3, 2),
+                     round(inst_per_ms, 1)))
         rows.append((f"channel_scaling_gbdt_c{ch}_overlap_eff",
                      round(stats.overlapped_ns / 1e3, 2),
                      round(stats.overlap_efficiency, 3)))
-        rows.append((f"channel_scaling_gbdt_c{ch}_bus_util",
+        rows.append((f"channel_scaling_gbdt_c{ch}_host_busy",
                      round(tl.makespan_ns / 1e3, 2),
-                     round(sum(tl.channel_utilization(c)
-                               for c in range(ch)) / ch, 3)))
+                     round(tl.host_busy_ns / 1e3, 2)))
+        rows.append((f"channel_scaling_gbdt_c{ch}_bus_util",
+                     round(tl.device_span_ns / 1e3, 2),
+                     round(sum(tl.channel_busy_ns.get(c, 0.0)
+                               for c in range(ch)) /
+                           (ch * tl.device_span_ns), 3)))
     hi = CHANNEL_SWEEP[1] if smoke else CHANNEL_SWEEP[-1]
     rows.append((f"channel_scaling_gbdt_speedup_1_to_{hi}", 0.0,
                  round(thr[hi] / thr[1], 2)))
@@ -95,6 +121,9 @@ def predicate_channel_scaling(smoke: bool = False):
     t = P.Table.generate(n, 8, seed=3)
     mx = 255
     qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    # throughput rows stay Q5-free: a Q5 barrier injects measured host
+    # wall-clock into the device span, which would swamp the modeled
+    # DRAM scaling being measured here (q5_barrier_metrics covers Q5)
     queries = [("q1", 0, mx // 8, mx // 2), ("q2", *qa), ("q3", *qa)]
     if not smoke:
         queries = queries * 2
@@ -108,17 +137,64 @@ def predicate_channel_scaling(smoke: bool = False):
         qp.run(queries)
         tl = dev.schedule(sys_cfg)
         stats = qp.last_stats(sys_cfg, timeline=tl)
-        grps = len(queries) * n / tl.makespan_ns   # records/ns == G-rec/s
+        _check_overlap_invariant(stats, f"q123_c{ch}")
+        # records/ns == G-rec/s of scheduled DRAM time
+        grps = len(queries) * n / tl.device_span_ns
         rows.append((f"channel_scaling_q123_c{ch}",
-                     round(tl.makespan_ns / 1e3, 2), round(grps, 3)))
+                     round(tl.device_span_ns / 1e3, 2), round(grps, 3)))
         rows.append((f"channel_scaling_q123_c{ch}_overlap_eff",
                      round(stats.overlapped_ns / 1e3, 2),
                      round(stats.overlap_efficiency, 3)))
     return rows
 
 
+def q5_barrier_metrics(smoke: bool = False):
+    """Dedicated Q5 rows: the host-barrier bubble itself, not
+    throughput (the bubble is measured host wall-clock, so folding it
+    into scaling rows would just report merge noise).  Reports the
+    barrier-aware makespan, the host-lane busy time, and the device
+    span with vs without the recorded barriers -- the last pair is the
+    modeling hole this path closes."""
+    from dataclasses import replace as drep
+
+    from repro.core.scheduler import ChannelScheduler, Segment
+
+    n = 8_000 if smoke else 64_000
+    sys_cfg = _system(2)
+    dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+    t = P.Table.generate(n, 8, seed=5)
+    qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev, num_shards=2,
+                                cols_per_bank=4096)
+    mx = 255
+    qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    for eng in qp.engines:
+        eng.sub.trace.clear()
+    qp.run([("q5", 3, 2, *qa)])
+    streams = dev.streams()
+    sched = ChannelScheduler(sys_cfg)
+    tl = sched.schedule(streams)
+    stats = qp.last_stats(sys_cfg, timeline=tl)
+    _check_overlap_invariant(stats, "q5_barrier")
+    bare = sched.schedule([
+        drep(s, host_events=(), segments=tuple(
+            Segment(g.sid, g.label, g.after, ()) for g in s.segments))
+        for s in streams])
+    if tl.device_span_ns <= bare.device_span_ns:
+        raise SystemExit(
+            "q5_barrier: barrier-aware device span does not exceed the "
+            "barrier-free schedule -- the Q5 host bubble is missing")
+    return [
+        ("q5_barrier_makespan", round(tl.makespan_ns / 1e3, 2),
+         round(tl.host_busy_ns / 1e3, 2)),
+        ("q5_barrier_device_span_vs_optimistic",
+         round(tl.device_span_ns / 1e3, 2),
+         round(bare.device_span_ns / 1e3, 2)),
+    ]
+
+
 def run(smoke: bool = False):
-    return gbdt_channel_scaling(smoke) + predicate_channel_scaling(smoke)
+    return (gbdt_channel_scaling(smoke) + predicate_channel_scaling(smoke)
+            + q5_barrier_metrics(smoke))
 
 
 def main() -> None:

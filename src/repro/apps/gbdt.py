@@ -34,8 +34,11 @@ Async host pipeline: :class:`GbdtBatchPipeline` places several engine
 groups on distinct device channels, splits a batch into waves, and
 double-buffers each group's leaf-bitmap row so host readout/merge of
 wave N overlaps PuD execution of wave N+1.  The recorded stream carries
-that structure as dependency-tagged segments, which the per-channel bus
-scheduler turns into overlapped device time.
+that structure as dependency-tagged segments plus host events -- each
+wave's leaf gather/merge is a host-lane node gated on its readout and
+chained after the previous merge -- which the per-channel bus scheduler
+turns into a timeline whose makespan includes both the overlapped
+device time and the host work it could not hide.
 
 Only the native ``a < B`` comparison is needed, so no complement planes
 are stored even on Unmodified PuD.
@@ -183,7 +186,9 @@ class GbdtPudEngine:
         self.wave_width = num_banks // self.col_shards
         if device is not None:
             self.sub = device.alloc_banks(num_banks, num_cols=n_cols,
-                                          label=label, channels=channels)
+                                          label=label, channels=channels,
+                                          active_elems=n_nodes *
+                                          self.wave_width)
         else:
             self.sub = BankedSubarray(num_banks=num_banks, num_rows=num_rows,
                                       num_cols=n_cols, arch=arch)
@@ -359,18 +364,21 @@ class GbdtBatchPipeline:
         self._last_tags = []
         self._last_host = HostTimer()
         engines = self.engines
-        # per-engine (compute segment id, readout segment id) history
+        # per-engine (compute, readout, merge-event) history
         prev_c = [None] * len(engines)
         prev_r = [None] * len(engines)
+        prev_h = [None] * len(engines)
         pending: tuple[int, list[tuple[int, int]]] | None = None
         preds_out: list[np.ndarray] = []
 
         def collect(w: int,
                     widths: list[tuple[int, int, int | None]]) -> None:
             words = []
+            hids = []
             for g, (wd, buf, c_seg) in enumerate(widths):
                 if wd == 0:
                     words.append(None)
+                    hids.append(None)
                     continue
                 tr = engines[g].sub.trace
                 # the readout depends only on the compute segment that
@@ -378,6 +386,15 @@ class GbdtBatchPipeline:
                 prev_r[g] = tr.begin_segment(
                     f"{base}.w{w}:r", after=(c_seg,))
                 words.append(engines[g]._read_wave(buf))
+                # the leaf gather/merge is host work: one shared label
+                # across groups == one host-lane node joining their
+                # readouts, chained after the previous wave's merge
+                hids.append(tr.add_host_event(
+                    f"{base}.w{w}:h", after=(prev_r[g],),
+                    after_host=() if prev_h[g] is None else (prev_h[g],),
+                    bytes_in=engines[g].sub.num_banks *
+                    engines[g].sub.num_cols / 8))
+                prev_h[g] = hids[g]
 
             def merge() -> None:
                 for g, (wd, _, _) in enumerate(widths):
@@ -385,6 +402,10 @@ class GbdtBatchPipeline:
                         preds_out.append(
                             engines[g]._merge_wave(words[g], wd)[1])
             self._last_host.measure(merge)
+            merge_ns = self._last_host.samples_ns[-1]
+            for g, hid in enumerate(hids):
+                if hid is not None:
+                    engines[g].sub.trace.set_host_duration(hid, merge_ns)
 
         n_waves = math.ceil(X.shape[0] / self.wave_width)
         off = 0
@@ -408,7 +429,8 @@ class GbdtBatchPipeline:
                     f"{base}.w{w}:c", after=after)
                 eng._compute_wave(Xg, buf)
                 widths.append((Xg.shape[0], buf, prev_c[g]))
-            self._last_tags.append([f"{base}.w{w}:c", f"{base}.w{w}:r"])
+            self._last_tags.append([f"{base}.w{w}:c", f"{base}.w{w}:r",
+                                    f"{base}.w{w}:h"])
             if pending is not None:
                 collect(*pending)
             pending = (w, widths)

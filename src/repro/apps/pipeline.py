@@ -7,18 +7,24 @@ buffer back and merges it on the host -- so host readout/merge of wave
 ``N`` overlaps PuD execution of wave ``N+1``.  The recorded stream
 carries this structure as dependency-tagged segments (compute ``w``
 depends on compute ``w-1`` and on the readout that freed its buffer;
-readout ``w`` depends only on compute ``w``), which keeps the stream
-functionally replayable and lets the per-channel bus scheduler place the
-readout as early as its data allows.
+readout ``w`` depends only on compute ``w``) plus explicit **host
+events**: each wave's merge is recorded as a host-lane node gated on
+its readout segment and chained after the previous merge, and a wave
+whose scalar comes from a merge (Q5's phase-2 scan) declares that merge
+as a barrier (``after_host``).  The per-channel bus scheduler therefore
+places host work on absolute time alongside the device waves, and a
+dependent wave can never be scheduled before the host round trip that
+produces its input.
 
-This module turns a scheduled timeline + measured host-merge times into
-the two totals the benchmarks report:
+This module turns that scheduled timeline + measured host-merge times
+into the two totals the benchmarks report:
 
 * ``serialized_ns``  -- every device wave back-to-back, every host merge
   after its wave: the no-pipeline baseline.
-* ``overlapped_ns``  -- device waves at their scheduled times, host
-  merge of wave ``w`` starting at max(readout ``w`` done, previous merge
-  done): the double-buffered pipeline.
+* ``overlapped_ns``  -- the pipeline's span in the barrier-aware
+  schedule: device waves and host spans at their scheduled times.  This
+  is read directly off the timeline -- there is no separate host-done
+  recurrence that could disagree with the schedule.
 
 Device time is modeled (ns, from the scheduler); host time is the
 measured wall-clock of the actual NumPy merge work, following the
@@ -36,12 +42,19 @@ from repro.core.scheduler import Timeline
 
 @dataclass
 class PipelineStats:
-    """Per-wave scheduled device spans + measured host merge times."""
+    """Per-wave scheduled device spans + measured host merge times.
+
+    ``makespan_ns`` is the pipeline's span in the barrier-aware
+    schedule (device waves AND host-lane spans, relative to the
+    pipeline's first wave) -- the overlapped total.  ``device_ns`` is
+    the device-wave span alone.
+    """
 
     wave_done_ns: list[float] = field(default_factory=list)
     wave_busy_ns: list[float] = field(default_factory=list)
     host_ns: list[float] = field(default_factory=list)
-    makespan_ns: float = 0.0     # device time of the pipeline's waves
+    makespan_ns: float = 0.0     # device + host span of the pipeline
+    device_ns: float = 0.0       # device-wave span alone
 
     @property
     def num_waves(self) -> int:
@@ -55,12 +68,10 @@ class PipelineStats:
 
     @property
     def overlapped_ns(self) -> float:
-        """Double-buffered pipeline: merge of wave N overlaps device
-        execution of wave N+1."""
-        host_done = 0.0
-        for done, host in zip(self.wave_done_ns, self.host_ns):
-            host_done = max(done, host_done) + host
-        return max(self.makespan_ns, host_done)
+        """Double-buffered pipeline total, straight from the
+        barrier-aware schedule (merge of wave N overlaps device
+        execution of wave N+1; host barriers stall dependent waves)."""
+        return self.makespan_ns
 
     @property
     def overlap_efficiency(self) -> float:
@@ -74,11 +85,13 @@ def stats_from_timeline(timeline: Timeline, group_labels: list[str],
                         host_ns: list[float]) -> PipelineStats:
     """Build :class:`PipelineStats` from a scheduled device timeline.
 
-    ``wave_tags[w]`` lists the trace-segment labels belonging to wave
-    ``w`` (its compute and readout segments) on every group in
-    ``group_labels``.  Times are reported relative to the pipeline's
-    first scheduled wave so one-time setup streams (LUT loading) in the
-    same traces don't count against the pipeline.
+    ``wave_tags[w]`` lists the trace-segment AND host-event labels
+    belonging to wave ``w`` (its compute, readout, and merge steps) on
+    every group in ``group_labels``.  Times are reported relative to
+    the pipeline's first scheduled wave so one-time setup streams (LUT
+    loading) in the same traces don't count against the pipeline; the
+    pipeline's host spans (matched by label) extend the total the same
+    way they extend the device makespan.
     """
     groups = set(group_labels)
     tag_to_wave = {t: w for w, tags in enumerate(wave_tags)
@@ -86,7 +99,7 @@ def stats_from_timeline(timeline: Timeline, group_labels: list[str],
     done = [0.0] * len(wave_tags)
     busy = [0.0] * len(wave_tags)
     t0 = None
-    t_end = 0.0
+    dev_end = 0.0
     for w in timeline.waves:
         if w.group not in groups or w.seg_label not in tag_to_wave:
             continue
@@ -94,13 +107,18 @@ def stats_from_timeline(timeline: Timeline, group_labels: list[str],
         busy[i] += w.duration_ns
         done[i] = max(done[i], w.end_ns)
         t0 = w.start_ns if t0 is None else min(t0, w.start_ns)
-        t_end = max(t_end, w.end_ns)
+        dev_end = max(dev_end, w.end_ns)
     t0 = t0 or 0.0
+    t_end = dev_end
+    for h in timeline.host_spans:
+        if h.label in tag_to_wave:
+            t_end = max(t_end, h.end_ns)
     return PipelineStats(
         wave_done_ns=[max(0.0, d - t0) for d in done],
         wave_busy_ns=busy,
         host_ns=list(host_ns),
         makespan_ns=t_end - t0,
+        device_ns=dev_end - t0,
     )
 
 

@@ -28,6 +28,11 @@ stream is issued, and only then is the parked row read back and merged
 (COUNT/AVERAGE) on the host -- so host readout/merge of query N
 overlaps PuD execution of query N+1, and shard readouts on one channel
 overlap other shards' compute on other channels in the bus scheduler.
+Every merge is recorded as a host event (one label across all shards ==
+one host-lane node joining their readouts), and Q5's phase-2 scan --
+whose scalar exists only after phase 1's merge -- declares that merge
+as an ``after_host`` barrier, so the scheduled timeline contains the
+host round trip instead of assuming the scalar was already available.
 """
 
 from __future__ import annotations
@@ -124,7 +129,8 @@ class PudQueryEngine:
             if device is not None:
                 return device.alloc_banks(self.num_banks, num_cols=n_cols,
                                           label=self.label,
-                                          channels=channels)
+                                          channels=channels,
+                                          active_elems=records)
             return BankedSubarray(num_banks=self.num_banks,
                                   num_rows=num_rows, num_cols=n_cols,
                                   arch=arch)
@@ -218,19 +224,23 @@ class PudQueryEngine:
     # --------------------- pipelined submit/collect -------------------- #
     def submit(self, kind: str, params: tuple, buf: int,
                segment: str | None = None,
-               after: tuple[int, ...] | None = None) -> int:
+               after: tuple[int, ...] | None = None,
+               after_host: tuple[int, ...] = ()) -> int:
         """Record (and functionally execute) one WHERE-clause bitmap
         stream, parking the result in double-buffer row ``buf`` so it
         survives the next submission.  ``kind``: ``"range"`` (x0<f<x1),
         ``"and2"`` / ``"or2"`` (two ranges combined).  ``segment`` opens
-        a labeled trace segment for the scheduler.  Returns the park
-        row."""
+        a labeled trace segment for the scheduler; ``after_host`` lists
+        host events (recorded merges) the segment's waves must wait for
+        -- the host-barrier case where this stream's scalar comes from
+        an earlier readout's merge.  Returns the park row."""
         if segment is not None:
-            self.sub.trace.begin_segment(segment, after=after)
-        elif after is not None:
-            raise ValueError("`after` requires a `segment` label: without "
-                             "a new segment the dependency would be "
-                             "silently dropped")
+            self.sub.trace.begin_segment(segment, after=after,
+                                         after_host=tuple(after_host))
+        elif after is not None or after_host:
+            raise ValueError("`after`/`after_host` require a `segment` "
+                             "label: without a new segment the dependency "
+                             "would be silently dropped")
         if kind == "range":
             fi, x0, x1 = params
             row = self._range(fi, x0, x1, 0)
@@ -282,16 +292,35 @@ class PudQueryEngine:
         vals = self.table.features[fk][mask]
         return float(vals.mean()) if vals.size else 0.0
 
+    _host_uid = 0
+
     def q5(self, fl: int, fk: int, fi: int, x0: int, x1: int, fj: int,
            y0: int, y1: int) -> int:
         """WITH avg = AVERAGE(f_k) WHERE(x0<f_i<x1 OR y0<f_j<y1)
-        COUNT(WHERE avg < f_l < 2*avg)."""
+        COUNT(WHERE avg < f_l < 2*avg).
+
+        The phase-2 scan's bounds exist only after the host has merged
+        phase 1's readout and averaged f_k, so that host work is
+        recorded as a host event and phase 2 opens a segment gated on it
+        -- the scheduled timeline includes the round trip."""
         r1 = self._range(fi, x0, x1, 0)
         r2 = self._range(fj, y0, y1, 1)
         row = self.sub.maj3_into_acc(r1, r2, self.sub.ROW_ONE)
-        mask = self._read(row)
-        vals = self.table.features[fk][mask]
-        avg = int(vals.mean()) if vals.size else 0
+        words = self.sub.host_read_row(row)
+        timer = HostTimer()
+
+        def host_average() -> int:
+            vals = self.table.features[fk][self.merge_words(words)]
+            return int(vals.mean()) if vals.size else 0
+        avg = timer.measure(host_average)
+        PudQueryEngine._host_uid += 1
+        hid = self.sub.trace.add_host_event(
+            f"{self.label}.q5m{PudQueryEngine._host_uid}",
+            duration_ns=timer.samples_ns[-1],
+            bytes_in=self.sub.num_banks * self.sub.num_cols / 8)
+        self.sub.trace.begin_segment(
+            f"{self.label}.q5p2.{PudQueryEngine._host_uid}",
+            after_host=(hid,))
         hi = min(2 * avg, (1 << self.table.n_bits) - 1)
         if avg >= hi:
             return 0
@@ -309,9 +338,13 @@ class ShardedQueryPipeline:
     issued on every shard before query N's parked bitmaps are read back
     and merged host-side, so the host work overlaps PuD execution and
     shard readouts overlap other channels' compute in the bus
-    scheduler.  Q5's second phase takes its scalar from the first
-    phase's host merge (a host barrier): the dependent wave is created
-    during that merge, which naturally inserts a pipeline bubble.
+    scheduler.  Each wave's merge is recorded as a host event shared by
+    every shard's trace (one host-lane node joining all readouts,
+    chained after the previous merge).  Q5's second phase takes its
+    scalar from the first phase's host merge (a host barrier): the
+    dependent wave is created during that merge AND declares it via
+    ``after_host``, so the scheduled timeline -- not just the record
+    order -- contains the pipeline bubble.
 
     Queries are tuples: ``("q1", fi, x0, x1)``, ``("q2"|"q3", fi, x0,
     x1, fj, y0, y1)``, ``("q4", fk, fi, x0, x1, fj, y0, y1)``,
@@ -366,6 +399,7 @@ class ShardedQueryPipeline:
 
         engines = self.engines
         prev_c: list[int | None] = [None] * len(engines)
+        prev_h: list[int | None] = [None] * len(engines)
         last_r_by_buf: list[dict[int, int]] = [dict() for _ in engines]
         pending = None
         w = 0
@@ -380,23 +414,35 @@ class ShardedQueryPipeline:
                     after = (prev_c[s],)
                     if buf in last_r_by_buf[s]:
                         after += (last_r_by_buf[s][buf],)
+                # host barrier: a Q5 phase-2 wave may not start before
+                # the merge that produced its scalar bounds
+                after_host = (wave["hids"][s],) if wave.get("hids") else ()
                 eng.submit(wave["kind"], wave["params"], buf,
-                           segment=f"{tag}:c", after=after)
+                           segment=f"{tag}:c", after=after,
+                           after_host=after_host)
                 prev_c[s] = eng.sub.trace.current_segment
                 c_segs.append(prev_c[s])
-            self._last_tags.append([f"{tag}:c", f"{tag}:r"])
+            self._last_tags.append([f"{tag}:c", f"{tag}:r", f"{tag}:h"])
             return (wave, w, buf, c_segs)
 
         def collect(item) -> None:
             wave, wi, buf, c_segs = item
             tag = f"{base}.w{wi}"
             words = []
+            hids = []
             for s, eng in enumerate(engines):
                 # the readout depends only on the compute segment that
                 # parked this buffer, not on later waves
                 last_r_by_buf[s][buf] = eng.sub.trace.begin_segment(
                     f"{tag}:r", after=(c_segs[s],))
                 words.append(eng.read_parked(buf))
+                # one shared label across shards == one host-lane node
+                # joining every shard's readout; merges chain serially
+                hids.append(eng.sub.trace.add_host_event(
+                    f"{tag}:h", after=(last_r_by_buf[s][buf],),
+                    after_host=() if prev_h[s] is None else (prev_h[s],),
+                    bytes_in=eng.sub.num_banks * eng.sub.num_cols / 8))
+                prev_h[s] = hids[s]
 
             def merge() -> None:
                 bitmap = np.concatenate(
@@ -404,6 +450,14 @@ class ShardedQueryPipeline:
                      for eng, ws in zip(engines, words)])
                 wave["merge"](bitmap)
             self._last_host.measure(merge)
+            merge_ns = self._last_host.samples_ns[-1]
+            for s, eng in enumerate(engines):
+                eng.sub.trace.set_host_duration(hids[s], merge_ns)
+            # a dependent wave enqueued during this merge (Q5 phase 2)
+            # is barred on this wave's merge event
+            for queued in work_ref[0]:
+                if queued.get("barrier") and "hids" not in queued:
+                    queued["hids"] = list(hids)
 
         while work or pending is not None:
             if work:
@@ -451,9 +505,11 @@ class ShardedQueryPipeline:
                 if avg >= hi:
                     results[qi] = 0
                     return
-                # host barrier: the dependent wave exists only now
+                # host barrier: the dependent wave exists only now, and
+                # its segments will declare this merge via after_host
                 work_ref[0].appendleft({
                     "kind": "range", "params": (fl, avg, hi),
+                    "barrier": True,
                     "merge": lambda bm2: results.__setitem__(
                         qi, int(bm2.sum())),
                 })

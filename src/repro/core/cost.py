@@ -16,12 +16,15 @@ Two accounting paths coexist:
 * **Timeline path** (``timeline_cost``): the whole device.  The
   per-channel command-bus scheduler
   (:class:`~repro.core.scheduler.ChannelScheduler`) places every
-  recorded wave of every group on absolute time; latency is the
-  timeline's makespan (channel contention and cross-channel overlap
+  recorded wave of every group -- and every recorded host event -- on
+  absolute time; latency is the timeline's makespan (channel
+  contention, cross-channel overlap, and host-barrier bubbles all
   included, host I/O charged at per-channel bandwidth) and energy is
-  summed per scheduled wave.  ``PuDDevice.cost_summary`` reports this
-  next to the old serialized/overlapped brackets, which survive as
-  bounds: scheduled time always lies in [max-of-groups, sum-of-groups].
+  summed per scheduled wave, with host power split into active power
+  over the scheduled host spans and idle power over the remainder.
+  ``PuDDevice.cost_summary`` reports this next to the old
+  serialized/overlapped brackets, which survive as bounds: scheduled
+  time always lies in [max-of-groups, sum-of-groups + host].
 
 All constants are explicit dataclass fields so benchmarks can report
 sensitivity.  Energy follows the paper: each additional simultaneously
@@ -92,6 +95,7 @@ class SystemConfig:
     cols_per_bank: int               # row-buffer bits == PuD SIMD lanes
     host_power_w: float              # active host power during baseline run
     host_idle_power_w: float         # host power while PuD computes
+    host_mem_gbps: float = 20.0      # single-thread host merge/memcpy rate
     e_act_nj: float = 2.1            # single-row activation+precharge energy
     e_io_pj_per_bit: float = 22.0    # off-chip transfer energy
     multi_act_overhead: float = 0.22 # +22%/extra row (paper, [197])
@@ -243,7 +247,9 @@ def transfer_energy_nj(n_bytes: float, sys: SystemConfig) -> float:
 
 def trace_cost(op_counts: dict[str, int], sys: SystemConfig, *,
                banks: int, cols_per_bank: int,
-               include_host_io: bool = True) -> "KernelCost":
+               include_host_io: bool = True,
+               channels: int | None = None,
+               elems: int | None = None) -> "KernelCost":
     """Cost of a *measured* machine trace: the op histogram of a
     :class:`~repro.core.machine.CommandTrace` from a ``banks``-wide
     :class:`~repro.core.machine.BankedSubarray` (one trace entry == one
@@ -251,19 +257,28 @@ def trace_cost(op_counts: dict[str, int], sys: SystemConfig, *,
 
     PuD waves go through the BLP model parameterized by the group's
     actual bank count; READ/WRITE entries become off-chip transfers of
-    one row per bank each.  This is how the benchmarks turn functional
-    banked runs directly into latency/energy, instead of re-deriving op
-    histograms from closed forms.
+    one row per bank each, charged at the bandwidth of the ``channels``
+    the group actually spans (``channels * bandwidth / sys.channels``,
+    the same per-channel share the bus scheduler uses -- a
+    single-channel group does NOT get the whole device's pins).
+    ``channels=None`` keeps the historical whole-device assumption for
+    callers that model an unplaced group.  ``elems`` overrides the SIMD
+    width when the engine uses fewer lanes than ``banks *
+    cols_per_bank`` (padded shards).
     """
     t = sequence_time_ns(op_counts, sys, banks)
     e = sequence_energy_nj(op_counts, sys, banks)
     if include_host_io:
         io_rows = op_counts.get("read", 0) + op_counts.get("write", 0)
         io_bytes = io_rows * banks * cols_per_bank / 8
-        t += transfer_time_ns(io_bytes, sys)
+        share = 1.0 if channels is None \
+            else min(channels, sys.channels) / sys.channels
+        t += transfer_time_ns(io_bytes, sys) / share
         e += transfer_energy_nj(io_bytes, sys)
     e += sys.host_idle_power_w * t
-    return KernelCost(time_ns=t, energy_nj=e, elems=banks * cols_per_bank)
+    return KernelCost(time_ns=t, energy_nj=e,
+                      elems=banks * cols_per_bank if elems is None
+                      else elems)
 
 
 def timeline_cost(timeline, sys: SystemConfig) -> "KernelCost":
@@ -271,14 +286,17 @@ def timeline_cost(timeline, sys: SystemConfig) -> "KernelCost":
     (:class:`~repro.core.scheduler.Timeline`).
 
     Latency is the makespan -- channel contention between co-resident
-    groups and overlap across disjoint channels are both already in the
-    wave placement, and host row I/O was charged at per-channel
-    bandwidth by the scheduler.  Energy sums every scheduled wave
-    (activation energy for compute waves, per-byte transfer energy for
-    I/O waves) plus host idle power over the makespan.  ``elems`` is the
-    total SIMD width that computed: sum over waves is wrong (waves
-    repeat per group), so we count each group's banks once via the
-    timeline's per-group tallies and the wave metadata.
+    groups, overlap across disjoint channels, and host-barrier bubbles
+    (scheduled host-lane spans) are all already in the placement, and
+    host row I/O was charged at per-channel bandwidth by the scheduler.
+    Energy sums every scheduled wave (activation energy for compute
+    waves, per-byte transfer energy for I/O waves) plus host power
+    split by what the host is actually doing: active power over the
+    scheduled host spans (merges, reductions), idle power over the rest
+    of the makespan -- not idle power over the whole makespan, which
+    double-counted merge time as idle.  ``elems`` is the total SIMD
+    width that computed useful lanes: each group counted once via the
+    timeline's per-group tallies (padded columns excluded).
     """
     from .machine import PuDOp as _Op
 
@@ -288,7 +306,9 @@ def timeline_cost(timeline, sys: SystemConfig) -> "KernelCost":
             e += transfer_energy_nj(w.io_bytes, sys)
         else:
             e += wave_energy_nj(w.op, w.banks, sys)
-    e += sys.host_idle_power_w * timeline.makespan_ns
+    host_active = min(timeline.host_busy_ns, timeline.makespan_ns)
+    e += sys.host_power_w * host_active
+    e += sys.host_idle_power_w * (timeline.makespan_ns - host_active)
     return KernelCost(time_ns=timeline.makespan_ns, energy_nj=e,
                       elems=sum(timeline.group_elems.values()))
 

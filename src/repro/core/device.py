@@ -19,14 +19,18 @@ device above it:
     latency.
   * **Execution model**: engines *record* typed command streams while
     they run (each group's :class:`~repro.core.machine.CommandTrace`,
-    with dependency segments); :meth:`schedule` hands every placed
-    group's stream + physical footprint to the per-channel command-bus
-    scheduler (:mod:`repro.core.scheduler`) and returns the scheduled
-    :class:`~repro.core.scheduler.Timeline`.  :meth:`cost_summary`
-    derives device latency/energy from that timeline
-    (``cost.timeline_cost``) and keeps the old serialized-sum /
-    perfect-overlap numbers as the bracketing bounds the scheduler must
-    land between.
+    with dependency segments and host-barrier events); :meth:`schedule`
+    hands every placed group's stream + physical footprint to the
+    per-channel command-bus scheduler (:mod:`repro.core.scheduler`) and
+    returns the scheduled :class:`~repro.core.scheduler.Timeline`,
+    host-lane spans included.  :meth:`cost_summary` derives device
+    latency/energy from that timeline (``cost.timeline_cost``) and
+    keeps the old serialized-sum / perfect-overlap numbers as the
+    bracketing bounds the scheduler must land between.
+  * **Dynamic bank reuse**: :meth:`free_banks` releases a placed
+    group's banks back to the free map and prunes it from
+    placement/streams, so serving workloads can rotate tables/forests
+    on one device instead of rebuilding it.
 """
 
 from __future__ import annotations
@@ -48,11 +52,14 @@ class BankAddress:
 
 @dataclass
 class BankGroup:
-    """A placed engine: which flat banks it owns and its machine state."""
+    """A placed engine: which flat banks it owns and its machine state.
+    ``active_elems`` is the SIMD width the engine actually uses (real
+    records/nodes, not padded columns); ``None`` means all columns."""
 
     banks: tuple[int, ...]
     sub: BankedSubarray
     label: str = ""
+    active_elems: int | None = None
 
     @property
     def first_bank(self) -> int:
@@ -180,10 +187,13 @@ class PuDDevice:
         return picked
 
     def alloc_banks(self, n: int, num_cols: int | None = None,
-                    label: str = "", channels=None) -> BankedSubarray:
+                    label: str = "", channels=None,
+                    active_elems: int | None = None) -> BankedSubarray:
         """Allocate ``n`` banks as one broadcast group and return its
         machine state.  ``channels`` selects the placement policy (see
-        module docstring).  Raises MemoryError when the requested
+        module docstring); ``active_elems`` records how many SIMD lanes
+        the engine will actually use (throughput accounting excludes
+        padded columns).  Raises MemoryError when the requested
         placement does not fit (callers shard or queue waves above this
         layer)."""
         if n < 1:
@@ -194,10 +204,28 @@ class PuDDevice:
             num_cols=num_cols or self.cols_per_bank, arch=self.arch,
             seed=None if self._seed is None
             else self._seed + banks[0])
-        group = BankGroup(banks=tuple(banks), sub=sub, label=label)
+        group = BankGroup(banks=tuple(banks), sub=sub, label=label,
+                          active_elems=active_elems)
         self._free[banks] = False
         self.groups.append(group)
         return sub
+
+    def free_banks(self, group: "BankGroup | BankedSubarray") -> None:
+        """Release a placed group's banks back to the free map and prune
+        it from placement/streams, so long-running serving can rotate
+        tables/forests without building a new device.  Accepts the
+        :class:`BankGroup` or the :class:`BankedSubarray` that
+        ``alloc_banks`` returned.  The group's recorded stream stops
+        being scheduled; its banks become allocatable immediately."""
+        if isinstance(group, BankedSubarray):
+            matches = [g for g in self.groups if g.sub is group]
+        else:
+            matches = [g for g in self.groups if g is group]
+        if not matches:
+            raise ValueError("group is not placed on this device")
+        g = matches[0]
+        self._free[list(g.banks)] = True
+        self.groups.remove(g)
 
     def footprint(self, group: BankGroup) -> Footprint:
         """{channel: {rank: bank count}} of a group's placement."""
@@ -218,10 +246,12 @@ class PuDDevice:
             for j, h in enumerate(self.groups)) else base
 
     def streams(self) -> list[GroupStream]:
-        """Every placed group's recorded stream + physical footprint."""
+        """Every placed group's recorded stream (waves + host events) +
+        physical footprint + active SIMD width."""
         return [
             GroupStream.from_trace(self._group_label(i, g), g.sub.trace,
-                                   self.footprint(g), g.sub.num_cols)
+                                   self.footprint(g), g.sub.num_cols,
+                                   active_elems=g.active_elems)
             for i, g in enumerate(self.groups)
         ]
 
@@ -234,11 +264,14 @@ class PuDDevice:
         """Device-level latency/energy from the scheduled timeline.
 
         ``time_scheduled_ns`` is the makespan of the per-channel bus
-        schedule -- the primary number.  ``time_serial_ns`` (all groups
-        back-to-back on one bus) and ``time_overlap_ns`` (perfect
-        overlap) remain as the bracketing bounds; per-group entries keep
-        the standalone histogram cost (``cost.trace_cost``) so
-        benchmarks can still report each engine in isolation.
+        schedule, host-lane spans included -- the primary number
+        (``time_device_ns`` is the DRAM-only span).  ``time_serial_ns``
+        (all groups back-to-back on one bus plus all host work) and
+        ``time_overlap_ns`` (perfect overlap) remain as the bracketing
+        bounds; per-group entries keep the standalone histogram cost
+        (``cost.trace_cost``), with host I/O charged at the channel
+        share the group actually spans so the histogram and timeline
+        paths agree on bandwidth accounting.
         """
         from . import cost
 
@@ -249,7 +282,9 @@ class PuDDevice:
             label = self._group_label(i, g)
             tc = cost.trace_cost(g.sub.trace.counts(), sys_cfg,
                                  banks=g.num_banks,
-                                 cols_per_bank=g.sub.num_cols)
+                                 cols_per_bank=g.sub.num_cols,
+                                 channels=len(self.footprint(g)),
+                                 elems=g.active_elems)
             span = timeline.group_span_ns.get(label)
             per_group.append({
                 "label": label,
@@ -265,9 +300,11 @@ class PuDDevice:
             "groups": per_group,
             "banks_used": self.total_banks - self.banks_free,
             "time_scheduled_ns": timeline.makespan_ns,
+            "time_device_ns": timeline.device_span_ns,
             "time_serial_ns": timeline.serial_bound_ns,
             "time_overlap_ns": timeline.overlap_bound_ns,
             "channel_busy_ns": timeline.channel_busy_ns,
+            "host_busy_ns": timeline.host_busy_ns,
             "energy_nj": sum(g["energy_nj"] for g in per_group),
             "energy_scheduled_nj": kc.energy_nj,
         }

@@ -57,6 +57,20 @@ Waves carry two scheduling tags:
   that produced it, not on later waves that compute into the other
   buffer.
 
+Streams can also record **host events** (:class:`HostEvent`,
+:meth:`CommandTrace.add_host_event`): host-side work -- a readout merge,
+a scalar reduction -- that starts only after the waves of its ``after``
+segments complete and that later segments can wait on via
+``begin_segment(after_host=...)``.  This is how a recorded stream says
+"the dependent wave's scalar comes from a host round trip": Q5's
+phase-2 scan or a GBDT leaf gather may not start until the host merge
+of the earlier readout has finished.  Host events carry a measured
+wall-clock duration when one exists (:class:`~repro.apps.pipeline.\
+HostTimer`), or the readout byte count so the scheduler can fall back
+to a bandwidth model.  Events recorded under the same label in several
+groups' traces are ONE logical host step (a merge joining every
+shard's readout); the scheduler unifies them.
+
 The analytical cost model (:mod:`repro.core.cost`) turns trace
 histograms + the active bank count into cycle-level latency and energy;
 the scheduler turns whole streams + bank placement into a device
@@ -108,11 +122,36 @@ class TraceEntry:
 class Segment:
     """One dependency-tagged span of a command stream.  Waves inside a
     segment form a chain; the segment's first wave waits for every wave
-    of every segment in ``after``."""
+    of every segment in ``after`` and for every host event in
+    ``after_host`` (ids into the trace's ``host_events``)."""
 
     sid: int
     label: str
     after: tuple[int, ...]
+    after_host: tuple[int, ...] = ()
+
+
+@dataclass
+class HostEvent:
+    """Host-side work interposed in a recorded stream (a host barrier).
+
+    The event starts once every wave of every segment in ``after`` (and
+    every earlier host event in ``after_host``) has completed; segments
+    declaring it in their ``after_host`` may not start until it ends.
+    ``duration_ns`` is the measured host wall-clock when available
+    (:meth:`CommandTrace.set_host_duration` back-fills it after the
+    timed work ran); when ``None`` the scheduler models the duration
+    from ``bytes_in``, the readout bytes the host work consumes.
+    Events with the same non-empty ``label`` across several groups'
+    traces are one logical host step (e.g. a merge over all shards'
+    readouts) and are scheduled as a single node."""
+
+    hid: int
+    label: str
+    after: tuple[int, ...]
+    after_host: tuple[int, ...] = ()
+    duration_ns: float | None = None
+    bytes_in: float = 0.0
 
 
 @dataclass
@@ -124,26 +163,56 @@ class CommandTrace:
     segment.  ``begin_segment`` opens a new segment; by default it
     depends on the previous one (plain serialized stream).  Pipelined
     apps pass explicit ``after`` sets so the scheduler knows a readout
-    only depends on the waves that produced its buffer.
+    only depends on the waves that produced its buffer, and record host
+    barriers (``add_host_event`` + ``begin_segment(after_host=...)``)
+    so a dependent wave is never scheduled before the host work that
+    produces its scalar.
     """
 
     entries: list[TraceEntry] = field(default_factory=list)
     segments: list[Segment] = field(
         default_factory=lambda: [Segment(0, "", ())])
+    host_events: list[HostEvent] = field(default_factory=list)
     _cur_seg: int = 0
 
     def begin_segment(self, label: str = "",
-                      after: tuple[int, ...] | None = None) -> int:
+                      after: tuple[int, ...] | None = None,
+                      after_host: tuple[int, ...] = ()) -> int:
         """Open a new segment and make it current; returns its id.
         ``after=None`` chains to the current segment (serialized
         default); pass an explicit tuple of segment ids for independent
-        (double-buffered) streams."""
+        (double-buffered) streams.  ``after_host`` lists host event ids
+        (from :meth:`add_host_event`) that must complete before the
+        segment's first wave -- the host-barrier case."""
         if after is None:
             after = (self._cur_seg,)
         sid = len(self.segments)
-        self.segments.append(Segment(sid, label, tuple(after)))
+        self.segments.append(
+            Segment(sid, label, tuple(after), tuple(after_host)))
         self._cur_seg = sid
         return sid
+
+    def add_host_event(self, label: str = "",
+                       after: tuple[int, ...] | None = None,
+                       after_host: tuple[int, ...] = (),
+                       duration_ns: float | None = None,
+                       bytes_in: float = 0.0) -> int:
+        """Record host-side work gated on ``after`` segments' waves (and
+        ``after_host`` earlier events); returns its id.  ``after=None``
+        gates on the current segment.  ``duration_ns`` may be left
+        ``None`` and back-filled via :meth:`set_host_duration` once the
+        timed work has actually run."""
+        if after is None:
+            after = (self._cur_seg,)
+        hid = len(self.host_events)
+        self.host_events.append(HostEvent(
+            hid, label, tuple(after), tuple(after_host),
+            duration_ns, bytes_in))
+        return hid
+
+    def set_host_duration(self, hid: int, duration_ns: float) -> None:
+        """Back-fill a host event's measured wall-clock duration."""
+        self.host_events[hid].duration_ns = duration_ns
 
     @property
     def current_segment(self) -> int:
@@ -177,6 +246,7 @@ class CommandTrace:
     def clear(self) -> None:
         self.entries.clear()
         self.segments[:] = [Segment(0, "", ())]
+        self.host_events.clear()
         self._cur_seg = 0
 
 

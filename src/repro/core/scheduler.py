@@ -36,24 +36,45 @@ Bus model
   bandwidth), holding the same exclusivity (a burst cannot interleave
   with a timed ACT sequence on the same channel).
 
+Host lane
+---------
+The host is a first-class scheduled resource.  Recorded
+:class:`~repro.core.machine.HostEvent` barriers (a readout merge, a
+scalar reduction feeding a later wave) become nodes on a single serial
+*host lane*: a host node starts once the waves of its ``after``
+segments (and any earlier host nodes it chains after) have completed
+AND the lane is free; segments declaring ``after_host`` may not issue
+their first wave until the node ends.  Node duration is the measured
+host wall-clock when the app recorded one, else a bandwidth model
+(``bytes_in`` streamed once through host memory at the device's peak
+off-chip bandwidth).  Events recorded under the same label in several
+groups' traces are ONE node whose dependencies span all those groups --
+that is how a host merge that joins every shard's readout, then feeds a
+dependent broadcast wave (Q5 phase 2, GBDT leaf gather), appears in the
+timeline: readouts -> one host span -> dependent waves, with the
+makespan honestly including the host bubble.
+
 Dependency model
 ----------------
 Waves carry the segment ids recorded by the engines
 (:meth:`CommandTrace.begin_segment`): waves of a segment chain, a
-segment's first wave waits for all waves of its ``after`` segments, and
-different groups are always independent (disjoint banks).  The scheduler
-is an earliest-start list scheduler over the ready frontier: at each
-step it issues the ready wave with the earliest feasible start,
-breaking ties in favor of host I/O (drain results early so the host
-pipeline can start merging) and then least-recently-served group, which
-interleaves co-resident groups instead of running one to completion.
+segment's first wave waits for all waves of its ``after`` segments plus
+all of its ``after_host`` nodes, and different groups' *waves* are
+always independent (disjoint banks) -- cross-group ordering arises only
+through shared host nodes.  The scheduler is an earliest-start list
+scheduler over the ready frontier: at each step it issues the ready
+wave or host node with the earliest feasible start, breaking ties in
+favor of host nodes (they hold no channel), then host I/O (drain
+results early so the host pipeline can start merging), and then
+least-recently-served group, which interleaves co-resident groups
+instead of running one to completion.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .machine import CommandTrace, PuDOp, Segment
+from .machine import CommandTrace, HostEvent, PuDOp, Segment
 
 #: Footprint of a group: {channel: {rank: number of the group's banks}}.
 Footprint = dict[int, dict[int, int]]
@@ -61,7 +82,12 @@ Footprint = dict[int, dict[int, int]]
 
 @dataclass(frozen=True)
 class GroupStream:
-    """One bank group's recorded stream plus its physical placement."""
+    """One bank group's recorded stream plus its physical placement.
+
+    ``active_elems`` is the number of SIMD lanes the engine actually
+    uses (e.g. real records in a padded shard); ``None`` means every
+    column of every bank computes useful data.
+    """
 
     label: str
     footprint: Footprint
@@ -69,6 +95,8 @@ class GroupStream:
     ops: tuple[PuDOp, ...]            # one entry per wave, record order
     segs: tuple[int, ...]             # segment id per wave
     segments: tuple[Segment, ...]     # segment table (id -> label, deps)
+    host_events: tuple[HostEvent, ...] = ()
+    active_elems: int | None = None
 
     @property
     def banks(self) -> int:
@@ -78,14 +106,24 @@ class GroupStream:
     def channels(self) -> tuple[int, ...]:
         return tuple(sorted(self.footprint))
 
+    @property
+    def elems(self) -> int:
+        """SIMD lanes doing useful work (<= banks * cols_per_bank)."""
+        if self.active_elems is not None:
+            return self.active_elems
+        return self.banks * self.cols_per_bank
+
     @staticmethod
     def from_trace(label: str, trace: CommandTrace, footprint: Footprint,
-                   cols_per_bank: int) -> "GroupStream":
+                   cols_per_bank: int,
+                   active_elems: int | None = None) -> "GroupStream":
         return GroupStream(
             label=label, footprint=footprint, cols_per_bank=cols_per_bank,
             ops=tuple(e.op for e in trace.entries),
             segs=tuple(e.seg for e in trace.entries),
             segments=tuple(trace.segments),
+            host_events=tuple(trace.host_events),
+            active_elems=active_elems,
         )
 
 
@@ -106,9 +144,25 @@ class ScheduledWave:
         return self.end_ns - self.start_ns
 
 
+@dataclass(frozen=True)
+class HostSpan:
+    """One scheduled host-lane node (a merged host event)."""
+
+    label: str
+    start_ns: float
+    end_ns: float
+
+    @property
+    def duration_ns(self) -> float:
+        return self.end_ns - self.start_ns
+
+
 @dataclass
 class Timeline:
-    """A scheduled device execution: every wave with absolute times."""
+    """A scheduled device execution: every wave -- and every host-lane
+    span -- with absolute times.  ``makespan_ns`` covers both, so a
+    stream ending in a host merge (or stalled on a host barrier) is not
+    under-reported."""
 
     waves: list[ScheduledWave]
     makespan_ns: float
@@ -116,11 +170,25 @@ class Timeline:
     group_busy_ns: dict[str, float]       # sum of each group's durations
     group_span_ns: dict[str, tuple[float, float]]
     group_elems: dict[str, int] = field(default_factory=dict)  # SIMD width
+    host_spans: list[HostSpan] = field(default_factory=list)
 
     def channel_utilization(self, channel: int) -> float:
         if self.makespan_ns <= 0:
             return 0.0
         return self.channel_busy_ns.get(channel, 0.0) / self.makespan_ns
+
+    @property
+    def device_span_ns(self) -> float:
+        """End of the last device wave -- DRAM time only.  Throughput
+        metrics normalized to scheduled DRAM time use this; it still
+        includes any host bubble *between* waves (a barrier delays the
+        dependent wave's start)."""
+        return max((w.end_ns for w in self.waves), default=0.0)
+
+    @property
+    def host_busy_ns(self) -> float:
+        """Total host-lane active time (host events are serialized)."""
+        return sum(h.duration_ns for h in self.host_spans)
 
     def segment_spans(self) -> dict[tuple[str, str], tuple[float, float]]:
         """(group label, segment label) -> (first start, last end), for
@@ -140,17 +208,21 @@ class Timeline:
 
     @property
     def serial_bound_ns(self) -> float:
-        """Serialized upper bound: every wave back-to-back on one bus."""
-        return sum(self.group_busy_ns.values())
+        """Serialized upper bound: every wave back-to-back on one bus,
+        every host event after all of them."""
+        return sum(self.group_busy_ns.values()) + self.host_busy_ns
 
     @property
     def overlap_bound_ns(self) -> float:
-        """Perfect-overlap lower bound: the slowest group alone."""
-        return max(self.group_busy_ns.values(), default=0.0)
+        """Perfect-overlap lower bound: the slowest group alone, or the
+        serial host lane if that dominates."""
+        return max(max(self.group_busy_ns.values(), default=0.0),
+                   self.host_busy_ns)
 
 
 class ChannelScheduler:
-    """Schedules recorded group streams onto a SystemConfig's channels."""
+    """Schedules recorded group streams onto a SystemConfig's channels
+    (and their host events onto the serial host lane)."""
 
     def __init__(self, sys_cfg) -> None:
         self.sys = sys_cfg
@@ -180,10 +252,24 @@ class ChannelScheduler:
             return 0.0
         return stream.banks * stream.cols_per_bank / 8
 
+    def host_duration_ns(self, measured: float | None,
+                         bytes_in: float) -> float:
+        """Host node duration: measured wall-clock when the app recorded
+        one, else ``bytes_in`` streamed once through host memory at the
+        system's ``host_mem_gbps`` single-thread merge rate (the merge
+        is one pass over the readout bytes, bandwidth-bound like the
+        CPU baseline kernels).  A host-side rate -- not any function of
+        the DRAM channel topology -- so resizing the device's channels
+        never changes modeled host-merge speed."""
+        if measured is not None:
+            return measured
+        return bytes_in / self.sys.host_mem_gbps
+
     # ------------------------------------------------------------------ #
     def schedule(self, streams: list[GroupStream]) -> Timeline:
         channel_free: dict[int, float] = {}
         scheduled: list[ScheduledWave] = []
+        host_spans: list[HostSpan] = []
         group_busy = {s.label: 0.0 for s in streams}
         group_span: dict[str, tuple[float, float]] = {}
         group_last_served = {i: -1 for i in range(len(streams))}
@@ -204,34 +290,100 @@ class ChannelScheduler:
         seg_end = [dict.fromkeys(q, 0.0) for q in queues]
         seg_prev_end = [dict.fromkeys(q, None) for q in queues]
 
-        # Effective deps: segments that never emitted a wave are skipped
-        # over transitively so chains survive empty segments.
-        eff_after: list[dict[int, tuple[int, ...]]] = []
+        def expand_deps(gi: int, after, after_host):
+            """Resolve deps to wave-bearing segments, transitively
+            skipping segments that never emitted a wave -- but
+            inheriting those segments' own host deps so a barrier on an
+            empty segment still binds."""
+            segs: list[int] = []
+            hosts: list[int] = list(after_host)
+            seen: set[int] = set()
+            stack = list(after)
+            table = streams[gi].segments
+            while stack:
+                d = stack.pop()
+                if d in seen:
+                    continue
+                seen.add(d)
+                if d in queues[gi]:
+                    segs.append(d)
+                else:
+                    hosts.extend(table[d].after_host)
+                    stack.extend(table[d].after)
+            return tuple(segs), tuple(dict.fromkeys(hosts))
+
+        # ---- merged host nodes (same label across groups == one) ----- #
+        nodes: dict[str, dict] = {}
+        node_key: list[dict[int, str]] = []
         for gi, s in enumerate(streams):
-            def expand(sid: int, seen: set[int]) -> list[int]:
-                out: list[int] = []
-                for d in s.segments[sid].after:
-                    if d in seen:
-                        continue
-                    seen.add(d)
-                    if d in queues[gi]:
-                        out.append(d)
-                    else:
-                        out.extend(expand(d, seen))
-                return out
-            eff_after.append(
-                {sid: tuple(expand(sid, set())) for sid in queues[gi]})
+            node_key.append({h.hid: h.label or f"{s.label}#h{h.hid}"
+                             for h in s.host_events})
+        for gi, s in enumerate(streams):
+            for h in s.host_events:
+                key = node_key[gi][h.hid]
+                n = nodes.setdefault(key, {
+                    "label": h.label or key, "seg_deps": set(),
+                    "host_deps": set(), "measured": None, "bytes": 0.0})
+                segs, hosts = expand_deps(gi, h.after, h.after_host)
+                n["seg_deps"] |= {(gi, d) for d in segs}
+                n["host_deps"] |= {node_key[gi][x] for x in hosts}
+                n["host_deps"].discard(key)
+                if h.duration_ns is not None:
+                    n["measured"] = max(n["measured"] or 0.0, h.duration_ns)
+                n["bytes"] += h.bytes_in
+
+        # Effective per-segment deps (wave-bearing segments + host keys).
+        eff_after: list[dict[int, tuple[int, ...]]] = []
+        eff_host: list[dict[int, tuple[str, ...]]] = []
+        for gi, s in enumerate(streams):
+            ea: dict[int, tuple[int, ...]] = {}
+            eh: dict[int, tuple[str, ...]] = {}
+            for sid in queues[gi]:
+                segs, hosts = expand_deps(
+                    gi, s.segments[sid].after, s.segments[sid].after_host)
+                ea[sid] = segs
+                eh[sid] = tuple(node_key[gi][x] for x in hosts)
+            eff_after.append(ea)
+            eff_host.append(eh)
+
+        node_end: dict[str, float] = {}
+        pending_nodes = set(nodes)
+        host_free = 0.0
 
         def seg_ready(gi: int, sid: int) -> bool:
-            return all(seg_left[gi][d] == 0 for d in eff_after[gi][sid])
+            return (all(seg_left[gi][d] == 0 for d in eff_after[gi][sid])
+                    and all(k in node_end for k in eff_host[gi][sid]))
 
         def seg_dep_end(gi: int, sid: int) -> float:
-            return max((seg_end[gi][d] for d in eff_after[gi][sid]),
-                       default=0.0)
+            t = max((seg_end[gi][d] for d in eff_after[gi][sid]),
+                    default=0.0)
+            return max(t, max((node_end[k] for k in eff_host[gi][sid]),
+                              default=0.0))
+
+        def node_ready(key: str) -> bool:
+            n = nodes[key]
+            return (all(seg_left[gi][d] == 0 for gi, d in n["seg_deps"])
+                    and all(k in node_end for k in n["host_deps"]))
+
+        def node_start(key: str) -> float:
+            n = nodes[key]
+            t = host_free
+            for gi, d in n["seg_deps"]:
+                t = max(t, seg_end[gi][d])
+            for k in n["host_deps"]:
+                t = max(t, node_end[k])
+            return t
 
         remaining = sum(len(s.ops) for s in streams)
-        while remaining:
+        while remaining or pending_nodes:
             best = None
+            for key in pending_nodes:
+                if not node_ready(key):
+                    continue
+                start = node_start(key)
+                cand = (start, -1, 0, -1, key)
+                if best is None or cand < best[0]:
+                    best = (cand, "host", key, None, None, start)
             for gi, s in enumerate(streams):
                 for sid, ws in queues[gi].items():
                     if not ws or not seg_ready(gi, sid):
@@ -244,11 +396,22 @@ class ChannelScheduler:
                                for c in s.channels), default=0.0)
                     start = max(dep, bus)
                     is_io = op in (PuDOp.READ, PuDOp.WRITE)
-                    key = (start, not is_io, group_last_served[gi], gi, sid)
-                    if best is None or key < best[0]:
-                        best = (key, gi, sid, w, op, start)
-            assert best is not None, "dependency cycle in stream segments"
-            _, gi, sid, w, op, start = best
+                    cand = (start, not is_io, group_last_served[gi], gi, sid)
+                    if best is None or cand < best[0]:
+                        best = (cand, "wave", gi, sid, (w, op), start)
+            assert best is not None, \
+                "dependency cycle in stream segments / host events"
+            if best[1] == "host":
+                _, _, key, _, _, start = best
+                end = start + self.host_duration_ns(
+                    nodes[key]["measured"], nodes[key]["bytes"])
+                host_spans.append(
+                    HostSpan(nodes[key]["label"], start, end))
+                node_end[key] = end
+                host_free = end
+                pending_nodes.remove(key)
+                continue
+            _, _, gi, sid, (w, op), start = best
             s = streams[gi]
             dur = self.wave_duration_ns(op, s)
             end = start + dur
@@ -270,7 +433,10 @@ class ChannelScheduler:
             serve_counter += 1
             remaining -= 1
 
-        makespan = max((w.end_ns for w in scheduled), default=0.0)
+        host_spans.sort(key=lambda h: h.start_ns)
+        makespan = max(
+            max((w.end_ns for w in scheduled), default=0.0),
+            max((h.end_ns for h in host_spans), default=0.0))
         busy: dict[int, float] = {}
         for w in scheduled:
             for c in w.channels:
@@ -278,5 +444,5 @@ class ChannelScheduler:
         return Timeline(waves=scheduled, makespan_ns=makespan,
                         channel_busy_ns=busy, group_busy_ns=group_busy,
                         group_span_ns=group_span,
-                        group_elems={s.label: s.banks * s.cols_per_bank
-                                     for s in streams})
+                        group_elems={s.label: s.elems for s in streams},
+                        host_spans=host_spans)

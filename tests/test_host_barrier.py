@@ -1,0 +1,421 @@
+"""Host-barrier-aware timeline tests: host events as first-class
+scheduled nodes (bubble insertion, cross-group merge, host-lane
+serialization, bytes-model fallback), the barrier >= barrier-free
+regression property, Q5 batch-ordering edge cases through
+``ShardedQueryPipeline.run``, trace/timeline bandwidth-accounting
+agreement, active-SIMD-width plumbing, host active/idle energy split,
+and the device allocator's free/realloc path."""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import (
+    BankedSubarray,
+    HostEvent,
+    PuDArch,
+    PuDOp,
+    Segment,
+)
+from repro.core.scheduler import ChannelScheduler, GroupStream, Timeline
+
+
+def _stream(label, footprint, ops, cols=4096, segs=None, segments=None,
+            host_events=(), active_elems=None):
+    ops = tuple(ops)
+    return GroupStream(
+        label=label, footprint=footprint, cols_per_bank=cols, ops=ops,
+        segs=tuple(segs) if segs else (0,) * len(ops),
+        segments=tuple(segments) if segments else (Segment(0, "", ()),),
+        host_events=tuple(host_events), active_elems=active_elems)
+
+
+def _strip_barriers(streams):
+    """The same streams with every host event (and after_host edge)
+    removed -- the old optimistic schedule."""
+    return [
+        replace(s, host_events=(),
+                segments=tuple(Segment(g.sid, g.label, g.after, ())
+                               for g in s.segments))
+        for s in streams
+    ]
+
+
+# ----------------------- hand-built host events ------------------------ #
+
+def test_host_event_inserts_bubble():
+    """compute -> readout -> host merge -> dependent compute: the
+    dependent wave starts only after the merge, and the makespan grows
+    by exactly the bubble."""
+    D = 5_000.0
+    segments = (Segment(0, "c0", ()), Segment(1, "r0", (0,)),
+                Segment(2, "c1", (0,), after_host=(0,)))
+    host = (HostEvent(0, "merge", after=(1,), duration_ns=D),)
+    s = _stream("a", {0: {0: 4}},
+                [PuDOp.ROWCOPY, PuDOp.READ, PuDOp.ROWCOPY],
+                segs=(0, 1, 2), segments=segments, host_events=host)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([s])
+    (span,) = tl.host_spans
+    ends = {w.seg_label: w.end_ns for w in tl.waves}
+    starts = {w.seg_label: w.start_ns for w in tl.waves}
+    assert span.label == "merge"
+    assert span.start_ns == pytest.approx(ends["r0"])
+    assert span.duration_ns == pytest.approx(D)
+    assert starts["c1"] == pytest.approx(span.end_ns)
+    assert tl.makespan_ns == pytest.approx(ends["c1"])
+    # the barrier-free schedule of the same waves is strictly shorter
+    bare = ChannelScheduler(cost.DESKTOP).schedule(_strip_barriers([s]))
+    assert tl.makespan_ns == pytest.approx(bare.makespan_ns + D)
+
+
+def test_unmeasured_host_event_uses_bytes_model():
+    """No measured wall-clock -> the merge is modeled as one pass over
+    its readout bytes at the host's own memory rate, which must be
+    independent of the DRAM channel topology (resizing device channels
+    can't change host merge speed)."""
+    nbytes = 65536.0
+    host = (HostEvent(0, "m", after=(0,), bytes_in=nbytes),)
+    s = _stream("a", {0: {0: 4}}, [PuDOp.READ], host_events=host)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([s])
+    (span,) = tl.host_spans
+    assert span.duration_ns == pytest.approx(
+        nbytes / cost.DESKTOP.host_mem_gbps)
+    # rescaling the DRAM side leaves the host model untouched
+    wide = replace(cost.DESKTOP, channels=4,
+                   bandwidth_gbps=2 * cost.DESKTOP.bandwidth_gbps)
+    tl2 = ChannelScheduler(wide).schedule([s])
+    assert tl2.host_spans[0].duration_ns == pytest.approx(
+        span.duration_ns)
+
+
+def test_shared_label_merges_across_groups():
+    """Events recorded under one label in two groups' traces are ONE
+    host node that waits for both readouts."""
+    def mk(label, ch, n_ops):
+        segments = (Segment(0, "c", ()), Segment(1, "r", (0,)))
+        host = (HostEvent(0, "joint-merge", after=(1,),
+                          duration_ns=1000.0),)
+        return _stream(label, {ch: {0: 4}},
+                       [PuDOp.ROWCOPY] * n_ops + [PuDOp.READ],
+                       segs=(0,) * n_ops + (1,), segments=segments,
+                       host_events=host)
+    a, b = mk("a", 0, 2), mk("b", 1, 8)    # b's readout finishes later
+    tl = ChannelScheduler(cost.DESKTOP).schedule([a, b])
+    (span,) = tl.host_spans
+    last_read = max(w.end_ns for w in tl.waves if w.op is PuDOp.READ)
+    assert span.start_ns == pytest.approx(last_read)
+
+
+def test_host_lane_serializes_independent_events():
+    """Distinct host events never overlap: the host is one lane."""
+    def mk(label, ch):
+        segments = (Segment(0, "c", ()), Segment(1, "r", (0,)))
+        host = (HostEvent(0, f"{label}-merge", after=(1,),
+                          duration_ns=2000.0),)
+        return _stream(label, {ch: {0: 4}},
+                       [PuDOp.ROWCOPY, PuDOp.READ],
+                       segs=(0, 1), segments=segments, host_events=host)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([mk("a", 0), mk("b", 1)])
+    assert len(tl.host_spans) == 2
+    first, second = tl.host_spans
+    assert second.start_ns >= first.end_ns - 1e-9
+    assert tl.host_busy_ns == pytest.approx(4000.0)
+
+
+def test_barrier_on_empty_segment_still_binds():
+    """A dependency chained through a segment that emitted no waves
+    inherits that segment's host barrier instead of dropping it."""
+    D = 3_000.0
+    segments = (Segment(0, "c0", ()), Segment(1, "r0", (0,)),
+                Segment(2, "empty", (0,), after_host=(0,)),
+                Segment(3, "c1", (2,)))
+    host = (HostEvent(0, "m", after=(1,), duration_ns=D),)
+    s = _stream("a", {0: {0: 4}},
+                [PuDOp.ROWCOPY, PuDOp.READ, PuDOp.ROWCOPY],
+                segs=(0, 1, 3), segments=segments, host_events=host)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([s])
+    starts = {w.seg_label: w.start_ns for w in tl.waves}
+    assert starts["c1"] >= tl.host_spans[0].end_ns - 1e-9
+
+
+# -------------------- barrier >= barrier-free property ----------------- #
+
+def test_barrier_schedule_never_shorter_q5_pipeline():
+    """Regression for the optimistic schedule: the barrier-aware
+    timeline of a Q5 batch is never shorter than the same streams
+    scheduled without their host events, and the Q5 bubble makes the
+    device span strictly longer."""
+    t = P.Table.generate(12_000, 8, seed=5)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev, num_shards=2,
+                                cols_per_bank=4096)
+    mx = 255
+    qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    res = qp.run([("q5", 3, 2, *qa)])
+    assert res[0] == P.reference_q5(t, 3, 2, *qa)
+    streams = dev.streams()
+    sched = ChannelScheduler(cost.DESKTOP)
+    tl = sched.schedule(streams)
+    bare = sched.schedule(_strip_barriers(streams))
+    assert tl.makespan_ns >= bare.makespan_ns - 1e-6
+    # phase 2 waits for phase 1's merge -> strictly longer device span
+    assert tl.device_span_ns > bare.device_span_ns
+    assert tl.host_spans, "Q5 merge must appear on the host lane"
+
+
+def test_standalone_q5_records_host_barrier():
+    """The serial PudQueryEngine.q5 path also records its host round
+    trip, so even the non-pipelined schedule contains the bubble."""
+    t = P.Table.generate(4_096, 8, seed=7)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    eng = P.PudQueryEngine(t, PuDArch.MODIFIED, device=dev,
+                           cols_per_bank=4096)
+    mx = 255
+    got = eng.q5(3, 2, 0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    assert got == P.reference_q5(t, 3, 2, 0, mx // 8, mx // 2, 1,
+                                 mx // 4, 3 * mx // 4)
+    streams = dev.streams()
+    assert streams[0].host_events
+    tl = ChannelScheduler(cost.DESKTOP).schedule(streams)
+    bare = ChannelScheduler(cost.DESKTOP).schedule(
+        _strip_barriers(streams))
+    assert tl.device_span_ns > bare.device_span_ns
+
+
+# ---------------------- Q5 batch-ordering edge cases ------------------- #
+
+@pytest.fixture(scope="module")
+def q5_fixture():
+    t = P.Table.generate(10_000, 8, seed=21)
+    mx = 255
+    qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    return t, qa
+
+
+def _fresh_pipeline(t):
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    return dev, P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
+                                       num_shards=2, cols_per_bank=4096)
+
+
+def test_q5_only_query_in_batch(q5_fixture):
+    t, qa = q5_fixture
+    dev, qp = _fresh_pipeline(t)
+    res = qp.run([("q5", 3, 2, *qa)])
+    assert res[0] == P.reference_q5(t, 3, 2, *qa)
+    stats = qp.last_stats(cost.DESKTOP)
+    assert stats.num_waves == 2          # phase 1 + injected phase 2
+    assert stats.overlapped_ns <= stats.serialized_ns + 1e-6
+
+
+def test_q5_first_in_batch(q5_fixture):
+    t, qa = q5_fixture
+    dev, qp = _fresh_pipeline(t)
+    res = qp.run([("q5", 3, 2, *qa), ("q1", *qa[:3]), ("q3", *qa)])
+    assert res[0] == P.reference_q5(t, 3, 2, *qa)
+    assert (res[1] == P.reference_q1(t, *qa[:3])).all()
+    assert res[2] == P.reference_q3(t, *qa)
+    assert qp.last_stats(cost.DESKTOP).num_waves == 4
+
+
+def test_q5_last_in_batch(q5_fixture):
+    t, qa = q5_fixture
+    dev, qp = _fresh_pipeline(t)
+    res = qp.run([("q1", *qa[:3]), ("q5", 3, 2, *qa)])
+    assert (res[0] == P.reference_q1(t, *qa[:3])).all()
+    assert res[1] == P.reference_q5(t, 3, 2, *qa)
+    assert qp.last_stats(cost.DESKTOP).num_waves == 3
+
+
+def test_q5_back_to_back(q5_fixture):
+    """Two Q5s: each phase 2 is injected at the head of the remaining
+    work (appendleft) while the drain path is collecting -- results
+    must still land in their own slots."""
+    t, qa = q5_fixture
+    dev, qp = _fresh_pipeline(t)
+    res = qp.run([("q5", 3, 2, *qa), ("q5", 4, 2, *qa)])
+    assert res[0] == P.reference_q5(t, 3, 2, *qa)
+    assert res[1] == P.reference_q5(t, 4, 2, *qa)
+
+
+# ------------------ trace/timeline accounting agreement ---------------- #
+
+def test_trace_cost_charges_channel_share():
+    """A single-channel group's host I/O moves over one channel's pins,
+    not the whole device's (the old up-to-channels-x optimism)."""
+    counts = {"read": 4}
+    full = cost.trace_cost(counts, cost.DESKTOP, banks=8,
+                           cols_per_bank=65536)
+    one = cost.trace_cost(counts, cost.DESKTOP, banks=8,
+                          cols_per_bank=65536, channels=1)
+    assert one.time_ns == pytest.approx(
+        full.time_ns * cost.DESKTOP.channels)
+
+
+def test_trace_cost_matches_timeline_single_group():
+    """Acceptance: for a single-group single-channel device, the
+    histogram path (channel-share I/O) and the scheduled timeline agree
+    on total time."""
+    t = P.Table.generate(8_192, 8, seed=3)
+    dev = PuDDevice.from_system(cost.EDGE, PuDArch.UNMODIFIED)
+    eng = P.PudQueryEngine(t, PuDArch.UNMODIFIED, device=dev,
+                           cols_per_bank=4096)
+    mx = 255
+    eng.q2(0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    (g,) = dev.groups
+    tl = dev.schedule(cost.EDGE)
+    tc = cost.trace_cost(g.sub.trace.counts(), cost.EDGE,
+                         banks=g.num_banks, cols_per_bank=g.sub.num_cols,
+                         channels=1)
+    assert tl.makespan_ns == pytest.approx(tc.time_ns, rel=1e-9)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_io_heavy_streams_within_trace_cost_brackets(seed, n_groups):
+    """Scheduled makespan of I/O-heavy streams lies inside the
+    [max, sum] brackets computed by ``trace_cost`` at each group's
+    channel share -- the histogram and timeline paths must bracket each
+    other, which fails if either charges a different bandwidth."""
+    rng = np.random.default_rng(seed)
+    ops_pool = [PuDOp.READ, PuDOp.WRITE, PuDOp.READ, PuDOp.ROWCOPY]
+    streams, times = [], []
+    for g in range(n_groups):
+        ch = int(rng.integers(0, cost.DESKTOP.channels))
+        banks = int(rng.integers(1, 17))        # one rank: exact model
+        n_ops = int(rng.integers(1, 16))
+        ops = [ops_pool[i] for i in rng.integers(0, len(ops_pool), n_ops)]
+        s = _stream(f"g{g}", {ch: {0: banks}}, ops, cols=4096)
+        streams.append(s)
+        counts: dict[str, int] = {}
+        for op in ops:
+            counts[op.value] = counts.get(op.value, 0) + 1
+        kc = cost.trace_cost(counts, cost.DESKTOP, banks=banks,
+                             cols_per_bank=4096, channels=1)
+        times.append(kc.time_ns)
+    tl = ChannelScheduler(cost.DESKTOP).schedule(streams)
+    assert max(times) - 1e-6 <= tl.makespan_ns <= sum(times) + 1e-6
+
+
+# ------------------------- SIMD-width plumbing ------------------------- #
+
+def test_group_elems_uses_active_records():
+    """A padded small shard reports its real record count, not
+    banks * cols_per_bank."""
+    t = P.Table.generate(1_000, 8, seed=2)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    eng = P.PudQueryEngine(t, PuDArch.MODIFIED, device=dev,
+                           cols_per_bank=4096)
+    mx = 255
+    eng.q1(0, mx // 8, mx // 2)
+    tl = dev.schedule(cost.DESKTOP)
+    (label,) = tl.group_elems
+    assert tl.group_elems[label] == 1_000
+    assert eng.sub.num_cols == 4096     # padded, so the old math was 4096
+    kc = cost.timeline_cost(tl, cost.DESKTOP)
+    assert kc.elems == 1_000
+
+
+def test_gbdt_group_elems_uses_node_lanes():
+    forest = G.ObliviousForest.random(num_trees=10, depth=3,
+                                      num_features=3, n_bits=8, seed=1)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=2,
+                          device=dev)
+    rng = np.random.default_rng(0)
+    eng.infer(rng.integers(0, 256, (2, 3), dtype=np.uint64))
+    tl = dev.schedule(cost.DESKTOP)
+    (label,) = tl.group_elems
+    assert tl.group_elems[label] == 30 * eng.wave_width   # T*D lanes/inst
+
+
+# ----------------------- host energy accounting ------------------------ #
+
+def test_timeline_cost_splits_host_power():
+    """Host energy = active power over host spans + idle power over the
+    rest of the makespan (not idle over everything)."""
+    D = 10_000.0
+    segments = (Segment(0, "c0", ()), Segment(1, "r0", (0,)),
+                Segment(2, "c1", (0,), after_host=(0,)))
+    host = (HostEvent(0, "m", after=(1,), duration_ns=D),)
+    s = _stream("a", {0: {0: 4}},
+                [PuDOp.ROWCOPY, PuDOp.READ, PuDOp.ROWCOPY],
+                segs=(0, 1, 2), segments=segments, host_events=host)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([s])
+    kc = cost.timeline_cost(tl, cost.DESKTOP)
+    wave_e = sum(
+        cost.wave_energy_nj(w.op, w.banks, cost.DESKTOP)
+        if w.op not in (PuDOp.READ, PuDOp.WRITE)
+        else cost.transfer_energy_nj(w.io_bytes, cost.DESKTOP)
+        for w in tl.waves)
+    want = (wave_e + cost.DESKTOP.host_power_w * D
+            + cost.DESKTOP.host_idle_power_w * (tl.makespan_ns - D))
+    assert kc.energy_nj == pytest.approx(want)
+    # strictly more than the all-idle accounting
+    assert kc.energy_nj > wave_e + \
+        cost.DESKTOP.host_idle_power_w * tl.makespan_ns
+
+
+# --------------------------- allocator reuse --------------------------- #
+
+def test_alloc_free_realloc_cycle():
+    """ROADMAP 'dynamic bank reuse' first slice: freed banks are
+    reallocatable and the freed group stops being scheduled."""
+    dev = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=1,
+                    banks_per_rank=8)
+    s1 = dev.alloc_banks(8, num_cols=4096, label="old", channels=0)
+    dev.alloc_banks(4, num_cols=4096, label="keep", channels=1)
+    assert dev.banks_free == 4
+    with pytest.raises(MemoryError):
+        dev.alloc_banks(8, channels=0)   # channel 0 full
+    dev.free_banks(s1)                   # by subarray handle
+    assert dev.banks_free == 12
+    s3 = dev.alloc_banks(8, num_cols=4096, label="new", channels=0)
+    assert dev.groups[-1].banks == tuple(range(8))  # reused the range
+    labels = {s.label for s in dev.streams()}
+    assert labels == {"keep", "new"}
+    with pytest.raises(ValueError):
+        dev.free_banks(s1)               # double free
+    # the new tenant's banks really are writable machine state
+    s3.host_write_row(0, np.zeros(s3.num_words, np.uint32))
+
+
+def test_free_banks_by_group_object():
+    dev = PuDDevice(PuDArch.MODIFIED, channels=1, ranks_per_channel=1,
+                    banks_per_rank=4)
+    dev.alloc_banks(4, num_cols=4096, label="a")
+    dev.free_banks(dev.groups[0])
+    assert dev.banks_free == 4 and not dev.groups
+
+
+# ---------------------- pipeline stats from timeline ------------------- #
+
+def test_pipeline_stats_come_from_schedule():
+    """overlapped_ns is read off the barrier-aware timeline (host spans
+    included), not a separate recurrence: it equals the pipeline's
+    span in the schedule and is bounded by the serialized total."""
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=4, n_bits=8, seed=3)
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 256, (16, 4), dtype=np.uint64)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
+                               num_groups=2, banks_per_group=4)
+    got = pipe.infer(x)
+    np.testing.assert_allclose(got, G.reference_predict(forest, x),
+                               atol=1e-3)
+    tl = dev.schedule(cost.DESKTOP)
+    stats = pipe.last_stats(cost.DESKTOP, timeline=tl)
+    assert len(tl.host_spans) == stats.num_waves
+    assert stats.overlapped_ns >= stats.device_ns
+    assert stats.overlapped_ns <= stats.serialized_ns + 1e-6
+    # every pipeline merge appears on the host lane with its measured
+    # duration
+    merge_ns = sorted(h.duration_ns for h in tl.host_spans)
+    assert merge_ns == pytest.approx(sorted(pipe._last_host.samples_ns))
