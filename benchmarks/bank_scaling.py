@@ -1,15 +1,19 @@
-"""Throughput vs bank count from REAL banked-machine traces.
+"""Throughput vs bank count from REAL banked-machine traces, driven
+through the `repro.pud` session API.
 
-Unlike ``paper_figs`` (closed-form op histograms), these rows run the
-functional banked engines, capture their actual command traces, and feed
-them through the BLP cost model (``cost.trace_cost``) at each bank count
--- the measurement path the multi-bank refactor enables.  Reported:
+Unlike ``paper_figs`` (closed-form op histograms), these rows declare
+each workload as a session resource, run it as a submitted job, capture
+the engines' actual command traces, and feed them through the BLP cost
+model (``cost.trace_cost``) at each bank count -- the measurement path
+the multi-bank refactor enables.  Resources are dropped between sweep
+points, so the sweep itself exercises the planner's dynamic bank reuse
+(free-range coalescing).  Reported:
 
   * GBDT: one batch (one instance per bank) per wave; derived column is
     instances/ms of modeled DRAM time.
   * Predicate Q2: a table sharded across ``banks``; derived column is
     Giga-records/s of modeled DRAM time.
-  * functional-simulator wall-clock per broadcast wave (NumPy time, not
+  * functional-simulator wall-clock per submitted job (NumPy time, not
     DRAM time) to show the simulator itself scales with vectorization.
 """
 
@@ -29,6 +33,7 @@ from repro.apps import gbdt as G
 from repro.apps import predicate as P
 from repro.core import cost
 from repro.core.machine import PuDArch
+from repro.pud import PudSession, Q2
 
 BANK_SWEEP = (1, 4, 16, 64)
 
@@ -47,12 +52,18 @@ def gbdt_bank_scaling(smoke: bool = False):
                                       else 6, num_features=feats,
                                       n_bits=8, seed=0)
     rng = np.random.default_rng(1)
+    session = PudSession(sys_cfg=cost.DESKTOP, arch=PuDArch.MODIFIED)
     for banks in BANK_SWEEP[:2] if smoke else BANK_SWEEP:
-        eng = G.GbdtPudEngine(forest, PuDArch.MODIFIED, num_banks=banks)
+        # one group of `banks` banks, contiguous placement (the sweep's
+        # independent variable is bank count, not channel spread)
+        h = session.load_forest(forest, name=f"forest_b{banks}",
+                                groups_per_device=1,
+                                banks_per_group=banks, channels=None)
+        eng = session.executor(h).engines[0]
         x = rng.integers(0, 256, (banks, feats), dtype=np.uint64)
-        eng.sub.trace.clear()
+        session.clear_traces(h)        # histogram the job, not LUT load
         t0 = time.perf_counter()
-        eng.infer(x)
+        session.predict(h, x)
         wall_us = (time.perf_counter() - t0) * 1e6
         kc = cost.trace_cost(eng.sub.trace.counts(), cost.DESKTOP,
                              banks=banks, cols_per_bank=eng.sub.num_cols,
@@ -62,26 +73,32 @@ def gbdt_bank_scaling(smoke: bool = False):
                      round(kc.time_ns / 1e3, 2), round(inst_per_ms, 1)))
         rows.append((f"bank_scaling_gbdt_b{banks}_sim_wallclock",
                      round(wall_us, 1), banks))
+        session.drop(h)                # free-range coalescing in action
     return rows
 
 
 def predicate_bank_scaling(smoke: bool = False):
     rows = []
+    mx = 255
+    q2 = Q2(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
+            y1=3 * mx // 4)
+    session = PudSession(sys_cfg=cost.DESKTOP, arch=PuDArch.MODIFIED)
     for banks in (1, 2) if smoke else (1, 4, 16):
         n = banks * 4096
         t = P.Table.generate(n, 8, seed=3)
-        e = P.PudQueryEngine(t, PuDArch.MODIFIED, "clutch",
-                             cols_per_bank=4096)
-        e.sub.trace.clear()
-        mx = 255
-        e.q2(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
-             y1=3 * mx // 4)
-        kc = cost.trace_cost(e.sub.trace.counts(), cost.DESKTOP,
-                             banks=banks, cols_per_bank=e.sub.num_cols,
+        h = session.create_table(t, name=f"table_b{banks}",
+                                 shards_per_device=1, cols_per_bank=4096,
+                                 channels=None)
+        eng = session.executor(h).engines[0]
+        session.clear_traces(h)
+        session.query(h, q2)
+        kc = cost.trace_cost(eng.sub.trace.counts(), cost.DESKTOP,
+                             banks=banks, cols_per_bank=eng.sub.num_cols,
                              channels=_channels_spanned(banks, cost.DESKTOP))
         grps = n / kc.time_ns  # records per ns == G-records/s
         rows.append((f"bank_scaling_q2_b{banks}",
                      round(kc.time_ns / 1e3, 2), round(grps, 3)))
+        session.drop(h)
     return rows
 
 

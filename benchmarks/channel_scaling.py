@@ -1,19 +1,20 @@
 """Throughput vs channel count + pipeline overlap, from REAL scheduled
-timelines (host-barrier-aware).
+timelines (host-barrier-aware), driven through the `repro.pud` session
+API.
 
 Unlike the serialized/overlapped brackets the device used to report,
-these rows run the functional engines, record their command streams, and
-put every wave -- and every host merge, as a host-lane event -- on
-absolute time with the per-channel command-bus scheduler, so the
-reported scaling is what the bus model actually admits, not a bound.
-Throughput rows are normalized to the scheduled DRAM span
-(``Timeline.device_span_ns``: the host lane is channel-independent
-measured wall-clock, but host *barriers* still delay dependent waves
-inside that span); overlap rows use the full host-aware schedule.
-Reported:
+these rows declare each workload as a session resource, run it as a
+submitted job, and put every wave -- and every host merge, as a
+host-lane event -- on absolute time with the per-channel command-bus
+scheduler, so the reported scaling is what the bus model actually
+admits, not a bound.  Throughput rows are normalized to the scheduled
+DRAM span (``Timeline.device_span_ns``: the host lane is
+channel-independent measured wall-clock, but host *barriers* still
+delay dependent waves inside that span); overlap rows use the full
+host-aware schedule.  Reported:
 
-  * GBDT batch pipeline: the same 4-group workload on a device with 1,
-    2, 4 channels (groups placed round-robin); derived column is
+  * GBDT batch jobs: the same 4-group forest resource on a device with
+    1, 2, 4 channels (groups placed round-robin); derived column is
     instances/ms of scheduled DRAM time.  The final row is the 1->4
     channel throughput ratio (acceptance: > 1.5x with pipeline overlap
     enabled).
@@ -22,7 +23,7 @@ Reported:
   * Pipeline overlap efficiency (serialized / overlapped totals with
     measured host merges) at each channel count.
 
-Every pipeline run is checked against the sanity invariant that the
+Every job is checked against the sanity invariant that the
 barrier-aware overlapped total never exceeds the fully serialized
 total -- a violation (the optimistic-schedule class of bug) aborts the
 benchmark with a nonzero exit, which is what the CI smoke run guards.
@@ -47,6 +48,7 @@ from repro.apps import predicate as P
 from repro.core import cost
 from repro.core.device import PuDDevice
 from repro.core.machine import PuDArch
+from repro.pud import PudSession, Q1, Q2, Q3, Q5
 
 CHANNEL_SWEEP = (1, 2, 4)
 
@@ -68,6 +70,12 @@ def _system(channels: int) -> cost.SystemConfig:
                    bandwidth_gbps=cost.DESKTOP.bandwidth_gbps / 2 * channels)
 
 
+def _session(channels: int) -> PudSession:
+    sys_cfg = _system(channels)
+    dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+    return PudSession(sys_cfg=sys_cfg, devices=[dev])
+
+
 def gbdt_channel_scaling(smoke: bool = False):
     rows = []
     trees, depth, feats = (8, 4, 3) if smoke else (64, 6, 8)
@@ -78,18 +86,15 @@ def gbdt_channel_scaling(smoke: bool = False):
     rng = np.random.default_rng(1)
     thr = {}
     for ch in CHANNEL_SWEEP[:2] if smoke else CHANNEL_SWEEP:
-        sys_cfg = _system(ch)
-        dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
-        pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
-                                   num_groups=groups,
-                                   banks_per_group=banks_per_group)
-        n_inst = waves * pipe.wave_width
+        session = _session(ch)
+        h = session.load_forest(forest, name="forest",
+                                groups_per_device=groups,
+                                banks_per_group=banks_per_group)
+        n_inst = waves * session.executor(h).wave_width
         x = rng.integers(0, 256, (n_inst, feats), dtype=np.uint64)
-        for eng in pipe.engines:          # time inference, not LUT load
-            eng.sub.trace.clear()
-        pipe.infer(x)
-        tl = dev.schedule(sys_cfg)
-        stats = pipe.last_stats(sys_cfg, timeline=tl)
+        # job timelines are job-scoped: LUT loading never counts
+        job = session.predict(h, x)
+        tl, stats = job.timeline, job.stats
         _check_overlap_invariant(stats, f"gbdt_c{ch}")
         inst_per_ms = n_inst / (tl.device_span_ns / 1e6)
         thr[ch] = inst_per_ms
@@ -120,23 +125,21 @@ def predicate_channel_scaling(smoke: bool = False):
     cols = 4096
     t = P.Table.generate(n, 8, seed=3)
     mx = 255
-    qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
+    rng = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
+               y1=3 * mx // 4)
     # throughput rows stay Q5-free: a Q5 barrier injects measured host
     # wall-clock into the device span, which would swamp the modeled
     # DRAM scaling being measured here (q5_barrier_metrics covers Q5)
-    queries = [("q1", 0, mx // 8, mx // 2), ("q2", *qa), ("q3", *qa)]
+    queries = [Q1(fi=0, x0=mx // 8, x1=mx // 2), Q2(**rng), Q3(**rng)]
     if not smoke:
         queries = queries * 2
     for ch in CHANNEL_SWEEP[:2] if smoke else CHANNEL_SWEEP:
-        sys_cfg = _system(ch)
-        dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
-        qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
-                                    num_shards=shards, cols_per_bank=cols)
-        for eng in qp.engines:
-            eng.sub.trace.clear()
-        qp.run(queries)
-        tl = dev.schedule(sys_cfg)
-        stats = qp.last_stats(sys_cfg, timeline=tl)
+        session = _session(ch)
+        h = session.create_table(t, name="table",
+                                 shards_per_device=shards,
+                                 cols_per_bank=cols)
+        job = session.query(h, queries)
+        tl, stats = job.timeline, job.stats
         _check_overlap_invariant(stats, f"q123_c{ch}")
         # records/ns == G-rec/s of scheduled DRAM time
         grps = len(queries) * n / tl.device_span_ns
@@ -160,20 +163,21 @@ def q5_barrier_metrics(smoke: bool = False):
     from repro.core.scheduler import ChannelScheduler, Segment
 
     n = 8_000 if smoke else 64_000
-    sys_cfg = _system(2)
-    dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+    session = _session(2)
+    dev = session.devices[0]
     t = P.Table.generate(n, 8, seed=5)
-    qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev, num_shards=2,
-                                cols_per_bank=4096)
+    h = session.create_table(t, name="table", shards_per_device=2,
+                             cols_per_bank=4096)
     mx = 255
-    qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
-    for eng in qp.engines:
-        eng.sub.trace.clear()
-    qp.run([("q5", 3, 2, *qa)])
+    # this row schedules dev.streams() directly (to strip barriers for
+    # the comparison), so the LUT-load streams must be dropped by hand
+    session.clear_traces(h)
+    job = session.query(h, Q5(fl=3, fk=2, fi=0, x0=mx // 8, x1=mx // 2,
+                              fj=1, y0=mx // 4, y1=3 * mx // 4))
     streams = dev.streams()
-    sched = ChannelScheduler(sys_cfg)
+    sched = ChannelScheduler(session.sys_cfg)
     tl = sched.schedule(streams)
-    stats = qp.last_stats(sys_cfg, timeline=tl)
+    stats = job.stats
     _check_overlap_invariant(stats, "q5_barrier")
     bare = sched.schedule([
         drep(s, host_events=(), segments=tuple(

@@ -7,7 +7,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import bank_scaling, channel_scaling, kernel_wallclock, \
-    paper_figs, roofline_report
+    paper_figs, roofline_report, session_scaling
 
 
 def main() -> None:
@@ -22,6 +22,8 @@ def main() -> None:
     for name, us, derived in bank_scaling.run():
         print(f"{name},{us},{derived}")
     for name, us, derived in channel_scaling.run():
+        print(f"{name},{us},{derived}")
+    for name, us, derived in session_scaling.run():
         print(f"{name},{us},{derived}")
     for name, us, derived in roofline_report.run():
         print(f"{name},{us},{derived}")

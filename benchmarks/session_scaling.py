@@ -1,0 +1,145 @@
+"""Session-front-end overhead + multi-device federation scaling, from
+REAL scheduled timelines.
+
+Two acceptance gates, both enforced with a nonzero exit (CI smoke runs
+this):
+
+  * **Front-end overhead**: the same sharded predicate batch through
+    ``PudSession.query`` vs. the raw (deprecated) single-device
+    pipeline path must cost within 5% -- the session is an API, not a
+    tax.  Both paths are normalized to the scheduled DRAM span
+    (``Timeline.device_span_ns``); the batch is Q5-free so the span is
+    fully modeled (no measured-wall-clock noise in the gate).
+  * **Federation scaling**: a 2-device session over the same table
+    (records sharded across devices, per-device timelines scheduled
+    independently, results merged at the serving layer) must beat the
+    1-device session's jobs/sec.  Each device holds half the records,
+    so its shards span fewer banks -> shorter rank-staggered waves and
+    half the readout bytes per channel.
+
+Reported rows: jobs/sec (queries per second of scheduled DRAM time)
+for the raw path, the 1-device session, and the 2-device session; the
+overhead fraction; the federated speedup; and a federated Q1-Q5
+correctness row (1 == every result matched its NumPy reference,
+including Q5's cross-device host-barrier round trip).
+
+All RNG is fixed-seed so numbers are reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import warnings
+from dataclasses import replace
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import PuDArch
+from repro.pud import PudSession, Q1, Q2, Q3, Q4, Q5
+
+MAX_OVERHEAD = 0.05
+COLS = 4096
+
+
+def _sys_cfg() -> cost.SystemConfig:
+    return replace(cost.DESKTOP, channels=2,
+                   bandwidth_gbps=cost.DESKTOP.bandwidth_gbps)
+
+
+def _workload(smoke: bool):
+    n = 32_000 if smoke else 128_000
+    t = P.Table.generate(n, 8, seed=7)
+    mx = 255
+    rng = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
+               y1=3 * mx // 4)
+    # Q5-free: keeps device_span_ns fully modeled (deterministic gates)
+    batch = [Q1(fi=0, x0=mx // 8, x1=mx // 2), Q2(**rng), Q3(**rng)]
+    if not smoke:
+        batch = batch * 2
+    return t, batch, rng
+
+
+def _session_jobs_per_sec(num_devices: int, t, batch, sys_cfg):
+    session = PudSession(sys_cfg=sys_cfg, num_devices=num_devices)
+    table = session.create_table(t, name="bench", cols_per_bank=COLS)
+    # job timelines are job-scoped: the LUT load never counts
+    job = session.query(table, batch)
+    span = job.timeline.device_span_ns
+    return len(batch) / (span / 1e9), span, job
+
+
+def run(smoke: bool = False):
+    sys_cfg = _sys_cfg()
+    t, batch, rng = _workload(smoke)
+    rows = []
+
+    # raw-pipeline reference path (the deprecated pre-session API)
+    dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
+                                    num_shards=2, cols_per_bank=COLS)
+    for eng in qp.engines:
+        eng.sub.trace.clear()
+    qp.run([q.to_tuple() for q in batch])
+    raw_span = dev.schedule(sys_cfg).device_span_ns
+    raw_jps = len(batch) / (raw_span / 1e9)
+    rows.append(("session_scaling_raw_pipeline",
+                 round(raw_span / 1e3, 2), round(raw_jps, 1)))
+
+    jps1, span1, _ = _session_jobs_per_sec(1, t, batch, sys_cfg)
+    rows.append(("session_scaling_session_1dev",
+                 round(span1 / 1e3, 2), round(jps1, 1)))
+    overhead = (jps1 and (raw_jps - jps1) / raw_jps) or 0.0
+    rows.append(("session_scaling_frontend_overhead", 0.0,
+                 round(overhead, 4)))
+    if overhead > MAX_OVERHEAD:
+        raise SystemExit(
+            f"session front-end overhead {overhead:.1%} exceeds "
+            f"{MAX_OVERHEAD:.0%}: session {jps1:.1f} jobs/s vs raw "
+            f"pipeline {raw_jps:.1f} jobs/s")
+
+    jps2, span2, _ = _session_jobs_per_sec(2, t, batch, sys_cfg)
+    rows.append(("session_scaling_session_2dev",
+                 round(span2 / 1e3, 2), round(jps2, 1)))
+    rows.append(("session_scaling_federated_speedup_1_to_2", 0.0,
+                 round(jps2 / jps1, 2)))
+    if jps2 <= jps1:
+        raise SystemExit(
+            f"federated 2-device throughput {jps2:.1f} jobs/s does not "
+            f"beat 1-device {jps1:.1f} jobs/s on the sharded predicate "
+            "workload")
+
+    # federated correctness incl. Q5's cross-device host barrier
+    session = PudSession(sys_cfg=sys_cfg, num_devices=2)
+    table = session.create_table(t, name="check", cols_per_bank=COLS)
+    qs = [Q1(fi=0, x0=31, x1=127), Q2(**rng), Q3(**rng),
+          Q4(fk=2, **rng), Q5(fl=3, fk=2, **rng)]
+    job = session.query(table, qs)
+    ok = all(q.check(t, got) for q, got in zip(qs, job.result))
+    rows.append(("session_scaling_federated_q1q5_exact",
+                 round(job.stats.makespan_ns / 1e3, 2), int(ok)))
+    if not ok:
+        raise SystemExit("federated Q1-Q5 results diverged from the "
+                         "NumPy references")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI regression smoke")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """GBDT (oblivious-tree) inference on PuD -- the paper's novel §6.1
-mapping, end to end: fit a booster, load thresholds + one-hot masks into
-the simulated subarray, run per-feature Clutch comparisons + mask/OR, read
-the leaf-address row, and aggregate leaves (host + TPU leaf_gather kernel).
+mapping, end to end through the `repro.pud` session API: fit a booster,
+declare it as a session forest resource (thresholds + one-hot masks
+loaded into channel-spread bank groups), submit batched inference jobs,
+and aggregate leaves (host + TPU leaf_gather kernel).
 
     PYTHONPATH=src python examples/gbdt_inference.py
 """
@@ -16,6 +17,7 @@ import numpy as np
 from repro.apps import gbdt as G
 from repro.core.machine import PuDArch
 from repro.kernels import ops
+from repro.pud import PudSession
 
 
 def main() -> None:
@@ -32,15 +34,21 @@ def main() -> None:
           f"train MAE {mae:.3f} (baseline {np.abs(y - y.mean()).mean():.3f})")
 
     for arch in (PuDArch.MODIFIED, PuDArch.UNMODIFIED):
-        eng = G.GbdtPudEngine(forest, arch)
+        session = PudSession(arch=arch)
+        ranker = session.load_forest(forest, name="ranker",
+                                     banks_per_group=2)
         batch = x[:16]
-        got = eng.infer(batch)
-        np.testing.assert_allclose(got, G.reference_predict(forest, batch),
+        job = session.predict(ranker, batch)
+        np.testing.assert_allclose(job.result,
+                                   G.reference_predict(forest, batch),
                                    atol=1e-3)
+        eng = session.executor(ranker).engines[0]
         print(f"{arch.value:10s}: PuD inference exact; "
               f"{eng.ops_per_instance} PuD ops/instance "
               f"({eng.num_chunks} chunks/feature, {forest.num_features} "
-              f"features)")
+              f"features); batch makespan "
+              f"{job.stats.makespan_ns / 1e3:.1f} us "
+              f"across {len(session.devices)} device(s)")
 
     # TPU-side leaf aggregation (the MXU one-hot contraction kernel)
     addrs = G.reference_leaf_addrs(forest, x[:256])

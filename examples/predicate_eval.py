@@ -1,8 +1,11 @@
-"""In-memory database predicate evaluation on PuD (paper §6.2).
+"""In-memory database predicate evaluation on PuD (paper §6.2) through
+the `repro.pud` session API.
 
-Builds an 8-feature table, runs the paper's Q1-Q5 on Clutch and the
-bit-serial baseline (both PuD architectures), validates against NumPy and
-reports PuD op counts + modeled end-to-end throughput.
+Builds an 8-feature table, declares it as a session resource on each
+substrate (Clutch and the bit-serial baseline, both PuD architectures),
+submits the paper's Q2-Q5 as one pipelined job, validates against NumPy
+and reports the scheduled stats, then demonstrates dynamic bank reuse:
+dropping a table coalesces its banks back for the next method's table.
 
     PYTHONPATH=src python examples/predicate_eval.py
 """
@@ -11,37 +14,37 @@ import sys
 import os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
 from repro.apps import predicate as P
 from repro.core import cost
 from repro.core.machine import PuDArch
+from repro.pud import PudSession, Q2, Q3, Q4, Q5
 
 
 def main() -> None:
     n_bits = 16
     t = P.Table.generate(20_000, n_bits, seed=0)
     mx = (1 << n_bits) - 1
-    qa = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
-              y1=3 * mx // 4)
+    rng = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
+               y1=3 * mx // 4)
+    batch = [Q2(**rng), Q3(**rng), Q4(fk=2, **rng),
+             Q5(fl=3, fk=2, **rng)]
     print(f"table: {t.num_records} records x 8 features @ {n_bits}-bit\n")
     for arch in (PuDArch.MODIFIED, PuDArch.UNMODIFIED):
+        session = PudSession(sys_cfg=cost.DESKTOP, arch=arch)
         for method in ("clutch", "bitserial"):
-            e = P.PudQueryEngine(t, arch, method)
-            e.sub.trace.clear()
-            q2 = e.q2(**qa)
-            ops_q2 = e.sub.trace.pud_ops
-            q3 = e.q3(**qa)
-            q4 = e.q4(fk=2, **qa)
-            q5 = e.q5(fl=3, fk=2, **qa)
-            assert (q2 == P.reference_q2(t, **qa)).all()
-            assert q3 == P.reference_q3(t, **qa)
-            assert abs(q4 - P.reference_q4(t, 2, **qa)) < 1e-9
-            assert q5 == P.reference_q5(t, 3, 2, **qa)
-            ch = getattr(e, "num_chunks", "-")
-            print(f"{arch.value:10s} {method:9s} chunks={ch:>2} "
+            table = session.create_table(t, name=method, method=method)
+            job = session.query(table, batch)
+            q2, q3, q4, q5 = job.result
+            for q, got in zip(batch, job.result):
+                assert q.check(t, got), (q, got)
+            print(f"{arch.value:10s} {method:9s} "
                   f"Q2={int(q2.sum()):6d} rows  Q3={q3:6d}  "
-                  f"Q4={q4:9.1f}  Q5={q5:6d}  (Q2: {ops_q2} PuD ops)")
+                  f"Q4={q4:9.1f}  Q5={q5:6d}  "
+                  f"(makespan {job.stats.makespan_ns / 1e3:8.1f} us, "
+                  f"overlap x{job.stats.overlap_efficiency:.2f})")
+            # dynamic bank reuse: free this method's banks (coalesced)
+            # so the next table reallocates the same ranges
+            session.drop(table)
     print("\nall queries match NumPy ground truth")
 
     # modeled end-to-end throughput on the desktop system (256M-value table)

@@ -1,8 +1,23 @@
 """Clutch (ICS'26) at framework scale: PuD comparison core + TPU kernels
 + applications + a multi-pod JAX training/serving stack.
 
-Subpackages: core (paper algorithm + cost model), kernels (Pallas),
-apps (predicate eval, GBDT), models/configs (10 assigned archs),
+Subpackages: pud (the public session API: PudSession, declarative
+resources, placement planner, multi-device federation), core (paper
+algorithm + cost model), kernels (Pallas), apps (predicate eval, GBDT
+engines behind the session), models/configs (10 assigned archs),
 dist/train/serve/data (distributed runtime), launch (mesh + dry-run).
 See DESIGN.md / EXPERIMENTS.md.
 """
+
+from . import pud  # noqa: F401
+from .pud import (  # noqa: F401
+    ForestHandle,
+    JobResult,
+    PudSession,
+    Q1,
+    Q2,
+    Q3,
+    Q4,
+    Q5,
+    TableHandle,
+)

@@ -30,7 +30,11 @@ instance's feature value -- and the partial leaf-address rows are merged
 host-side after the single readout, which lifts the old 65536-node
 rejection.
 
-Async host pipeline: :class:`GbdtBatchPipeline` places several engine
+Async host pipeline: the batch path now lives in
+:class:`repro.pud.executors.GbdtBatchExecutor` behind
+:class:`repro.pud.PudSession` (forest replicas on every device of a
+fleet); :class:`GbdtBatchPipeline` remains one release as a deprecated
+single-device shim over it.  The executor places several engine
 groups on distinct device channels, splits a batch into waves, and
 double-buffers each group's leaf-bitmap row so host readout/merge of
 wave N overlaps PuD execution of wave N+1.  The recorded stream carries
@@ -47,14 +51,14 @@ are stored even on Unmodified PuD.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.clutch import ClutchEngine, clutch_op_count
 from repro.core.machine import BankedSubarray, PuDArch, pack_bits, unpack_bits
-
-from .pipeline import HostTimer, PipelineStats, stats_from_timeline
+from repro.pud.executors import GbdtBatchExecutor
 
 # Paper §5.1 kernel chunk counts (minimum fitting a single subarray).
 PAPER_GBDT_CHUNKS = {8: 1, 16: 2, 32: 5}
@@ -310,143 +314,30 @@ class GbdtPudEngine:
         return np.concatenate(preds).astype(np.float32)
 
 
-class GbdtBatchPipeline:
-    """Async host/PuD GBDT inference across channel-spread engine groups.
+class GbdtBatchPipeline(GbdtBatchExecutor):
+    """Deprecated single-device alias of
+    :class:`repro.pud.executors.GbdtBatchExecutor`.
 
-    ``num_groups`` :class:`GbdtPudEngine` replicas are placed on the
-    device round-robin over its channels (deliberate channel-aware
-    placement: disjoint command buses overlap in the scheduler).  A
-    batch is split into waves of ``num_groups * wave_width`` instances;
-    for each wave the pipeline issues every group's compute stream,
-    *then* reads back and merges the previous wave's double-buffered
-    result rows -- host readout/merge of wave N overlaps PuD execution
-    of wave N+1, and the recorded segments declare exactly that
-    dependency structure (compute ``w`` after compute ``w-1`` and the
-    readout that freed its buffer; readout ``w`` after compute ``w``
-    only).
-
-    :meth:`infer` returns predictions; :meth:`last_stats` replays the
-    device's scheduled timeline into a :class:`PipelineStats` for the
-    batch that just ran.
+    Construct a :class:`repro.pud.PudSession` and use
+    ``session.load_forest`` + ``session.predict`` instead; this shim
+    (warning + delegation, one release) keeps external callers working.
     """
-
-    _uid = 0
 
     def __init__(self, forest: ObliviousForest, arch: PuDArch, device,
                  num_groups: int = 2, banks_per_group: int = 4,
                  num_chunks: int | None = None) -> None:
-        if num_groups < 1:
-            raise ValueError("need at least one group")
-        GbdtBatchPipeline._uid += 1
-        self._tag = f"gbdt.p{GbdtBatchPipeline._uid}"
-        self.device = device
-        self.engines = [
-            GbdtPudEngine(forest, arch, num_chunks=num_chunks,
-                          num_banks=banks_per_group, device=device,
-                          channels=g % device.channels,
-                          label=f"{self._tag}.g{g}")
-            for g in range(num_groups)
-        ]
-        self.wave_width = sum(e.wave_width for e in self.engines)
-        self._batch = 0
-        self._last_tags: list[list[str]] = []
-        self._last_host = HostTimer()
+        warnings.warn(
+            "GbdtBatchPipeline is deprecated; use "
+            "repro.pud.PudSession.load_forest/predict (one-release shim)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(forest, arch, [device],
+                         groups_per_device=num_groups,
+                         banks_per_group=banks_per_group,
+                         num_chunks=num_chunks)
 
-    def infer(self, X: np.ndarray) -> np.ndarray:
-        """Pipelined batch inference; functionally identical to the
-        serial path (tested), differing only in recorded stream order
-        and the resulting overlap accounting."""
-        X = np.asarray(X)
-        if X.shape[0] == 0:
-            return np.empty((0,), np.float32)
-        self._batch += 1
-        base = f"{self._tag}.b{self._batch}"
-        self._last_tags = []
-        self._last_host = HostTimer()
-        engines = self.engines
-        # per-engine (compute, readout, merge-event) history
-        prev_c = [None] * len(engines)
-        prev_r = [None] * len(engines)
-        prev_h = [None] * len(engines)
-        pending: tuple[int, list[tuple[int, int]]] | None = None
-        preds_out: list[np.ndarray] = []
-
-        def collect(w: int,
-                    widths: list[tuple[int, int, int | None]]) -> None:
-            words = []
-            hids = []
-            for g, (wd, buf, c_seg) in enumerate(widths):
-                if wd == 0:
-                    words.append(None)
-                    hids.append(None)
-                    continue
-                tr = engines[g].sub.trace
-                # the readout depends only on the compute segment that
-                # filled this buffer, not on later waves
-                prev_r[g] = tr.begin_segment(
-                    f"{base}.w{w}:r", after=(c_seg,))
-                words.append(engines[g]._read_wave(buf))
-                # the leaf gather/merge is host work: one shared label
-                # across groups == one host-lane node joining their
-                # readouts, chained after the previous wave's merge
-                hids.append(tr.add_host_event(
-                    f"{base}.w{w}:h", after=(prev_r[g],),
-                    after_host=() if prev_h[g] is None else (prev_h[g],),
-                    bytes_in=engines[g].sub.num_banks *
-                    engines[g].sub.num_cols / 8))
-                prev_h[g] = hids[g]
-
-            def merge() -> None:
-                for g, (wd, _, _) in enumerate(widths):
-                    if wd:
-                        preds_out.append(
-                            engines[g]._merge_wave(words[g], wd)[1])
-            self._last_host.measure(merge)
-            merge_ns = self._last_host.samples_ns[-1]
-            for g, hid in enumerate(hids):
-                if hid is not None:
-                    engines[g].sub.trace.set_host_duration(hid, merge_ns)
-
-        n_waves = math.ceil(X.shape[0] / self.wave_width)
-        off = 0
-        for w in range(n_waves):
-            Xw = X[off:off + self.wave_width]
-            off += self.wave_width
-            widths: list[tuple[int, int, int | None]] = []
-            lo = 0
-            buf = w % 2
-            for g, eng in enumerate(engines):
-                Xg = Xw[lo:lo + eng.wave_width]
-                lo += eng.wave_width
-                if Xg.shape[0] == 0:
-                    widths.append((0, buf, None))
-                    continue
-                after = None
-                if prev_c[g] is not None:
-                    after = (prev_c[g],) + (
-                        (prev_r[g],) if prev_r[g] is not None else ())
-                prev_c[g] = eng.sub.trace.begin_segment(
-                    f"{base}.w{w}:c", after=after)
-                eng._compute_wave(Xg, buf)
-                widths.append((Xg.shape[0], buf, prev_c[g]))
-            self._last_tags.append([f"{base}.w{w}:c", f"{base}.w{w}:r",
-                                    f"{base}.w{w}:h"])
-            if pending is not None:
-                collect(*pending)
-            pending = (w, widths)
-        if pending is not None:
-            collect(*pending)
-        return np.concatenate(preds_out).astype(np.float32)
-
-    def last_stats(self, sys_cfg, timeline=None) -> PipelineStats:
-        """Project the last batch's waves + measured host merges into
-        pipeline totals.  ``timeline`` reuses an existing device
-        schedule; by default the device's streams are (re)scheduled."""
-        if timeline is None:
-            timeline = self.device.schedule(sys_cfg)
-        return stats_from_timeline(
-            timeline, [e.label for e in self.engines],
-            self._last_tags, self._last_host.samples_ns)
+    @property
+    def device(self):
+        return self.devices[0]
 
 
 def gbdt_ops_per_instance(forest: ObliviousForest, chunks: int,

@@ -20,14 +20,15 @@ happens in-DRAM in every bank concurrently, and only the final bitmaps
 leave the chip, where COUNT/AVERAGE merge host-side.  This removes the
 seed's 65536-record capacity cliff.
 
-Async query pipeline: :class:`ShardedQueryPipeline` splits the table
-record-wise across several engine *groups* placed on distinct device
-channels, and runs a batch of queries double-buffered: each query's
-WHERE bitmap is parked in one of two result rows, the next query's PuD
-stream is issued, and only then is the parked row read back and merged
-(COUNT/AVERAGE) on the host -- so host readout/merge of query N
-overlaps PuD execution of query N+1, and shard readouts on one channel
-overlap other shards' compute on other channels in the bus scheduler.
+Async query pipeline: the batch/pipeline path now lives in
+:class:`repro.pud.executors.QueryBatchExecutor` behind
+:class:`repro.pud.PudSession` (which also federates a table across
+several devices); :class:`ShardedQueryPipeline` remains one release as
+a deprecated single-device shim over it.  The pipeline runs a batch of
+queries double-buffered: each query's WHERE bitmap is parked in one of
+two result rows, the next query's PuD stream is issued, and only then
+is the parked row read back and merged (COUNT/AVERAGE) on the host --
+so host readout/merge of query N overlaps PuD execution of query N+1.
 Every merge is recorded as a host event (one label across all shards ==
 one host-lane node joining their readouts), and Q5's phase-2 scan --
 whose scalar exists only after phase 1's merge -- declares that merge
@@ -38,6 +39,7 @@ host round trip instead of assuming the scalar was already available.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -45,8 +47,9 @@ import numpy as np
 from repro.core.bitserial import BitSerialEngine
 from repro.core.clutch import ClutchEngine
 from repro.core.machine import BankedSubarray, PuDArch, unpack_bits
+from repro.pud.executors import QueryBatchExecutor
 
-from .pipeline import HostTimer, PipelineStats, stats_from_timeline
+from .pipeline import HostTimer
 
 
 @dataclass
@@ -327,205 +330,30 @@ class PudQueryEngine:
         return int(self.q1(fl, avg, hi).sum())
 
 
-class ShardedQueryPipeline:
-    """Q1-Q5 over a table record-sharded across channel-spread groups,
-    with the async host/PuD query pipeline.
+class ShardedQueryPipeline(QueryBatchExecutor):
+    """Deprecated single-device alias of
+    :class:`repro.pud.executors.QueryBatchExecutor`.
 
-    The table is split record-wise into ``num_shards`` sub-tables, each
-    resident in its own :class:`PudQueryEngine` bank group placed
-    round-robin over the device's channels.  :meth:`run` executes a
-    batch of queries double-buffered: query N+1's WHERE streams are
-    issued on every shard before query N's parked bitmaps are read back
-    and merged host-side, so the host work overlaps PuD execution and
-    shard readouts overlap other channels' compute in the bus
-    scheduler.  Each wave's merge is recorded as a host event shared by
-    every shard's trace (one host-lane node joining all readouts,
-    chained after the previous merge).  Q5's second phase takes its
-    scalar from the first phase's host merge (a host barrier): the
-    dependent wave is created during that merge AND declares it via
-    ``after_host``, so the scheduled timeline -- not just the record
-    order -- contains the pipeline bubble.
-
-    Queries are tuples: ``("q1", fi, x0, x1)``, ``("q2"|"q3", fi, x0,
-    x1, fj, y0, y1)``, ``("q4", fk, fi, x0, x1, fj, y0, y1)``,
-    ``("q5", fl, fk, fi, x0, x1, fj, y0, y1)`` -- results match the
-    ``reference_*`` functions element-for-element.
+    Construct a :class:`repro.pud.PudSession` and use
+    ``session.create_table`` + ``session.query`` instead; this shim
+    (warning + delegation, one release) keeps external callers working.
     """
-
-    _uid = 0
 
     def __init__(self, table: Table, arch: PuDArch, device,
                  num_shards: int = 2, method: str = "clutch",
                  num_chunks: int | None = None,
                  cols_per_bank: int = 65536) -> None:
-        if num_shards < 1:
-            raise ValueError("need at least one shard")
-        ShardedQueryPipeline._uid += 1
-        self._tag = f"query.p{ShardedQueryPipeline._uid}"
-        self.table = table
-        self.device = device
-        n = table.num_records
-        per = math.ceil(n / num_shards)
-        self.bounds = [(s * per, min((s + 1) * per, n))
-                       for s in range(num_shards)]
-        self.engines = [
-            PudQueryEngine(
-                Table(table.n_bits, [f[lo:hi] for f in table.features]),
-                arch, method, num_chunks=num_chunks, device=device,
-                channels=s % device.channels,
-                label=f"{self._tag}.s{s}", cols_per_bank=cols_per_bank)
-            for s, (lo, hi) in enumerate(self.bounds)
-        ]
-        self._batch = 0
-        self._last_tags: list[list[str]] = []
-        self._last_host = HostTimer()
+        warnings.warn(
+            "ShardedQueryPipeline is deprecated; use "
+            "repro.pud.PudSession.create_table/query (one-release shim)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(table, arch, [device],
+                         shards_per_device=num_shards, method=method,
+                         num_chunks=num_chunks, cols_per_bank=cols_per_bank)
 
-    # ------------------------------------------------------------------ #
-    def run(self, queries: list[tuple]) -> list:
-        """Run a batch of queries through the async pipeline; returns
-        one result per query (bitmap for q1/q2, int for q3/q5, float
-        for q4), identical to the serial reference path."""
-        from collections import deque
-
-        self._batch += 1
-        base = f"{self._tag}.b{self._batch}"
-        self._last_tags = []
-        self._last_host = HostTimer()
-        results: list = [None] * len(queries)
-        work_ref: list = []  # lets Q5's merge enqueue its phase-2 wave
-        work = deque(self._make_wave(qi, q, results, work_ref)
-                     for qi, q in enumerate(queries))
-        work_ref.append(work)
-
-        engines = self.engines
-        prev_c: list[int | None] = [None] * len(engines)
-        prev_h: list[int | None] = [None] * len(engines)
-        last_r_by_buf: list[dict[int, int]] = [dict() for _ in engines]
-        pending = None
-        w = 0
-
-        def submit(wave) -> tuple:
-            tag = f"{base}.w{w}"
-            buf = w % 2
-            c_segs = []
-            for s, eng in enumerate(engines):
-                after = None
-                if prev_c[s] is not None:
-                    after = (prev_c[s],)
-                    if buf in last_r_by_buf[s]:
-                        after += (last_r_by_buf[s][buf],)
-                # host barrier: a Q5 phase-2 wave may not start before
-                # the merge that produced its scalar bounds
-                after_host = (wave["hids"][s],) if wave.get("hids") else ()
-                eng.submit(wave["kind"], wave["params"], buf,
-                           segment=f"{tag}:c", after=after,
-                           after_host=after_host)
-                prev_c[s] = eng.sub.trace.current_segment
-                c_segs.append(prev_c[s])
-            self._last_tags.append([f"{tag}:c", f"{tag}:r", f"{tag}:h"])
-            return (wave, w, buf, c_segs)
-
-        def collect(item) -> None:
-            wave, wi, buf, c_segs = item
-            tag = f"{base}.w{wi}"
-            words = []
-            hids = []
-            for s, eng in enumerate(engines):
-                # the readout depends only on the compute segment that
-                # parked this buffer, not on later waves
-                last_r_by_buf[s][buf] = eng.sub.trace.begin_segment(
-                    f"{tag}:r", after=(c_segs[s],))
-                words.append(eng.read_parked(buf))
-                # one shared label across shards == one host-lane node
-                # joining every shard's readout; merges chain serially
-                hids.append(eng.sub.trace.add_host_event(
-                    f"{tag}:h", after=(last_r_by_buf[s][buf],),
-                    after_host=() if prev_h[s] is None else (prev_h[s],),
-                    bytes_in=eng.sub.num_banks * eng.sub.num_cols / 8))
-                prev_h[s] = hids[s]
-
-            def merge() -> None:
-                bitmap = np.concatenate(
-                    [eng.merge_words(ws)
-                     for eng, ws in zip(engines, words)])
-                wave["merge"](bitmap)
-            self._last_host.measure(merge)
-            merge_ns = self._last_host.samples_ns[-1]
-            for s, eng in enumerate(engines):
-                eng.sub.trace.set_host_duration(hids[s], merge_ns)
-            # a dependent wave enqueued during this merge (Q5 phase 2)
-            # is barred on this wave's merge event
-            for queued in work_ref[0]:
-                if queued.get("barrier") and "hids" not in queued:
-                    queued["hids"] = list(hids)
-
-        while work or pending is not None:
-            if work:
-                item = submit(work.popleft())
-                w += 1
-                if pending is not None:
-                    collect(pending)
-                pending = item
-            else:
-                collect(pending)
-                pending = None
-        return results
-
-    # ------------------------------------------------------------------ #
-    def _make_wave(self, qi: int, q: tuple, results: list,
-                   work_ref: list) -> dict:
-        name, *p = q
-        mx = (1 << self.table.n_bits) - 1
-
-        if name == "q1":
-            return {"kind": "range", "params": tuple(p),
-                    "merge": lambda bm: results.__setitem__(qi, bm)}
-        if name == "q2":
-            return {"kind": "and2", "params": tuple(p),
-                    "merge": lambda bm: results.__setitem__(qi, bm)}
-        if name == "q3":
-            return {"kind": "or2", "params": tuple(p),
-                    "merge": lambda bm: results.__setitem__(
-                        qi, int(bm.sum()))}
-        if name == "q4":
-            fk, *rest = p
-
-            def merge_q4(bm):
-                vals = self.table.features[fk][bm]
-                results[qi] = float(vals.mean()) if vals.size else 0.0
-            return {"kind": "and2", "params": tuple(rest),
-                    "merge": merge_q4}
-        if name == "q5":
-            fl, fk, *rest = p
-
-            def merge_phase1(bm):
-                vals = self.table.features[fk][bm]
-                avg = int(vals.mean()) if vals.size else 0
-                hi = min(2 * avg, mx)
-                if avg >= hi:
-                    results[qi] = 0
-                    return
-                # host barrier: the dependent wave exists only now, and
-                # its segments will declare this merge via after_host
-                work_ref[0].appendleft({
-                    "kind": "range", "params": (fl, avg, hi),
-                    "barrier": True,
-                    "merge": lambda bm2: results.__setitem__(
-                        qi, int(bm2.sum())),
-                })
-            return {"kind": "or2", "params": tuple(rest),
-                    "merge": merge_phase1}
-        raise ValueError(f"unknown query {name!r}")
-
-    def last_stats(self, sys_cfg, timeline=None) -> PipelineStats:
-        """Project the last batch's waves + measured host merges into
-        pipeline totals.  ``timeline`` reuses an existing device
-        schedule; by default the device's streams are (re)scheduled."""
-        if timeline is None:
-            timeline = self.device.schedule(sys_cfg)
-        return stats_from_timeline(
-            timeline, [e.label for e in self.engines],
-            self._last_tags, self._last_host.samples_ns)
+    @property
+    def device(self):
+        return self.devices[0]
 
 
 # ------------------------- NumPy ground truth -------------------------- #

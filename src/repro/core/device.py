@@ -30,16 +30,33 @@ device above it:
   * **Dynamic bank reuse**: :meth:`free_banks` releases a placed
     group's banks back to the free map and prunes it from
     placement/streams, so serving workloads can rotate tables/forests
-    on one device instead of rebuilding it.
+    on one device instead of rebuilding it.  The free map is an
+    explicit sorted range list: freeing coalesces adjacent ranges, so
+    alloc -> free -> realloc of a *larger* contiguous group succeeds
+    whenever a hole of that size exists (``free_ranges`` /
+    ``largest_free_run`` expose the map for placement planners).
+  * **Defragmentation**: :meth:`defragment` compacts placed groups
+    toward the start of each channel, closing the holes that remain
+    when interleaved lifetimes fragment the free map.  Group state
+    lives in each group's :class:`~repro.core.machine.BankedSubarray`
+    (indexed by group, not by physical bank), so relocation preserves
+    LUT/vector contents bit-exactly; the physical cost of moving a
+    group -- reading its occupied rows out over the channel and
+    rewriting them at the new banks -- is recorded as READ/WRITE
+    traffic in the group's command stream.  Runs never leave their
+    channel, so channel footprints (and therefore which groups can
+    overlap on the bus) are unchanged.
 """
 
 from __future__ import annotations
+
+import bisect
 
 from dataclasses import dataclass
 
 import numpy as np
 
-from .machine import BankedSubarray, PuDArch
+from .machine import BankedSubarray, PuDArch, PuDOp
 from .scheduler import ChannelScheduler, Footprint, GroupStream, Timeline
 
 
@@ -90,7 +107,9 @@ class PuDDevice:
         self.num_rows = num_rows
         self.cols_per_bank = cols_per_bank
         self._seed = seed
-        self._free = np.ones(self.total_banks, dtype=bool)
+        # Free map: sorted, non-overlapping, non-adjacent [start, length]
+        # ranges (adjacent ranges are always coalesced on free).
+        self._ranges: list[list[int]] = [[0, self.total_banks]]
         self.groups: list[BankGroup] = []
 
     @classmethod
@@ -109,7 +128,19 @@ class PuDDevice:
 
     @property
     def banks_free(self) -> int:
-        return int(self._free.sum())
+        return sum(length for _, length in self._ranges)
+
+    @property
+    def free_ranges(self) -> tuple[tuple[int, int], ...]:
+        """The free map as sorted, coalesced ``(start, length)`` ranges."""
+        return tuple((s, length) for s, length in self._ranges)
+
+    @property
+    def largest_free_run(self) -> int:
+        """Largest contiguous allocatable run (0 when the device is
+        full).  ``banks_free > largest_free_run`` means the free space
+        is fragmented -- a :meth:`defragment` candidate."""
+        return max((length for _, length in self._ranges), default=0)
 
     @property
     def parallel_cols(self) -> int:
@@ -134,26 +165,57 @@ class PuDDevice:
     # ------------------------------------------------------------------ #
     # Placement
     # ------------------------------------------------------------------ #
-    def _take_contiguous(self, n: int, lo: int, hi: int) -> list[int]:
-        """First-fit run of ``n`` free banks inside [lo, hi); [] if none."""
-        run: list[int] = []
-        for b in range(lo, hi):
-            if self._free[b]:
-                run.append(b)
-                if len(run) == n:
-                    return run
-            else:
-                run = []
+    def _find_contiguous(self, n: int, lo: int, hi: int) -> list[int]:
+        """First-fit run of ``n`` free banks inside [lo, hi); [] if none.
+        Pure lookup -- the caller carves the run once the whole
+        placement has resolved, so a multi-channel request that fails
+        on a later channel leaks nothing."""
+        for start, length in self._ranges:
+            a, b = max(start, lo), min(start + length, hi)
+            if b - a >= n:
+                return list(range(a, a + n))
         return []
+
+    def _carve(self, start: int, n: int) -> None:
+        """Remove the run [start, start+n) from the free map (the run
+        must lie inside one free range)."""
+        for i, (s, length) in enumerate(self._ranges):
+            if s <= start and start + n <= s + length:
+                pieces = []
+                if start > s:
+                    pieces.append([s, start - s])
+                if s + length > start + n:
+                    pieces.append([start + n, s + length - (start + n)])
+                self._ranges[i:i + 1] = pieces
+                return
+        raise AssertionError(
+            f"carve of [{start}, {start + n}) misses the free map")
+
+    def _insert_free(self, start: int, n: int) -> None:
+        """Return the run [start, start+n) to the free map, coalescing
+        with adjacent free ranges so fragmentation never accumulates
+        from the free path itself."""
+        i = bisect.bisect([s for s, _ in self._ranges], start)
+        self._ranges.insert(i, [start, n])
+        if i + 1 < len(self._ranges) and \
+                start + n == self._ranges[i + 1][0]:
+            self._ranges[i][1] += self._ranges[i + 1][1]
+            del self._ranges[i + 1]
+        if i > 0 and \
+                self._ranges[i - 1][0] + self._ranges[i - 1][1] == start:
+            self._ranges[i - 1][1] += self._ranges[i][1]
+            del self._ranges[i]
 
     def _channel_free(self, c: int) -> int:
         per_ch = self.banks_per_channel
-        return int(self._free[c * per_ch:(c + 1) * per_ch].sum())
+        lo, hi = c * per_ch, (c + 1) * per_ch
+        return sum(max(0, min(s + length, hi) - max(s, lo))
+                   for s, length in self._ranges)
 
     def _resolve_placement(self, n: int, channels) -> list[int]:
         per_ch = self.banks_per_channel
         if channels is None:
-            picked = self._take_contiguous(n, 0, self.total_banks)
+            picked = self._find_contiguous(n, 0, self.total_banks)
             if picked:
                 return picked
             raise MemoryError(
@@ -177,7 +239,7 @@ class PuDDevice:
         for c in channels:
             if want[c] == 0:
                 continue
-            got = self._take_contiguous(want[c], c * per_ch,
+            got = self._find_contiguous(want[c], c * per_ch,
                                         (c + 1) * per_ch)
             if not got:
                 raise MemoryError(
@@ -185,6 +247,17 @@ class PuDDevice:
                     f"({self._channel_free(c)} free)")
             picked.extend(got)
         return picked
+
+    @staticmethod
+    def _runs(banks) -> list[tuple[int, int]]:
+        """Maximal consecutive (start, length) runs of a bank set."""
+        out: list[tuple[int, int]] = []
+        for b in sorted(banks):
+            if out and out[-1][0] + out[-1][1] == b:
+                out[-1] = (out[-1][0], out[-1][1] + 1)
+            else:
+                out.append((b, 1))
+        return out
 
     def alloc_banks(self, n: int, num_cols: int | None = None,
                     label: str = "", channels=None,
@@ -206,7 +279,8 @@ class PuDDevice:
             else self._seed + banks[0])
         group = BankGroup(banks=tuple(banks), sub=sub, label=label,
                           active_elems=active_elems)
-        self._free[banks] = False
+        for start, length in self._runs(banks):
+            self._carve(start, length)
         self.groups.append(group)
         return sub
 
@@ -224,8 +298,72 @@ class PuDDevice:
         if not matches:
             raise ValueError("group is not placed on this device")
         g = matches[0]
-        self._free[list(g.banks)] = True
+        for start, length in self._runs(g.banks):
+            self._insert_free(start, length)
         self.groups.remove(g)
+
+    # ------------------------------------------------------------------ #
+    # Defragmentation
+    # ------------------------------------------------------------------ #
+    def defragment(self) -> int:
+        """Compact placed groups toward the start of each channel,
+        coalescing every channel's free space into one tail run.
+
+        Each group's per-channel bank runs slide down (placement order
+        preserved) without crossing channel boundaries, so the group's
+        channel footprint -- which buses it occupies, hence which
+        groups it serializes with -- is unchanged.  Group *state* is
+        untouched (it lives in the group's own
+        :class:`~repro.core.machine.BankedSubarray`); the physical move
+        is accounted for by recording one READ + one WRITE wave per
+        occupied row in each relocated group's command stream, in a
+        dedicated ``defrag`` segment that subsequent (default-chained)
+        segments depend on.  Returns the number of banks moved.
+        """
+        per_ch = self.banks_per_channel
+        new_banks = {id(g): list(g.banks) for g in self.groups}
+        moved_groups: set[int] = set()
+        moved = 0
+        for c in range(self.channels):
+            lo = c * per_ch
+            items: list[tuple[int, list[int], BankGroup]] = []
+            for g in self.groups:
+                for start, length in self._runs(
+                        b for b in g.banks if lo <= b < lo + per_ch):
+                    items.append((start, list(range(start, start + length)),
+                                  g))
+            items.sort(key=lambda it: it[0])
+            cursor = lo
+            for start, run, g in items:
+                if start != cursor:
+                    remap = {old: cursor + k for k, old in enumerate(run)}
+                    nb = new_banks[id(g)]
+                    for j, b in enumerate(nb):
+                        if b in remap:
+                            nb[j] = remap[b]
+                    moved += len(run)
+                    moved_groups.add(id(g))
+                cursor += len(run)
+        for g in self.groups:
+            if id(g) in moved_groups:
+                g.banks = tuple(new_banks[id(g)])
+                # Banks cannot RowClone across banks: relocation is a
+                # host round trip over every occupied row.
+                tr = g.sub.trace
+                rows = max(1, g.sub._alloc_ptr)
+                tr.begin_segment(f"defrag:{g.label or 'group'}")
+                tr.emit_rows(PuDOp.READ, 0, rows)
+                tr.emit_rows(PuDOp.WRITE, 0, rows)
+        used = sorted(b for g in self.groups for b in g.banks)
+        self._ranges = []
+        prev = 0
+        for start, length in self._runs(used):
+            if start > prev:
+                self._ranges.append([prev, start - prev])
+            prev = start + length
+        if prev < self.total_banks:
+            self._ranges.append([prev, self.total_banks - prev])
+        return moved
 
     def footprint(self, group: BankGroup) -> Footprint:
         """{channel: {rank: bank count}} of a group's placement."""

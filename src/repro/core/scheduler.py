@@ -54,6 +54,16 @@ dependent broadcast wave (Q5 phase 2, GBDT leaf gather), appears in the
 timeline: readouts -> one host span -> dependent waves, with the
 makespan honestly including the host bubble.
 
+Federation
+----------
+A logical workload may span several devices (each with its own
+scheduler instance and timeline).  :func:`federate_timelines` merges
+per-device timelines at the serving layer: device channels are re-keyed
+so they stay independent, same-label host spans (one logical merge that
+each device's schedule saw half of) unify into one node, and the
+serving layer's own cross-device merge is appended as a final host node
+-- the federation merge node.
+
 Dependency model
 ----------------
 Waves carry the segment ids recorded by the engines
@@ -218,6 +228,101 @@ class Timeline:
         serial host lane if that dominates."""
         return max(max(self.group_busy_ns.values(), default=0.0),
                    self.host_busy_ns)
+
+
+def rekey_stream(stream: GroupStream, device_index: int,
+                 stride: int) -> GroupStream:
+    """Move a stream's footprint into device ``device_index``'s channel
+    namespace (channel ``c`` -> ``device_index * stride + c``) for
+    joint fleet scheduling: devices' buses stay independent while ONE
+    :class:`ChannelScheduler` host lane joins them.  ``stride`` must be
+    >= every device's channel count (callers use
+    ``max(d.channels for d in devices)``) so namespaces never collide.
+    """
+    from dataclasses import replace
+
+    return replace(stream, footprint={
+        device_index * stride + c: dict(ranks)
+        for c, ranks in stream.footprint.items()})
+
+
+def federate_timelines(timelines: list[Timeline],
+                       merge_ns: float = 0.0,
+                       merge_label: str = "federate:merge") -> Timeline:
+    """Merge independently scheduled per-device timelines into one
+    federated device-fleet timeline -- the serving-layer view of a
+    query that fanned out over several :class:`PuDDevice`s.
+
+    Devices are independent machines: their waves keep their absolute
+    times and their channels are re-keyed (device ``i``'s channel ``c``
+    becomes ``i * stride + c``) so per-channel busy accounting never
+    collides.  Host work is the one shared resource: host spans carrying
+    the same label on several devices are ONE logical host step (a merge
+    that joined every device's readouts -- each device's scheduler saw
+    only its local half) and are unified into a single span starting
+    when the LAST device's inputs were ready (max of the per-device
+    starts) and running for the step's true duration (max of the
+    per-device durations -- each device recorded the same measured
+    wall-clock, so this is NOT the inter-device schedule skew, which is
+    idle waiting, not host work).  ``merge_ns`` appends the serving
+    layer's own
+    cross-device merge as a final host node after everything else --
+    the federation merge node -- extending the makespan by the time the
+    front end spent combining per-device results.
+
+    Limitation -- this is a *reporting* merge, not a re-schedule: each
+    device's waves keep the times its own scheduler assigned, so a
+    wave that locally waited only for its device's copy of a shared
+    merge may predate the unified span when devices are skewed.  When
+    one host truly serves every device (a cross-device barrier must
+    delay every device's dependent waves), schedule the fleet JOINTLY
+    instead: :func:`rekey_stream` every device's streams into one
+    :class:`ChannelScheduler` pass -- the session/executor job path
+    does exactly that.
+
+    Single-element input returns the timeline unchanged (no re-keying),
+    so callers can federate unconditionally.
+    """
+    from dataclasses import replace
+
+    if len(timelines) == 1 and merge_ns <= 0.0:
+        return timelines[0]
+    stride = 1 + max((c for tl in timelines
+                      for c in tl.channel_busy_ns), default=0)
+    waves: list[ScheduledWave] = []
+    channel_busy: dict[int, float] = {}
+    group_busy: dict[str, float] = {}
+    group_span: dict[str, tuple[float, float]] = {}
+    group_elems: dict[str, int] = {}
+    merged_hosts: dict[str, list[float]] = {}
+    for di, tl in enumerate(timelines):
+        for w in tl.waves:
+            waves.append(replace(
+                w, channels=tuple(di * stride + c for c in w.channels)))
+        for c, busy in tl.channel_busy_ns.items():
+            channel_busy[di * stride + c] = busy
+        group_busy.update(tl.group_busy_ns)
+        group_span.update(tl.group_span_ns)
+        group_elems.update(tl.group_elems)
+        for h in tl.host_spans:
+            acc = merged_hosts.setdefault(h.label,
+                                          [h.start_ns, h.duration_ns])
+            acc[0] = max(acc[0], h.start_ns)
+            acc[1] = max(acc[1], h.duration_ns)
+    host_spans = [HostSpan(label, start, start + dur)
+                  for label, (start, dur) in merged_hosts.items()]
+    host_spans.sort(key=lambda h: h.start_ns)
+    makespan = max(
+        max((w.end_ns for w in waves), default=0.0),
+        max((h.end_ns for h in host_spans), default=0.0))
+    if merge_ns > 0.0:
+        host_spans.append(
+            HostSpan(merge_label, makespan, makespan + merge_ns))
+        makespan += merge_ns
+    return Timeline(waves=waves, makespan_ns=makespan,
+                    channel_busy_ns=channel_busy, group_busy_ns=group_busy,
+                    group_span_ns=group_span, group_elems=group_elems,
+                    host_spans=host_spans)
 
 
 class ChannelScheduler:

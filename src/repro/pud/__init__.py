@@ -1,0 +1,34 @@
+"""`repro.pud` -- the public session API over the PuD substrate.
+
+Public API
+----------
+* :class:`PudSession` -- the single entry point.  Declare resources
+  (``create_table``, ``load_forest``), submit jobs (``query``,
+  ``predict``), release them (``drop``).  A session spans one or many
+  :class:`~repro.core.device.PuDDevice`s; tables shard across the
+  fleet and results merge at the serving layer
+  (:mod:`repro.serve.pud_service` is the request/response front end).
+* :class:`Q1` ... :class:`Q5` -- declarative query descriptions
+  (:mod:`repro.pud.queries`).
+* :class:`JobResult`, :class:`TableHandle`, :class:`ForestHandle` --
+  job and resource handles (:mod:`repro.pud.session`).
+* :class:`Planner` -- the placement planner behind every session:
+  bank lifetimes, cold-resource eviction, defragmentation, FIFO
+  admission queue (:mod:`repro.pud.planner`).
+
+Layering: sessions drive the internal executors
+(:mod:`repro.pud.executors`), which drive the app engines
+(:mod:`repro.apps`), which record command streams the core scheduler
+(:mod:`repro.core.scheduler`) places on absolute time per device; the
+session federates those timelines.
+"""
+
+from .planner import Planner, Resource  # noqa: F401
+from .queries import Q1, Q2, Q3, Q4, Q5, Query  # noqa: F401
+from .session import (  # noqa: F401
+    ForestHandle,
+    JobResult,
+    PudSession,
+    ResourceHandle,
+    TableHandle,
+)

@@ -1,0 +1,494 @@
+"""Internal executors behind :class:`repro.pud.PudSession`.
+
+Public API
+----------
+Nothing here is public: sessions construct these executors for each
+registered resource, and the one-release deprecation shims
+(:class:`repro.apps.predicate.ShardedQueryPipeline`,
+:class:`repro.apps.gbdt.GbdtBatchPipeline`) subclass them for external
+callers migrating to the session API.  Users go through
+``PudSession.query`` / ``PudSession.predict``.
+
+Both executors generalize the PR-2 async host/PuD pipelines from one
+device to a *fleet*:
+
+* :class:`QueryBatchExecutor` -- a table record-sharded first across
+  devices, then across ``shards_per_device`` channel-spread bank groups
+  within each device; a query batch runs double-buffered (host
+  readout/merge of query N overlaps PuD execution of query N+1), and
+  every per-wave merge concatenates ALL shards' bitmaps -- including
+  shards on other devices -- so Q4/Q5 aggregates (and Q5's host-barrier
+  phase-2 scalar) are computed over the *global* table, which is what
+  keeps federated results bit-exact against the single-device
+  references.
+* :class:`GbdtBatchExecutor` -- forest replicas placed on every device
+  (``groups_per_device`` channel-spread groups each); each wave of a
+  batch spreads its instances over all groups of all devices.
+
+Fleet scheduling: every job is scheduled JOINTLY across the fleet by
+one :class:`~repro.core.scheduler.ChannelScheduler` -- each device's
+channels are re-keyed into their own namespace (device buses stay
+independent; waves of different devices never serialize), while the
+single serial host lane joins them, so a merge that consumes every
+device's readouts is one node that no device's dependent wave can
+start before (the host-barrier invariant holds across devices, not
+just within one).  Timelines are *job-scoped*: :meth:`schedule` trims
+each engine's stream to the waves/host events recorded since the job
+began, so per-job metrics exclude one-time setup (LUT loads) and
+earlier batches, and scheduling cost does not grow with session
+lifetime.  (:func:`repro.core.scheduler.federate_timelines` remains
+the post-hoc union for timelines of genuinely independent hosts.)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+import numpy as np
+
+# NOTE: anything under repro.apps (including repro.apps.pipeline, which
+# itself only needs repro.core) MUST be imported lazily inside methods:
+# importing it triggers repro.apps.__init__ -> predicate/gbdt -> their
+# deprecation shims' `from repro.pud.executors import ...` while THIS
+# module is still mid-import.
+
+from repro.core.scheduler import (
+    ChannelScheduler,
+    GroupStream,
+    Timeline,
+    federate_timelines,
+    rekey_stream,
+)
+
+
+class _FederatedExecutor:
+    """Shared device-fleet plumbing: joint fleet scheduling with
+    job-scoped streams, and the (device, bank-group) placement list the
+    planner frees."""
+
+    def __init__(self, devices) -> None:
+        devices = list(devices) if isinstance(devices, (list, tuple)) \
+            else [devices]
+        if not devices:
+            raise ValueError("need at least one device")
+        self.devices = devices
+        #: [(device, BankedSubarray)] of every group this executor placed;
+        #: the placement planner frees exactly these on evict/release.
+        self.placements: list[tuple[object, object]] = []
+        self._marks: list[tuple[int, int]] = []
+
+    def _mark_job_start(self) -> None:
+        """Watermark every engine's trace: the current job's streams
+        are everything recorded after this point.  Batches record no
+        dependencies on earlier batches' segments' *host events* (each
+        run re-seeds its chains), so the trimmed streams are
+        dependency-complete."""
+        self._marks = [
+            (len(e.sub.trace.entries), len(e.sub.trace.host_events))
+            for e in self.engines]
+
+    def _job_streams(self) -> list[GroupStream]:
+        """One :class:`GroupStream` per engine, trimmed to the current
+        job's waves/host events and re-keyed into its device's channel
+        namespace (device ``i``'s channel ``c`` -> ``i * stride + c``).
+        Before any job ran, streams are untrimmed (the full recorded
+        history, LUT loads included)."""
+        marks = self._marks or [(0, 0)] * len(self.engines)
+        stride = max(d.channels for d in self.devices)
+        per_dev = len(self.engines) // len(self.devices)
+        out = []
+        for i, (eng, (dev, sub), (e0, h0)) in enumerate(
+                zip(self.engines, self.placements, marks)):
+            tr = sub.trace
+            group = next(g for g in dev.groups if g.sub is sub)
+            kept = {h.hid for h in tr.host_events[h0:]}
+            stream = GroupStream(
+                label=eng.label,
+                footprint=dev.footprint(group),
+                cols_per_bank=sub.num_cols,
+                ops=tuple(e.op for e in tr.entries[e0:]),
+                segs=tuple(e.seg for e in tr.entries[e0:]),
+                # keep the full segment table (trimmed waves reference
+                # their sids), but drop barriers on pre-job host events
+                # -- that work is already done by the time the job runs
+                segments=tuple(
+                    replace(s, after_host=tuple(
+                        h for h in s.after_host if h in kept))
+                    for s in tr.segments),
+                host_events=tuple(
+                    replace(h, after_host=tuple(
+                        x for x in h.after_host if x in kept))
+                    for h in tr.host_events[h0:]),
+                active_elems=group.active_elems)
+            out.append(rekey_stream(stream, i // per_dev, stride))
+        return out
+
+    def schedule(self, sys_cfg, merge_ns: float = 0.0) -> Timeline:
+        """Jointly schedule the current job's streams across the whole
+        fleet (serving-layer merge node appended when ``merge_ns`` >
+        0)."""
+        timeline = ChannelScheduler(sys_cfg).schedule(self._job_streams())
+        if merge_ns > 0.0:
+            timeline = federate_timelines([timeline], merge_ns=merge_ns)
+        return timeline
+
+    def last_stats(self, sys_cfg, timeline=None):
+        """Project the last batch's waves + measured host merges into
+        pipeline totals.  ``timeline`` reuses an existing (fleet)
+        schedule; by default the job is (re)scheduled."""
+        from repro.apps.pipeline import stats_from_timeline
+
+        if timeline is None:
+            timeline = self.schedule(sys_cfg)
+        return stats_from_timeline(
+            timeline, [e.label for e in self.engines],
+            self._last_tags, self._last_host.samples_ns)
+
+
+class QueryBatchExecutor(_FederatedExecutor):
+    """Q1-Q5 over a table record-sharded across a device fleet, with the
+    async host/PuD query pipeline.
+
+    The table is split record-wise into ``len(devices) *
+    shards_per_device`` sub-tables; shard ``s`` lives on device
+    ``s // shards_per_device`` in its own
+    :class:`~repro.apps.predicate.PudQueryEngine` bank group, placed
+    round-robin over that device's channels.  :meth:`run` executes a
+    batch of queries double-buffered: query N+1's WHERE streams are
+    issued on every shard before query N's parked bitmaps are read back
+    and merged host-side, so the host work overlaps PuD execution and
+    shard readouts overlap other channels' compute in each device's bus
+    scheduler.  Each wave's merge is recorded as a host event shared by
+    every shard's trace (one host-lane node joining all readouts --
+    across devices too, once federated).  Q5's second phase takes its
+    scalar from the first phase's merge over the GLOBAL bitmap (a host
+    barrier): the dependent wave is created during that merge AND
+    declares it via ``after_host``, so the scheduled timeline -- not
+    just the record order -- contains the pipeline bubble.
+
+    Queries are tuples: ``("q1", fi, x0, x1)``, ``("q2"|"q3", fi, x0,
+    x1, fj, y0, y1)``, ``("q4", fk, fi, x0, x1, fj, y0, y1)``,
+    ``("q5", fl, fk, fi, x0, x1, fj, y0, y1)`` -- results match the
+    ``reference_*`` functions element-for-element (sessions build them
+    from :mod:`repro.pud.queries` descriptions).
+    """
+
+    _uid = 0
+
+    def __init__(self, table, arch, devices, shards_per_device: int = 2,
+                 method: str = "clutch", num_chunks: int | None = None,
+                 cols_per_bank: int = 65536, channels="auto") -> None:
+        from repro.apps.predicate import PudQueryEngine, Table
+
+        super().__init__(devices)
+        if shards_per_device < 1:
+            raise ValueError("need at least one shard per device")
+        QueryBatchExecutor._uid += 1
+        self._tag = f"query.p{QueryBatchExecutor._uid}"
+        self.table = table
+        num_shards = len(self.devices) * shards_per_device
+        n = table.num_records
+        per = math.ceil(n / num_shards)
+        self.bounds = [(s * per, min((s + 1) * per, n))
+                       for s in range(num_shards)]
+        self.engines = []
+        for s, (lo, hi) in enumerate(self.bounds):
+            dev = self.devices[s // shards_per_device]
+            # "auto" spreads shards round-robin over the device's
+            # channels (disjoint buses overlap in the scheduler); any
+            # other value is a device placement policy passed through.
+            ch = (s % shards_per_device) % dev.channels \
+                if channels == "auto" else channels
+            eng = PudQueryEngine(
+                Table(table.n_bits, [f[lo:hi] for f in table.features]),
+                arch, method, num_chunks=num_chunks, device=dev,
+                channels=ch,
+                label=f"{self._tag}.s{s}", cols_per_bank=cols_per_bank)
+            self.engines.append(eng)
+            self.placements.append((dev, eng.sub))
+        self._batch = 0
+        self._last_tags: list[list[str]] = []
+        from repro.apps.pipeline import HostTimer
+        self._last_host = HostTimer()
+
+    # ------------------------------------------------------------------ #
+    def run(self, queries: list[tuple]) -> list:
+        """Run a batch of queries through the async pipeline; returns
+        one result per query (bitmap for q1/q2, int for q3/q5, float
+        for q4), identical to the serial reference path."""
+        from collections import deque
+
+        from repro.apps.pipeline import HostTimer
+
+        self._batch += 1
+        base = f"{self._tag}.b{self._batch}"
+        self._last_tags = []
+        self._last_host = HostTimer()
+        self._mark_job_start()
+        results: list = [None] * len(queries)
+        work_ref: list = []  # lets Q5's merge enqueue its phase-2 wave
+        work = deque(self._make_wave(qi, q, results, work_ref)
+                     for qi, q in enumerate(queries))
+        work_ref.append(work)
+
+        engines = self.engines
+        prev_c: list[int | None] = [None] * len(engines)
+        prev_h: list[int | None] = [None] * len(engines)
+        last_r_by_buf: list[dict[int, int]] = [dict() for _ in engines]
+        pending = None
+        w = 0
+
+        def submit(wave) -> tuple:
+            tag = f"{base}.w{w}"
+            buf = w % 2
+            c_segs = []
+            for s, eng in enumerate(engines):
+                after = None
+                if prev_c[s] is not None:
+                    after = (prev_c[s],)
+                    if buf in last_r_by_buf[s]:
+                        after += (last_r_by_buf[s][buf],)
+                # host barrier: a Q5 phase-2 wave may not start before
+                # the merge that produced its scalar bounds
+                after_host = (wave["hids"][s],) if wave.get("hids") else ()
+                eng.submit(wave["kind"], wave["params"], buf,
+                           segment=f"{tag}:c", after=after,
+                           after_host=after_host)
+                prev_c[s] = eng.sub.trace.current_segment
+                c_segs.append(prev_c[s])
+            self._last_tags.append([f"{tag}:c", f"{tag}:r", f"{tag}:h"])
+            return (wave, w, buf, c_segs)
+
+        def collect(item) -> None:
+            wave, wi, buf, c_segs = item
+            tag = f"{base}.w{wi}"
+            words = []
+            hids = []
+            for s, eng in enumerate(engines):
+                # the readout depends only on the compute segment that
+                # parked this buffer, not on later waves
+                last_r_by_buf[s][buf] = eng.sub.trace.begin_segment(
+                    f"{tag}:r", after=(c_segs[s],))
+                words.append(eng.read_parked(buf))
+                # one shared label across shards (and devices) == one
+                # host-lane node joining every shard's readout; merges
+                # chain serially
+                hids.append(eng.sub.trace.add_host_event(
+                    f"{tag}:h", after=(last_r_by_buf[s][buf],),
+                    after_host=() if prev_h[s] is None else (prev_h[s],),
+                    bytes_in=eng.sub.num_banks * eng.sub.num_cols / 8))
+                prev_h[s] = hids[s]
+
+            def merge() -> None:
+                bitmap = np.concatenate(
+                    [eng.merge_words(ws)
+                     for eng, ws in zip(engines, words)])
+                wave["merge"](bitmap)
+            self._last_host.measure(merge)
+            merge_ns = self._last_host.samples_ns[-1]
+            for s, eng in enumerate(engines):
+                eng.sub.trace.set_host_duration(hids[s], merge_ns)
+            # a dependent wave enqueued during this merge (Q5 phase 2)
+            # is barred on this wave's merge event
+            for queued in work_ref[0]:
+                if queued.get("barrier") and "hids" not in queued:
+                    queued["hids"] = list(hids)
+
+        while work or pending is not None:
+            if work:
+                item = submit(work.popleft())
+                w += 1
+                if pending is not None:
+                    collect(pending)
+                pending = item
+            else:
+                collect(pending)
+                pending = None
+        return results
+
+    # ------------------------------------------------------------------ #
+    def _make_wave(self, qi: int, q: tuple, results: list,
+                   work_ref: list) -> dict:
+        name, *p = q
+        mx = (1 << self.table.n_bits) - 1
+
+        if name == "q1":
+            return {"kind": "range", "params": tuple(p),
+                    "merge": lambda bm: results.__setitem__(qi, bm)}
+        if name == "q2":
+            return {"kind": "and2", "params": tuple(p),
+                    "merge": lambda bm: results.__setitem__(qi, bm)}
+        if name == "q3":
+            return {"kind": "or2", "params": tuple(p),
+                    "merge": lambda bm: results.__setitem__(
+                        qi, int(bm.sum()))}
+        if name == "q4":
+            fk, *rest = p
+
+            def merge_q4(bm):
+                vals = self.table.features[fk][bm]
+                results[qi] = float(vals.mean()) if vals.size else 0.0
+            return {"kind": "and2", "params": tuple(rest),
+                    "merge": merge_q4}
+        if name == "q5":
+            fl, fk, *rest = p
+
+            def merge_phase1(bm):
+                vals = self.table.features[fk][bm]
+                avg = int(vals.mean()) if vals.size else 0
+                hi = min(2 * avg, mx)
+                if avg >= hi:
+                    results[qi] = 0
+                    return
+                # host barrier: the dependent wave exists only now, and
+                # its segments will declare this merge via after_host
+                work_ref[0].appendleft({
+                    "kind": "range", "params": (fl, avg, hi),
+                    "barrier": True,
+                    "merge": lambda bm2: results.__setitem__(
+                        qi, int(bm2.sum())),
+                })
+            return {"kind": "or2", "params": tuple(rest),
+                    "merge": merge_phase1}
+        raise ValueError(f"unknown query {name!r}")
+
+
+class GbdtBatchExecutor(_FederatedExecutor):
+    """Async host/PuD GBDT inference across a device fleet.
+
+    Every device gets ``groups_per_device``
+    :class:`~repro.apps.gbdt.GbdtPudEngine` forest replicas, placed
+    round-robin over its channels.  A batch is split into waves of
+    ``sum(group wave widths)`` instances spread over all groups of all
+    devices; for each wave the executor issues every group's compute
+    stream, *then* reads back and merges the previous wave's
+    double-buffered result rows -- host readout/merge of wave N
+    overlaps PuD execution of wave N+1, and the recorded segments
+    declare exactly that dependency structure.
+
+    :meth:`infer` returns predictions; :meth:`last_stats` replays the
+    federated scheduled timeline into a ``PipelineStats`` for the batch
+    that just ran.
+    """
+
+    _uid = 0
+
+    def __init__(self, forest, arch, devices, groups_per_device: int = 2,
+                 banks_per_group: int = 4,
+                 num_chunks: int | None = None, channels="auto") -> None:
+        from repro.apps.gbdt import GbdtPudEngine
+        from repro.apps.pipeline import HostTimer
+
+        super().__init__(devices)
+        if groups_per_device < 1:
+            raise ValueError("need at least one group per device")
+        GbdtBatchExecutor._uid += 1
+        self._tag = f"gbdt.p{GbdtBatchExecutor._uid}"
+        self.forest = forest
+        self.engines = []
+        for gi in range(len(self.devices) * groups_per_device):
+            dev = self.devices[gi // groups_per_device]
+            ch = (gi % groups_per_device) % dev.channels \
+                if channels == "auto" else channels
+            eng = GbdtPudEngine(forest, arch, num_chunks=num_chunks,
+                                num_banks=banks_per_group, device=dev,
+                                channels=ch,
+                                label=f"{self._tag}.g{gi}")
+            self.engines.append(eng)
+            self.placements.append((dev, eng.sub))
+        self.wave_width = sum(e.wave_width for e in self.engines)
+        self._batch = 0
+        self._last_tags: list[list[str]] = []
+        self._last_host = HostTimer()
+
+    def infer(self, X: np.ndarray) -> np.ndarray:
+        """Pipelined batch inference; functionally identical to the
+        serial path (tested), differing only in recorded stream order
+        and the resulting overlap accounting."""
+        from repro.apps.pipeline import HostTimer
+
+        X = np.asarray(X)
+        self._batch += 1
+        base = f"{self._tag}.b{self._batch}"
+        self._last_tags = []
+        self._last_host = HostTimer()
+        # mark before the empty-batch return: an empty job must report
+        # an empty job-scoped timeline, not the previous job's
+        self._mark_job_start()
+        if X.shape[0] == 0:
+            return np.empty((0,), np.float32)
+        engines = self.engines
+        # per-engine (compute, readout, merge-event) history
+        prev_c = [None] * len(engines)
+        prev_r = [None] * len(engines)
+        prev_h = [None] * len(engines)
+        pending: tuple[int, list[tuple[int, int]]] | None = None
+        preds_out: list[np.ndarray] = []
+
+        def collect(w: int,
+                    widths: list[tuple[int, int, int | None]]) -> None:
+            words = []
+            hids = []
+            for g, (wd, buf, c_seg) in enumerate(widths):
+                if wd == 0:
+                    words.append(None)
+                    hids.append(None)
+                    continue
+                tr = engines[g].sub.trace
+                # the readout depends only on the compute segment that
+                # filled this buffer, not on later waves
+                prev_r[g] = tr.begin_segment(
+                    f"{base}.w{w}:r", after=(c_seg,))
+                words.append(engines[g]._read_wave(buf))
+                # the leaf gather/merge is host work: one shared label
+                # across groups == one host-lane node joining their
+                # readouts, chained after the previous wave's merge
+                hids.append(tr.add_host_event(
+                    f"{base}.w{w}:h", after=(prev_r[g],),
+                    after_host=() if prev_h[g] is None else (prev_h[g],),
+                    bytes_in=engines[g].sub.num_banks *
+                    engines[g].sub.num_cols / 8))
+                prev_h[g] = hids[g]
+
+            def merge() -> None:
+                for g, (wd, _, _) in enumerate(widths):
+                    if wd:
+                        preds_out.append(
+                            engines[g]._merge_wave(words[g], wd)[1])
+            self._last_host.measure(merge)
+            merge_ns = self._last_host.samples_ns[-1]
+            for g, hid in enumerate(hids):
+                if hid is not None:
+                    engines[g].sub.trace.set_host_duration(hid, merge_ns)
+
+        n_waves = math.ceil(X.shape[0] / self.wave_width)
+        off = 0
+        for w in range(n_waves):
+            Xw = X[off:off + self.wave_width]
+            off += self.wave_width
+            widths: list[tuple[int, int, int | None]] = []
+            lo = 0
+            buf = w % 2
+            for g, eng in enumerate(engines):
+                Xg = Xw[lo:lo + eng.wave_width]
+                lo += eng.wave_width
+                if Xg.shape[0] == 0:
+                    widths.append((0, buf, None))
+                    continue
+                after = None
+                if prev_c[g] is not None:
+                    after = (prev_c[g],) + (
+                        (prev_r[g],) if prev_r[g] is not None else ())
+                prev_c[g] = eng.sub.trace.begin_segment(
+                    f"{base}.w{w}:c", after=after)
+                eng._compute_wave(Xg, buf)
+                widths.append((Xg.shape[0], buf, prev_c[g]))
+            self._last_tags.append([f"{base}.w{w}:c", f"{base}.w{w}:r",
+                                    f"{base}.w{w}:h"])
+            if pending is not None:
+                collect(*pending)
+            pending = (w, widths)
+        if pending is not None:
+            collect(*pending)
+        return np.concatenate(preds_out).astype(np.float32)

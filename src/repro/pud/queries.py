@@ -1,0 +1,142 @@
+"""Declarative query descriptions for the `repro.pud` session API.
+
+Public API
+----------
+``Q1``-``Q5`` are frozen dataclasses describing the paper's §6.2
+benchmark queries over an 8-feature table; users hand them to
+:meth:`repro.pud.PudSession.query` instead of building engine-level
+tuples:
+
+    session.query(table, Q1(fi=0, x0=10, x1=90))
+    session.query(table, [Q2(...), Q3(...), Q5(...)])
+
+Each query knows its wire form (:meth:`to_tuple`, the executor's batch
+format), its ground truth (:meth:`reference`, the NumPy reference over
+a host-side :class:`~repro.apps.predicate.Table`), and how to compare
+a session result against it (:meth:`check` -- exact for bitmaps and
+counts, 1e-9-tolerant for Q4's float average), so callers can validate
+any session result without reaching into the app layer.
+
+Semantics (bounds are exclusive, matching the paper):
+
+* ``Q1``  -- WHERE x0 < f_i < x1                       -> bool bitmap
+* ``Q2``  -- WHERE range(f_i) AND range(f_j)           -> bool bitmap
+* ``Q3``  -- COUNT(WHERE range(f_i) OR range(f_j))     -> int
+* ``Q4``  -- AVERAGE(f_k) over Q2's WHERE              -> float
+* ``Q5``  -- WITH avg = AVERAGE(f_k) over Q3's WHERE:
+             COUNT(WHERE avg < f_l < 2*avg)            -> int
+  (the phase-2 scan's bounds exist only after a host round trip; the
+  scheduled timeline includes that barrier)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class _QueryBase:
+    def check(self, table, got) -> bool:
+        """Whether ``got`` (a session/job result) matches this query's
+        NumPy ground truth over ``table``: element-exact for bitmaps
+        (Q1/Q2) and counts (Q3/Q5), 1e-9-tolerant for the float
+        average (Q4)."""
+        want = self.reference(table)
+        if hasattr(want, "all"):
+            return bool((got == want).all())
+        if isinstance(want, float):
+            return abs(got - want) < 1e-9
+        return got == want
+
+
+@dataclass(frozen=True)
+class Q1(_QueryBase):
+    fi: int
+    x0: int
+    x1: int
+
+    def to_tuple(self) -> tuple:
+        return ("q1", self.fi, self.x0, self.x1)
+
+    def reference(self, table):
+        from repro.apps.predicate import reference_q1
+        return reference_q1(table, self.fi, self.x0, self.x1)
+
+
+@dataclass(frozen=True)
+class Q2(_QueryBase):
+    fi: int
+    x0: int
+    x1: int
+    fj: int
+    y0: int
+    y1: int
+
+    def to_tuple(self) -> tuple:
+        return ("q2", self.fi, self.x0, self.x1, self.fj, self.y0, self.y1)
+
+    def reference(self, table):
+        from repro.apps.predicate import reference_q2
+        return reference_q2(table, self.fi, self.x0, self.x1,
+                            self.fj, self.y0, self.y1)
+
+
+@dataclass(frozen=True)
+class Q3(_QueryBase):
+    fi: int
+    x0: int
+    x1: int
+    fj: int
+    y0: int
+    y1: int
+
+    def to_tuple(self) -> tuple:
+        return ("q3", self.fi, self.x0, self.x1, self.fj, self.y0, self.y1)
+
+    def reference(self, table):
+        from repro.apps.predicate import reference_q3
+        return reference_q3(table, self.fi, self.x0, self.x1,
+                            self.fj, self.y0, self.y1)
+
+
+@dataclass(frozen=True)
+class Q4(_QueryBase):
+    fk: int
+    fi: int
+    x0: int
+    x1: int
+    fj: int
+    y0: int
+    y1: int
+
+    def to_tuple(self) -> tuple:
+        return ("q4", self.fk, self.fi, self.x0, self.x1,
+                self.fj, self.y0, self.y1)
+
+    def reference(self, table):
+        from repro.apps.predicate import reference_q4
+        return reference_q4(table, self.fk, self.fi, self.x0, self.x1,
+                            self.fj, self.y0, self.y1)
+
+
+@dataclass(frozen=True)
+class Q5(_QueryBase):
+    fl: int
+    fk: int
+    fi: int
+    x0: int
+    x1: int
+    fj: int
+    y0: int
+    y1: int
+
+    def to_tuple(self) -> tuple:
+        return ("q5", self.fl, self.fk, self.fi, self.x0, self.x1,
+                self.fj, self.y0, self.y1)
+
+    def reference(self, table):
+        from repro.apps.predicate import reference_q5
+        return reference_q5(table, self.fl, self.fk, self.fi, self.x0,
+                            self.x1, self.fj, self.y0, self.y1)
+
+
+Query = Q1 | Q2 | Q3 | Q4 | Q5

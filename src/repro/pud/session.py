@@ -1,0 +1,292 @@
+"""`PudSession`: the declarative front door to the PuD substrate.
+
+Public API
+----------
+Everything an application needs is on this class (re-exported as
+``repro.pud.PudSession`` / ``repro.PudSession``):
+
+    from repro import pud
+
+    session = pud.PudSession(num_devices=2)          # a 2-device fleet
+    table = session.create_table(t, name="events")   # declarative resource
+    forest = session.load_forest(f, name="ranker")
+
+    job = session.query(table, pud.Q2(fi=0, x0=1, x1=9, fj=1, y0=2, y1=8))
+    job.result                                       # == NumPy reference
+    job.stats.overlapped_ns                          # barrier-aware totals
+
+    preds = session.predict(forest, X).result
+    session.drop(table)                              # banks coalesce back
+
+Resources are *declared*, not hand-placed: ``create_table`` shards
+records across the fleet's devices (then across channel-spread bank
+groups inside each device) and ``load_forest`` replicates the forest
+per device; the session's :class:`~repro.pud.planner.Planner` owns all
+bank lifetimes -- eviction of cold resources, defragmentation, and a
+FIFO admission queue when a placement does not fit (``handle.status``
+is ``"queued"`` until capacity frees; no exception).  Queries and
+inference run as submitted jobs through the async host/PuD pipelines
+and return a :class:`JobResult` carrying the merged result, the
+barrier-aware :class:`~repro.apps.pipeline.PipelineStats`, and the
+federated :class:`~repro.core.scheduler.Timeline`.
+
+This replaces direct construction of ``PudQueryEngine`` /
+``ShardedQueryPipeline`` / ``GbdtPudEngine`` / ``GbdtBatchPipeline``,
+which are now internal executors behind the session (the pipeline
+constructors remain one release as deprecation shims).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import PuDArch
+from repro.core.scheduler import Timeline
+
+from .executors import GbdtBatchExecutor, QueryBatchExecutor
+from .planner import Planner
+from .queries import Q1, Q2, Q3, Q4, Q5
+
+
+@dataclass
+class JobResult:
+    """One submitted job's outcome: the merged result, the
+    barrier-aware pipeline stats of the batch that produced it, and the
+    federated device timeline it was read off."""
+
+    result: Any
+    stats: Any                 # repro.apps.pipeline.PipelineStats
+    timeline: Timeline
+
+    @property
+    def makespan_ns(self) -> float:
+        return self.stats.makespan_ns
+
+
+@dataclass
+class ResourceHandle:
+    """Opaque handle to a session resource; ``status`` tracks the
+    planner lifetime: ``ready`` / ``queued`` / ``evicted``, plus
+    ``failed`` (a queued build whose recipe turned out broken when it
+    was finally attempted -- drop and re-create) and ``dropped`` (the
+    resource has been released)."""
+
+    name: str
+    session: "PudSession" = field(repr=False)
+
+    @property
+    def status(self) -> str:
+        r = self.session.planner.resources.get(self.name)
+        return r.state if r is not None else "dropped"
+
+
+@dataclass
+class TableHandle(ResourceHandle):
+    num_records: int = 0
+    n_bits: int = 0
+
+
+@dataclass
+class ForestHandle(ResourceHandle):
+    num_trees: int = 0
+    depth: int = 0
+
+
+class PudSession:
+    """A session over a fleet of PuD devices: declarative resources,
+    planned placement, federated query/inference jobs."""
+
+    def __init__(self, sys_cfg=cost.DESKTOP, devices=None,
+                 num_devices: int = 1, arch: PuDArch = PuDArch.MODIFIED,
+                 num_rows: int = 1024, seed: int = 0) -> None:
+        self.sys_cfg = sys_cfg
+        if devices is not None:
+            self.devices = list(devices)
+            archs = {d.arch for d in self.devices}
+            if len(archs) != 1:
+                raise ValueError(f"devices disagree on arch: {archs}")
+            self.arch = next(iter(archs))
+        else:
+            self.arch = arch
+            self.devices = [
+                PuDDevice.from_system(sys_cfg, arch, num_rows=num_rows)
+                for _ in range(num_devices)
+            ]
+            for i, d in enumerate(self.devices):
+                d._seed = None if seed is None else seed + 1000 * i
+        if not self.devices:
+            raise ValueError("need at least one device")
+        self.planner = Planner(self.devices)
+        self._auto = 0
+
+    # ------------------------------------------------------------------ #
+    # Declarative resources
+    # ------------------------------------------------------------------ #
+    def _auto_name(self, prefix: str) -> str:
+        self._auto += 1
+        return f"{prefix}{self._auto}"
+
+    def create_table(self, data, name: str | None = None,
+                     n_bits: int | None = None,
+                     shards_per_device: int = 2, method: str = "clutch",
+                     num_chunks: int | None = None,
+                     cols_per_bank: int = 65536,
+                     channels="auto",
+                     pinned: bool = False) -> TableHandle:
+        """Register a table resource and (when capacity allows) load it
+        across the fleet.  ``data`` is a
+        :class:`~repro.apps.predicate.Table`, or a ``[records,
+        features]`` integer array with ``n_bits`` giving the feature
+        width.  Records shard across devices, then across
+        ``shards_per_device`` channel-spread bank groups per device.
+        Returns immediately with a handle; ``handle.status`` is
+        ``"queued"`` when the placement is waiting for capacity."""
+        from repro.apps.predicate import Table
+
+        if not isinstance(data, Table):
+            arr = np.asarray(data)
+            if n_bits is None:
+                raise ValueError(
+                    "n_bits is required when data is a raw array")
+            data = Table(n_bits=n_bits,
+                         features=[np.ascontiguousarray(arr[:, f],
+                                                        dtype=np.uint64)
+                                   for f in range(arr.shape[1])])
+        name = name or self._auto_name("table")
+
+        def build():
+            return QueryBatchExecutor(
+                data, self.arch, self.devices,
+                shards_per_device=shards_per_device, method=method,
+                num_chunks=num_chunks, cols_per_bank=cols_per_bank,
+                channels=channels)
+
+        self.planner.admit(name, "table", build, pinned=pinned)
+        return TableHandle(name=name, session=self,
+                           num_records=data.num_records,
+                           n_bits=data.n_bits)
+
+    def load_forest(self, forest, name: str | None = None,
+                    groups_per_device: int = 2, banks_per_group: int = 4,
+                    num_chunks: int | None = None,
+                    channels="auto",
+                    pinned: bool = False) -> ForestHandle:
+        """Register an oblivious forest (thresholds + one-hot masks
+        replicated into ``groups_per_device`` channel-spread groups on
+        every device) and return its handle; placement queues when it
+        does not fit."""
+        name = name or self._auto_name("forest")
+
+        def build():
+            return GbdtBatchExecutor(
+                forest, self.arch, self.devices,
+                groups_per_device=groups_per_device,
+                banks_per_group=banks_per_group, num_chunks=num_chunks,
+                channels=channels)
+
+        self.planner.admit(name, "forest", build, pinned=pinned)
+        return ForestHandle(name=name, session=self,
+                            num_trees=forest.num_trees, depth=forest.depth)
+
+    def drop(self, handle: ResourceHandle) -> None:
+        """Release a resource: its banks coalesce back into each
+        device's free map and the admission queue drains FIFO."""
+        self.planner.release(handle.name)
+
+    def evict(self, handle: ResourceHandle) -> None:
+        """Reclaim a resource's banks now; it reloads on next use."""
+        self.planner.evict(handle.name)
+
+    # ------------------------------------------------------------------ #
+    # Jobs
+    # ------------------------------------------------------------------ #
+    def _executor(self, handle: ResourceHandle, kind: str):
+        r = self.planner.resources.get(handle.name)
+        if r is None:
+            raise KeyError(f"unknown resource {handle.name!r} "
+                           "(dropped, or from another session?)")
+        if r.kind != kind:
+            raise TypeError(
+                f"resource {handle.name!r} is a {r.kind}, not a {kind}")
+        return self.planner.ensure_ready(handle.name)
+
+    def query(self, table: TableHandle,
+              queries: "Q1 | Q2 | Q3 | Q4 | Q5 | Sequence") -> JobResult:
+        """Run one query (or a batch -- batches pipeline back-to-back
+        and overlap host merges with PuD execution) against a table.
+        Returns a :class:`JobResult`; for a single query ``result`` is
+        that query's value, for a batch it is the list of values, in
+        order, bit-exact against the NumPy references."""
+        single = isinstance(queries, (Q1, Q2, Q3, Q4, Q5))
+        batch = [queries] if single else list(queries)
+        ex = self._executor(table, "table")
+        results = ex.run([q.to_tuple() for q in batch])
+        timeline = ex.schedule(self.sys_cfg)
+        stats = ex.last_stats(self.sys_cfg, timeline=timeline)
+        return JobResult(result=results[0] if single else results,
+                         stats=stats, timeline=timeline)
+
+    def predict(self, forest: ForestHandle, X: np.ndarray) -> JobResult:
+        """Batched GBDT inference: instances spread over every device's
+        forest replicas wave by wave; predictions come back in input
+        order with the batch's barrier-aware pipeline stats."""
+        ex = self._executor(forest, "forest")
+        preds = ex.infer(np.asarray(X))
+        timeline = ex.schedule(self.sys_cfg)
+        stats = ex.last_stats(self.sys_cfg, timeline=timeline)
+        return JobResult(result=preds, stats=stats, timeline=timeline)
+
+    # ------------------------------------------------------------------ #
+    # Introspection
+    # ------------------------------------------------------------------ #
+    def executor(self, handle: ResourceHandle):
+        """The resource's live executor (engines, ``wave_width``,
+        ``placements``) -- the supported accessor for benchmarks and
+        tools that need engine-level introspection (op counts, chunk
+        plans, recorded traces).  Transparently reloads an evicted
+        resource, like a job would."""
+        return self.planner.ensure_ready(handle.name)
+
+    def clear_traces(self, handle: ResourceHandle) -> None:
+        """Forget a resource's recorded command streams (e.g. drop LUT
+        loading from a cost-model histogram before measuring a job).
+        Job timelines are already job-scoped; this is for callers
+        reading raw traces (``cost.trace_cost``) or device-level
+        schedules."""
+        for eng in self.executor(handle).engines:
+            eng.sub.trace.clear()
+
+    def schedule(self) -> Timeline:
+        """Jointly scheduled timeline of every device's full recorded
+        streams -- the session-lifetime view (LUT loads and all jobs;
+        each :class:`JobResult` carries its own job-scoped timeline).
+        Device channels are re-keyed into per-device namespaces; the
+        single host lane spans the fleet."""
+        from repro.core.scheduler import ChannelScheduler, rekey_stream
+
+        stride = max(d.channels for d in self.devices)
+        streams = [rekey_stream(st, di, stride)
+                   for di, d in enumerate(self.devices)
+                   for st in d.streams()]
+        return ChannelScheduler(self.sys_cfg).schedule(streams)
+
+    def cost_summary(self) -> dict:
+        """Per-device cost summaries plus the federated makespan."""
+        per_dev = [d.cost_summary(self.sys_cfg) for d in self.devices]
+        fed = self.schedule()
+        return {
+            "devices": per_dev,
+            "time_scheduled_ns": fed.makespan_ns,
+            "time_device_ns": fed.device_span_ns,
+            "energy_nj": sum(s["energy_nj"] for s in per_dev),
+        }
+
+    def planner_stats(self) -> dict:
+        """Placement-planner counters (resource states, queue, defrag,
+        evictions, free-map shape per device)."""
+        return self.planner.stats()

@@ -1,1 +1,11 @@
-"""repro.serve"""
+"""repro.serve: the serving layer.
+
+* :mod:`repro.serve.engine` -- continuous-batching LM serving with the
+  Clutch threshold sampler (JAX).
+* :mod:`repro.serve.pud_service` -- the request/response front end over
+  :class:`repro.pud.PudSession`: batched PuD query/inference requests
+  with per-request results and barrier-aware stats (NumPy only).
+
+Submodules are imported explicitly (``engine`` pulls in JAX; the PuD
+service does not).
+"""

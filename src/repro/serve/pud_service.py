@@ -1,0 +1,172 @@
+"""Request/response front end over a :class:`repro.pud.PudSession`.
+
+Public API
+----------
+This is the serving layer of the session API -- the piece that turns a
+multi-device session into something a request loop can drive:
+
+    from repro.pud import PudSession, Q1
+    from repro.serve.pud_service import PudRequest, PudService
+
+    service = PudService(PudSession(num_devices=2))
+    table = service.session.create_table(t, name="events")
+    service.submit(PudRequest(rid=1, resource="events",
+                              query=Q1(fi=0, x0=10, x1=90)))
+    service.submit(PudRequest(rid=2, resource="events", query=Q3(...)))
+    responses = service.flush()          # [PudResponse, ...] in rid order
+
+Batching: ``flush`` groups pending requests by resource (arrival order
+preserved within a group) and runs each group as ONE session job --
+query requests become one pipelined query batch, predict requests
+concatenate their instances into one inference batch -- so co-resident
+requests share waves exactly the way the async pipeline overlaps them.
+Each :class:`PudResponse` carries its own result plus per-request
+stats: the shared barrier-aware :class:`~repro.apps.pipeline.\
+PipelineStats` of its batch, and a ``latency_ns`` that is the
+request's own wave-completion time when the batch contains no
+host-barrier re-submission (Q5 inserts an extra dependent wave, whose
+re-ordered tags make per-wave attribution ambiguous -- those batches
+report the batch makespan for every member).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.pud.queries import Q1, Q2, Q3, Q4, Q5
+from repro.pud.session import (
+    ForestHandle,
+    PudSession,
+    ResourceHandle,
+    TableHandle,
+)
+
+
+@dataclass
+class PudRequest:
+    """One client request: a query against a table resource, or an
+    instance batch against a forest resource (exactly one of ``query``
+    / ``X`` must be set)."""
+
+    rid: int
+    resource: str | ResourceHandle
+    query: Any | None = None          # a repro.pud.queries description
+    X: np.ndarray | None = None       # [B, F] instances for a forest
+
+    def __post_init__(self) -> None:
+        if (self.query is None) == (self.X is None):
+            raise ValueError(
+                "a PudRequest carries either `query` or `X`, not both")
+        if self.query is not None and not isinstance(
+                self.query, (Q1, Q2, Q3, Q4, Q5)):
+            raise TypeError(f"unknown query type {type(self.query)}")
+
+    @property
+    def resource_name(self) -> str:
+        if isinstance(self.resource, ResourceHandle):
+            return self.resource.name
+        return self.resource
+
+
+@dataclass
+class PudResponse:
+    """One request's outcome: its result, the shared stats of the batch
+    it rode in (``batch_size`` peers), and its latency attribution."""
+
+    rid: int
+    result: Any
+    stats: Any                    # PipelineStats of the whole batch
+    latency_ns: float
+    batch_size: int = 1
+
+
+@dataclass
+class PudService:
+    """Batched serving loop over one session (single-threaded: requests
+    accumulate via :meth:`submit` and execute on :meth:`flush`)."""
+
+    session: PudSession
+    _pending: list[PudRequest] = field(default_factory=list)
+
+    def submit(self, request: PudRequest) -> None:
+        if any(r.rid == request.rid for r in self._pending):
+            raise ValueError(
+                f"duplicate request id {request.rid} already pending")
+        self._pending.append(request)
+
+    def cancel(self, rid: int) -> bool:
+        """Remove a pending request (e.g. one that made :meth:`flush`
+        fail); returns whether it was found."""
+        before = len(self._pending)
+        self._pending = [r for r in self._pending if r.rid != rid]
+        return len(self._pending) < before
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> list[PudResponse]:
+        """Execute every pending request (batched per resource, arrival
+        order preserved) and return responses in submission order.  On
+        failure (unknown resource, capacity-queued resource, ...) the
+        pending queue is left intact so the caller can :meth:`cancel`
+        the offending request and flush again; jobs of groups that had
+        already executed are re-run on the retry."""
+        pending = self._pending
+        groups: dict[tuple[str, str], list[PudRequest]] = {}
+        for req in pending:
+            kind = "query" if req.query is not None else "predict"
+            groups.setdefault((req.resource_name, kind), []).append(req)
+        # resolve every handle before executing anything: a bad request
+        # fails the flush before any batch has run
+        handles = {key: self._handle(*key) for key in groups}
+        by_rid: dict[int, PudResponse] = {}
+        for (name, kind), reqs in groups.items():
+            handle = handles[(name, kind)]
+            if kind == "query":
+                job = self.session.query(handle,
+                                         [r.query for r in reqs])
+                results = job.result
+                # Per-request latency: wave w's completion when waves
+                # map 1:1 onto requests; a Q5 re-submission breaks the
+                # mapping, so the whole batch reports its makespan.
+                done = job.stats.wave_done_ns
+                exact = len(done) == len(reqs)
+                for i, r in enumerate(reqs):
+                    by_rid[r.rid] = PudResponse(
+                        rid=r.rid, result=results[i], stats=job.stats,
+                        latency_ns=done[i] if exact
+                        else job.stats.makespan_ns,
+                        batch_size=len(reqs))
+            else:
+                sizes = [np.asarray(r.X).shape[0] for r in reqs]
+                X = np.concatenate([np.asarray(r.X) for r in reqs])
+                job = self.session.predict(handle, X)
+                off = 0
+                for r, sz in zip(reqs, sizes):
+                    by_rid[r.rid] = PudResponse(
+                        rid=r.rid, result=job.result[off:off + sz],
+                        stats=job.stats,
+                        latency_ns=job.stats.makespan_ns,
+                        batch_size=len(reqs))
+                    off += sz
+        self._pending = []
+        return [by_rid[r.rid] for r in pending]
+
+    # ------------------------------------------------------------------ #
+    def _handle(self, name: str, kind: str) -> ResourceHandle:
+        res = self.session.planner.resources.get(name)
+        if res is None:
+            raise KeyError(f"unknown resource {name!r}")
+        if kind == "predict":
+            if res.kind != "forest":
+                raise TypeError(f"{name!r} is a {res.kind}; predict "
+                                "requests need a forest")
+            return ForestHandle(name=name, session=self.session)
+        if res.kind != "table":
+            raise TypeError(f"{name!r} is a {res.kind}; query requests "
+                            "need a table")
+        return TableHandle(name=name, session=self.session)

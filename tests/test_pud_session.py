@@ -1,0 +1,598 @@
+"""Session API tests: free-map coalescing, planner edge cases
+(admission-queue FIFO fairness, defrag relocation, eviction/reload),
+multi-device federation, deprecation shims, and the serving front end.
+
+Acceptance (ISSUE 4): all examples/benchmarks run through
+``PudSession``; a 2-device federated Q1-Q5 run matches the NumPy
+references bit-exactly; an alloc request exceeding free capacity is
+*queued* and later admitted after ``free_banks`` -- demonstrated here,
+not raised as an error.
+"""
+
+import numpy as np
+import pytest
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import PuDArch, PuDOp
+from repro.core.scheduler import federate_timelines
+from repro.pud import Q1, Q2, Q3, Q4, Q5, PudSession
+from repro.pud.executors import GbdtBatchExecutor, QueryBatchExecutor
+from repro.serve.pud_service import PudRequest, PudService
+
+MX = 255
+QA = dict(fi=0, x0=MX // 8, x1=MX // 2, fj=1, y0=MX // 4, y1=3 * MX // 4)
+
+
+def small_device(banks=8, channels=1):
+    """One-channel-ish device where bank counts are easy to reason
+    about: cols_per_bank=4096 => one bank per 4096 records."""
+    return PuDDevice(PuDArch.MODIFIED, channels=channels,
+                     ranks_per_channel=1, banks_per_rank=banks // channels,
+                     num_rows=1024, cols_per_bank=4096)
+
+
+def small_session(banks=8, channels=1):
+    return PudSession(sys_cfg=cost.DESKTOP,
+                      devices=[small_device(banks, channels)])
+
+
+def records(n_banks):
+    return 4096 * n_banks
+
+
+def table(n_banks, seed=0):
+    return P.Table.generate(records(n_banks), 8, seed=seed)
+
+
+# --------------------------------------------------------------------- #
+# Free-map coalescing (satellite: unit-test the coalescing)
+# --------------------------------------------------------------------- #
+
+def test_free_banks_coalesces_adjacent_ranges():
+    dev = small_device(banks=8)
+    a = dev.alloc_banks(2, label="a")
+    b = dev.alloc_banks(2, label="b")
+    c = dev.alloc_banks(2, label="c")
+    assert dev.free_ranges == ((6, 2),)
+    dev.free_banks(a)
+    assert dev.free_ranges == ((0, 2), (6, 2))
+    dev.free_banks(c)          # adjacent to the tail range -> one run
+    assert dev.free_ranges == ((0, 2), (4, 4))
+    dev.free_banks(b)          # bridges both neighbors -> fully merged
+    assert dev.free_ranges == ((0, 8),)
+
+
+def test_alloc_free_realloc_larger_group_succeeds():
+    """alloc -> free -> realloc of a LARGER contiguous group: the freed
+    ranges coalesce, so the bigger run is found despite the free map
+    having been split."""
+    dev = small_device(banks=8)
+    a = dev.alloc_banks(3, label="a")
+    b = dev.alloc_banks(3, label="b")
+    dev.free_banks(a)
+    dev.free_banks(b)
+    sub = dev.alloc_banks(6, label="bigger")   # > either freed group
+    assert dev.groups[-1].banks == tuple(range(6))
+    assert sub.num_banks == 6
+
+
+def test_spread_group_frees_as_separate_runs():
+    dev = small_device(banks=8, channels=2)
+    s = dev.alloc_banks(4, label="s", channels="spread")
+    assert {dev.address(b).channel for b in dev.groups[-1].banks} == {0, 1}
+    dev.free_banks(s)
+    assert dev.free_ranges == ((0, 8),)
+
+
+def test_failed_multichannel_placement_leaks_nothing():
+    dev = small_device(banks=8, channels=2)
+    dev.alloc_banks(3, label="hog", channels=1)
+    with pytest.raises(MemoryError):
+        dev.alloc_banks(4, num_cols=4096, label="x", channels="spread")
+    assert dev.banks_free == 5     # the channel-0 half was not carved
+
+
+# --------------------------------------------------------------------- #
+# Defragmentation
+# --------------------------------------------------------------------- #
+
+def test_defragment_compacts_and_records_relocation_cost():
+    dev = small_device(banks=8)
+    a = dev.alloc_banks(2, label="a")
+    b = dev.alloc_banks(2, label="b")
+    c = dev.alloc_banks(2, label="c")
+    d = dev.alloc_banks(2, label="d")
+    dev.free_banks(a)
+    dev.free_banks(c)
+    assert dev.largest_free_run == 2 and dev.banks_free == 4
+    moved = dev.defragment()
+    assert moved == 4          # b slid to 0..1, d slid to 2..3
+    assert dev.largest_free_run == dev.banks_free == 4
+    assert dev.groups[0].banks == (0, 1)
+    assert dev.groups[1].banks == (2, 3)
+    assert d is not None
+    reads = sum(1 for e in b.trace.entries if e.op is PuDOp.READ)
+    writes = sum(1 for e in b.trace.entries if e.op is PuDOp.WRITE)
+    assert reads >= 1 and writes >= 1       # host round trip recorded
+    assert any(s.label.startswith("defrag:") for s in b.trace.segments)
+
+
+def test_defrag_relocation_preserves_query_state_bit_exactly():
+    """Planner defrag path: a fragmented free map blocks a contiguous
+    placement; the planner relocates resident groups to close the hole
+    and the relocated table keeps answering queries bit-exactly."""
+    s = small_session(banks=8)
+    ta = s.create_table(table(2, seed=1), name="a", shards_per_device=1)
+    tb = s.create_table(table(2, seed=2), name="b", shards_per_device=1)
+    s.create_table(table(2, seed=3), name="c", shards_per_device=1)
+    q = Q2(**QA)
+    before = s.query(tb, q).result
+    s.drop(ta)                  # free map: [0,2) + [6,8) -- fragmented
+    td = s.create_table(table(3, seed=4), name="d", shards_per_device=1)
+    assert td.status == "ready"             # needed defrag to fit
+    assert s.planner.defrag_banks_moved > 0
+    assert s.planner_stats()["resources"] == {
+        "b": "ready", "c": "ready", "d": "ready"}
+    after = s.query(tb, q).result
+    assert (before == after).all()
+    assert (after == q.reference(
+        s.planner.resources["b"].executor.table)).all()
+
+
+# --------------------------------------------------------------------- #
+# Admission queue (acceptance: queued, then admitted after free)
+# --------------------------------------------------------------------- #
+
+def test_oversubscribed_alloc_is_queued_then_admitted_after_free():
+    s = small_session(banks=8)
+    ta = s.create_table(table(3, seed=1), name="a",
+                        shards_per_device=1, pinned=True)
+    s.create_table(table(3, seed=2), name="b",
+                   shards_per_device=1, pinned=True)
+    big = s.create_table(table(4, seed=3), name="big",
+                         shards_per_device=1)
+    assert big.status == "queued"           # a queue state, NOT an error
+    with pytest.raises(RuntimeError, match="queued"):
+        s.query(big, Q1(**{k: QA[k] for k in ("fi", "x0", "x1")}))
+    s.drop(ta)                              # free_banks -> queue drains
+    assert big.status == "ready"
+    q = Q3(**QA)
+    got = s.query(big, q).result
+    assert got == q.reference(s.planner.resources["big"].executor.table)
+
+
+def test_admission_queue_is_fifo_no_queue_jumping():
+    s = small_session(banks=8)
+    s.create_table(table(5, seed=1), name="a", shards_per_device=1,
+                   pinned=True)
+    tb = s.create_table(table(2, seed=2), name="b", shards_per_device=1,
+                        pinned=True)
+    big = s.create_table(table(2, seed=3), name="big",
+                         shards_per_device=1)     # 1 free -> queued
+    small = s.create_table(table(1, seed=4), name="small",
+                           shards_per_device=1)
+    # `small` WOULD fit in the one free bank, but the queue is strict
+    # FIFO: it must wait behind `big` (no starvation of large requests).
+    assert big.status == "queued" and small.status == "queued"
+    assert s.planner.queued_names() == ["big", "small"]
+    s.drop(tb)                               # 3 free -> drain in order
+    assert big.status == "ready" and small.status == "ready"
+    assert s.planner.queued_names() == []
+
+
+def test_impossible_request_does_not_strip_resident_resources():
+    """A request larger than the whole device parks in the queue
+    WITHOUT permanently evicting residents: the failed escalation
+    rebuilds its victims, and later releases don't re-churn the fleet
+    for a request that still cannot fit."""
+    s = small_session(banks=8)
+    ta = s.create_table(table(2, seed=1), name="a", shards_per_device=1)
+    tc = s.create_table(table(2, seed=2), name="c", shards_per_device=1)
+    big = s.create_table(table(16, seed=3), name="big",
+                         shards_per_device=1)     # 16 banks > 8 total
+    assert big.status == "queued"
+    assert ta.status == "ready" and tc.status == "ready"   # rolled back
+    q = Q1(fi=0, x0=10, x1=200)
+    ref = s.query(ta, q).result
+    s.drop(tc)          # drain retries are gated on capacity growth:
+    evictions_before = s.planner.evictions
+    assert big.status == "queued"
+    assert ta.status == "ready"
+    assert s.planner.evictions == evictions_before
+    assert (s.query(ta, q).result == ref).all()
+
+
+def test_eviction_retries_defrag_for_fragmented_free_space():
+    """Evicting a victim may leave non-adjacent free runs; the planner
+    must re-defragment after the eviction so a placement that fits the
+    *total* freed capacity is admitted, not queued."""
+    s = small_session(banks=8)
+    ta = s.create_table(table(3, seed=1), name="a", shards_per_device=1)
+    s.create_table(table(2, seed=2), name="p", shards_per_device=1,
+                   pinned=True)
+    # free: [5,8) = 3 banks; R needs 5 contiguous. Evicting `a` frees
+    # [0,3), still fragmented around pinned `p` -- only defrag-after-
+    # evict (slide p down) yields a 6-bank run.
+    tr = s.create_table(table(5, seed=3), name="r", shards_per_device=1)
+    assert tr.status == "ready"
+    assert ta.status == "evicted"
+    assert s.planner.defrag_banks_moved > 0
+    q = Q1(fi=0, x0=10, x1=200)
+    got = s.query(tr, q).result
+    assert (got == q.reference(
+        s.planner.resources["r"].executor.table)).all()
+
+
+def test_partial_build_rolls_back_cleanly():
+    """A build whose second shard overflows must free the first shard's
+    banks (atomic admission -- no leak while queued)."""
+    s = small_session(banks=6)
+    free0 = s.devices[0].banks_free
+    h = s.create_table(table(8, seed=5), name="x", shards_per_device=2)
+    assert h.status == "queued"
+    assert s.devices[0].banks_free == free0
+
+
+# --------------------------------------------------------------------- #
+# Eviction / reload
+# --------------------------------------------------------------------- #
+
+def test_eviction_and_reload_round_trip():
+    s = small_session(banks=8)
+    ta = s.create_table(table(4, seed=1), name="a", shards_per_device=1)
+    tb = s.create_table(table(4, seed=2), name="b", shards_per_device=1)
+    q = Q2(**QA)
+    ref_a = s.query(ta, q).result
+    s.query(tb, q)                          # b is now hotter than a
+    tc = s.create_table(table(4, seed=3), name="c", shards_per_device=1)
+    # no free banks: the planner must evict the LRU table (a) to admit c
+    assert tc.status == "ready"
+    assert ta.status == "evicted"
+    assert s.planner.evictions >= 1
+    # touching the evicted table reloads it from host data (evicting
+    # the now-coldest resource) and answers bit-exactly
+    got = s.query(ta, q).result
+    assert ta.status == "ready"
+    assert (got == ref_a).all()
+    assert s.planner.resources["a"].builds == 2
+
+
+def test_pinned_resources_are_never_evicted():
+    s = small_session(banks=8)
+    s.create_table(table(4, seed=1), name="a", shards_per_device=1,
+                   pinned=True)
+    s.create_table(table(4, seed=2), name="b", shards_per_device=1,
+                   pinned=True)
+    tc = s.create_table(table(4, seed=3), name="c", shards_per_device=1)
+    assert tc.status == "queued"
+    assert s.planner_stats()["resources"]["a"] == "ready"
+    assert s.planner_stats()["resources"]["b"] == "ready"
+
+
+# --------------------------------------------------------------------- #
+# Multi-device federation
+# --------------------------------------------------------------------- #
+
+def test_federated_q1_q5_match_references_1m_records():
+    """Acceptance: Q1-Q5 over a 1M-record table sharded across TWO
+    devices match the single-table NumPy references bit-exactly
+    (including Q5's cross-device host-barrier round trip)."""
+    t = P.Table.generate(1_000_000, 8, seed=11)
+    s = PudSession(sys_cfg=cost.DESKTOP, num_devices=2)
+    h = s.create_table(t, name="t")
+    qs = [Q1(fi=0, x0=MX // 8, x1=MX // 2), Q2(**QA), Q3(**QA),
+          Q4(fk=2, **QA), Q5(fl=3, fk=2, **QA)]
+    job = s.query(h, qs)
+    assert (job.result[0] == qs[0].reference(t)).all()
+    assert (job.result[1] == qs[1].reference(t)).all()
+    assert job.result[2] == qs[2].reference(t)
+    assert abs(job.result[3] - qs[3].reference(t)) < 1e-9
+    assert job.result[4] == qs[4].reference(t)
+    # stats ride the federated barrier-aware timeline
+    assert job.stats.num_waves == 6      # five queries + Q5 phase 2
+    assert job.stats.overlapped_ns <= job.stats.serialized_ns + 1e-6
+    # shards really landed on both devices
+    assert all(d.groups for d in s.devices)
+
+
+def test_federated_gbdt_predict_matches_reference():
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=4, n_bits=8, seed=3)
+    s = PudSession(sys_cfg=cost.DESKTOP, num_devices=2)
+    h = s.load_forest(forest, name="f", groups_per_device=2,
+                      banks_per_group=2)
+    rng = np.random.default_rng(9)
+    X = rng.integers(0, 256, (13, 4), dtype=np.uint64)
+    job = s.predict(h, X)
+    np.testing.assert_allclose(job.result, G.reference_predict(forest, X),
+                               atol=1e-3)
+    assert job.stats.overlapped_ns <= job.stats.serialized_ns + 1e-6
+    assert all(d.groups for d in s.devices)
+
+
+def test_federated_timeline_rekeys_channels_and_unifies_host_merges():
+    t = table(2, seed=6)
+    s = PudSession(sys_cfg=cost.DESKTOP, num_devices=2)
+    h = s.create_table(t, name="t", cols_per_bank=4096)
+    s.query(h, [Q1(fi=0, x0=10, x1=200), Q3(**QA)])
+    per_dev = [d.schedule(s.sys_cfg) for d in s.devices]
+    fed = federate_timelines(per_dev)
+    # channels from different devices never collide
+    assert len(fed.channel_busy_ns) == sum(
+        len(tl.channel_busy_ns) for tl in per_dev)
+    assert fed.makespan_ns >= max(tl.makespan_ns for tl in per_dev)
+    # a shared merge label scheduled on both devices is ONE host node
+    labels = [hs.label for hs in fed.host_spans]
+    assert len(labels) == len(set(labels))
+    per_dev_labels = [hs.label for tl in per_dev for hs in tl.host_spans]
+    assert len(per_dev_labels) > len(set(per_dev_labels))
+    # the serving-layer merge node extends the makespan
+    fed2 = federate_timelines(per_dev, merge_ns=123.0)
+    assert fed2.makespan_ns == pytest.approx(fed.makespan_ns + 123.0)
+    assert fed2.host_spans[-1].label == "federate:merge"
+
+
+def test_cross_device_host_barrier_holds_on_asymmetric_fleet():
+    """A Q5 phase-1 merge consumes EVERY device's readouts, so no
+    device's phase-2 wave may be scheduled before the fleet-wide merge
+    node ends -- even when one device is much faster (more channels)
+    than the other.  Joint fleet scheduling guarantees this; post-hoc
+    per-device federation did not."""
+    fast = PuDDevice(PuDArch.MODIFIED, channels=4, ranks_per_channel=2,
+                     banks_per_rank=16, cols_per_bank=4096)
+    slow = PuDDevice(PuDArch.MODIFIED, channels=1, ranks_per_channel=1,
+                     banks_per_rank=16, cols_per_bank=4096)
+    s = PudSession(sys_cfg=cost.DESKTOP, devices=[fast, slow])
+    t = table(8, seed=12)
+    h = s.create_table(t, name="t", cols_per_bank=4096)
+    q = Q5(fl=3, fk=2, **QA)
+    job = s.query(h, q)
+    assert job.result == q.reference(t)
+    tl = job.timeline
+    merge = [hs for hs in tl.host_spans if hs.label.endswith("w0:h")]
+    assert len(merge) == 1              # one fleet-wide host node
+    p2 = [w for w in tl.waves if w.seg_label.endswith("w1:c")]
+    assert p2
+    assert min(w.start_ns for w in p2) >= merge[0].end_ns - 1e-6
+    assert job.stats.overlapped_ns <= job.stats.serialized_ns + 1e-6
+
+
+def test_job_timelines_are_job_scoped_not_cumulative():
+    """Every job's timeline covers exactly that job: no LUT-load waves,
+    and a repeat of the same query costs the same -- not the session's
+    accumulated history."""
+    s = small_session(banks=8)
+    h = s.create_table(table(2, seed=1), name="t", shards_per_device=1)
+    q = Q1(fi=0, x0=10, x1=200)
+    j1 = s.query(h, q)
+    j2 = s.query(h, q)
+    assert all(w.op is not PuDOp.WRITE for w in j1.timeline.waves)
+    assert len(j1.timeline.waves) == len(j2.timeline.waves)
+    assert j1.timeline.device_span_ns == pytest.approx(
+        j2.timeline.device_span_ns)
+
+
+# --------------------------------------------------------------------- #
+# Deprecation shims
+# --------------------------------------------------------------------- #
+
+def test_sharded_query_pipeline_shim_warns_and_delegates():
+    t = table(1, seed=7)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    with pytest.warns(DeprecationWarning, match="PudSession"):
+        qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
+                                    num_shards=2, cols_per_bank=4096)
+    assert isinstance(qp, QueryBatchExecutor)
+    assert qp.device is dev
+    res = qp.run([("q1", 0, 10, 200)])
+    assert (res[0] == P.reference_q1(t, 0, 10, 200)).all()
+
+
+def test_gbdt_batch_pipeline_shim_warns_and_delegates():
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=2)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    with pytest.warns(DeprecationWarning, match="PudSession"):
+        pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
+                                   num_groups=2, banks_per_group=2)
+    assert isinstance(pipe, GbdtBatchExecutor)
+    rng = np.random.default_rng(4)
+    X = rng.integers(0, 256, (5, 3), dtype=np.uint64)
+    np.testing.assert_allclose(pipe.infer(X),
+                               G.reference_predict(forest, X), atol=1e-3)
+
+
+# --------------------------------------------------------------------- #
+# Serving front end
+# --------------------------------------------------------------------- #
+
+def test_pud_service_batches_per_resource_with_per_request_stats():
+    t = table(2, seed=8)
+    svc = PudService(PudSession(sys_cfg=cost.DESKTOP, num_devices=2))
+    svc.session.create_table(t, name="events", cols_per_bank=4096)
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=5)
+    svc.session.load_forest(forest, name="ranker", banks_per_group=2)
+    rng = np.random.default_rng(6)
+    X1 = rng.integers(0, 256, (3, 3), dtype=np.uint64)
+    X2 = rng.integers(0, 256, (4, 3), dtype=np.uint64)
+    svc.submit(PudRequest(rid=1, resource="events",
+                          query=Q1(fi=0, x0=10, x1=200)))
+    svc.submit(PudRequest(rid=2, resource="ranker", X=X1))
+    svc.submit(PudRequest(rid=3, resource="events", query=Q3(**QA)))
+    svc.submit(PudRequest(rid=4, resource="ranker", X=X2))
+    assert svc.queue_depth == 4
+    rs = svc.flush()
+    assert svc.queue_depth == 0
+    assert [r.rid for r in rs] == [1, 2, 3, 4]
+    assert (rs[0].result == P.reference_q1(t, 0, 10, 200)).all()
+    assert rs[2].result == P.reference_q3(t, **QA)
+    np.testing.assert_allclose(
+        np.concatenate([rs[1].result, rs[3].result]),
+        G.reference_predict(forest, np.concatenate([X1, X2])), atol=1e-3)
+    # query requests batched together: shared stats, per-wave latency
+    assert rs[0].batch_size == rs[2].batch_size == 2
+    assert rs[0].stats is rs[2].stats
+    assert 0 < rs[0].latency_ns <= rs[2].latency_ns
+    # predict requests share one inference batch
+    assert rs[1].batch_size == rs[3].batch_size == 2
+    assert rs[1].stats is rs[3].stats
+
+
+def test_pud_service_rejects_duplicate_rids():
+    svc = PudService(PudSession(sys_cfg=cost.DESKTOP))
+    svc.session.create_table(table(1, seed=9), name="t",
+                             cols_per_bank=4096)
+    svc.submit(PudRequest(rid=1, resource="t", query=Q1(fi=0, x0=1, x1=9)))
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.submit(PudRequest(rid=1, resource="t",
+                              query=Q1(fi=0, x0=2, x1=8)))
+
+
+def test_pud_service_rejects_mismatched_requests():
+    svc = PudService(PudSession(sys_cfg=cost.DESKTOP))
+    svc.session.create_table(table(1, seed=9), name="t",
+                             cols_per_bank=4096)
+    with pytest.raises(ValueError):
+        PudRequest(rid=1, resource="t")
+    with pytest.raises(TypeError):
+        svc.submit(PudRequest(rid=2, resource="t",
+                              X=np.zeros((1, 3), np.uint64)))
+        svc.flush()
+    svc._pending.clear()
+    with pytest.raises(KeyError):
+        svc.submit(PudRequest(rid=3, resource="nope",
+                               query=Q1(fi=0, x0=1, x1=2)))
+        svc.flush()
+
+
+# --------------------------------------------------------------------- #
+# Session plumbing
+# --------------------------------------------------------------------- #
+
+def test_broken_build_queued_behind_capacity_fails_cleanly_on_drain():
+    """A broken recipe admitted while the queue is non-empty is only
+    attempted at drain time: the error must not raise out of drop(),
+    must not wedge the queue, and the name must be recoverable."""
+    s = small_session(banks=8)
+    ta = s.create_table(table(3, seed=1), name="a", shards_per_device=1,
+                        pinned=True)
+    s.create_table(table(3, seed=2), name="b", shards_per_device=1,
+                   pinned=True)
+    big = s.create_table(table(4, seed=3), name="big",
+                         shards_per_device=1)        # queued (capacity)
+    bad = s.create_table(table(1, seed=4), name="bad", method="bogus")
+    ok = s.create_table(table(1, seed=5), name="ok", shards_per_device=1)
+    assert bad.status == "queued" and ok.status == "queued"
+    s.drop(ta)          # drain: big admitted, bad fails, ok admitted
+    assert big.status == "ready"
+    assert bad.status == "failed"
+    assert ok.status == "ready"
+    with pytest.raises(RuntimeError, match="failed to build"):
+        s.query(bad, Q1(fi=0, x0=1, x1=9))
+    s.drop(bad)         # failed resources drop cleanly; name reusable
+    h = s.create_table(table(1, seed=4), name="bad", shards_per_device=1)
+    assert h.status == "ready"
+
+
+def test_empty_predict_batch_reports_empty_job_timeline():
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=2)
+    s = small_session(banks=8)
+    h = s.load_forest(forest, name="f", groups_per_device=1,
+                      banks_per_group=1)
+    rng = np.random.default_rng(4)
+    s.predict(h, rng.integers(0, 256, (3, 3), dtype=np.uint64))
+    job = s.predict(h, np.empty((0, 3), np.uint64))
+    assert job.result.shape == (0,)
+    assert job.timeline.waves == []     # not the previous job's
+    assert job.stats.makespan_ns == 0.0
+
+
+def test_query_check_helper_matches_and_rejects():
+    t = table(1, seed=13)
+    s = small_session(banks=8)
+    h = s.create_table(t, name="t", shards_per_device=1)
+    qs = [Q1(fi=0, x0=10, x1=200), Q4(fk=2, **QA)]
+    job = s.query(h, qs)
+    assert all(q.check(t, got) for q, got in zip(qs, job.result))
+    assert not qs[0].check(t, ~job.result[0])
+    assert not qs[1].check(t, job.result[1] + 1.0)
+
+
+def test_broken_build_recipe_does_not_poison_the_name():
+    """A build that raises a non-capacity error (bad method name) must
+    propagate, leak no banks, and leave the name reusable."""
+    s = small_session(banks=8)
+    free0 = s.devices[0].banks_free
+    with pytest.raises(ValueError, match="bogus"):
+        s.create_table(table(1, seed=1), name="t", method="bogus")
+    assert "t" not in s.planner.resources
+    assert s.devices[0].banks_free == free0
+    h = s.create_table(table(1, seed=1), name="t", shards_per_device=1)
+    assert h.status == "ready"
+
+
+def test_handle_status_after_drop_is_dropped():
+    s = small_session(banks=8)
+    h = s.create_table(table(1, seed=1), name="t", shards_per_device=1)
+    s.drop(h)
+    assert h.status == "dropped"
+    with pytest.raises(KeyError, match="already dropped"):
+        s.drop(h)
+
+
+def test_failed_flush_preserves_pending_requests():
+    """One bad request must not destroy the batch: flush fails before
+    executing anything, the queue survives, and cancelling the bad
+    request lets the rest flush normally."""
+    t = table(1, seed=9)
+    svc = PudService(PudSession(sys_cfg=cost.DESKTOP))
+    svc.session.create_table(t, name="good", cols_per_bank=4096)
+    svc.submit(PudRequest(rid=1, resource="good",
+                          query=Q1(fi=0, x0=10, x1=200)))
+    svc.submit(PudRequest(rid=2, resource="missing",
+                          query=Q1(fi=0, x0=10, x1=200)))
+    with pytest.raises(KeyError):
+        svc.flush()
+    assert svc.queue_depth == 2          # nothing was lost
+    assert svc.cancel(2) and not svc.cancel(99)
+    rs = svc.flush()
+    assert [r.rid for r in rs] == [1]
+    assert (rs[0].result == P.reference_q1(t, 0, 10, 200)).all()
+    assert svc.queue_depth == 0
+
+
+def test_session_rejects_mixed_arch_devices_and_wrong_kinds():
+    with pytest.raises(ValueError, match="arch"):
+        PudSession(devices=[
+            PuDDevice(PuDArch.MODIFIED, channels=1, ranks_per_channel=1,
+                      banks_per_rank=4),
+            PuDDevice(PuDArch.UNMODIFIED, channels=1, ranks_per_channel=1,
+                      banks_per_rank=4)])
+    s = small_session()
+    h = s.create_table(table(1), name="t")
+    with pytest.raises(TypeError, match="table"):
+        s.predict(h, np.zeros((1, 8), np.uint64))
+    s.drop(h)
+    with pytest.raises(KeyError):
+        s.query(h, Q1(fi=0, x0=1, x1=2))
+
+
+def test_session_raw_array_table_and_cost_summary():
+    rng = np.random.default_rng(3)
+    arr = rng.integers(0, 256, (5000, 3), dtype=np.uint64)
+    s = small_session()
+    with pytest.raises(ValueError, match="n_bits"):
+        s.create_table(arr, name="x")
+    h = s.create_table(arr, n_bits=8, name="x", shards_per_device=1)
+    q = Q1(fi=2, x0=17, x1=200)
+    f = arr[:, 2]
+    assert (s.query(h, q).result == ((f > 17) & (f < 200))).all()
+    cs = s.cost_summary()
+    assert cs["time_scheduled_ns"] > 0
+    assert len(cs["devices"]) == 1
+    assert cs["energy_nj"] > 0
