@@ -1,0 +1,157 @@
+"""Host-lane scaling: scheduled throughput of a Q5-bearing sharded
+query batch as the host grows merge lanes, from REAL scheduled
+timelines.
+
+The PR-4 host model was ONE serial merge lane, so at high shard counts
+every per-shard merge funneled through it and ``host_ns`` approached
+the job makespan.  This benchmark records a high-shard-count query
+batch ONCE (per-shard merge leaves + reduction-tree joins, measured
+host wall-clock), then re-schedules the identical recorded streams
+with ``host_lanes`` in {1, 2, 4}: the numbers isolate exactly what
+concurrent merge lanes buy on the same work.
+
+Reported rows per lane count: jobs/sec of scheduled makespan, the
+host-lane utilization (busiest lane / makespan -- ~1.0 means the host
+is the pipeline ceiling), and the total host busy lane-time (which
+must stay CONSTANT across lane counts: lanes overlap merges, they
+never make a merge cheaper).  A final pair of rows compares a 2-device
+fleet under ``hosts="shared"`` vs ``hosts="per-device"`` on the same
+recorded job.
+
+Acceptance gates, enforced with a nonzero exit (CI smoke runs this):
+
+  * 2-lane scheduled throughput must be >= 1-lane on the Q5-bearing
+    batch (the host-barrier workload the lanes exist for), and
+    makespans must be monotonically nonincreasing in lane count.
+  * Host busy lane-time must be conserved across lane counts (no
+    k-times-free-speedup from the bytes/bandwidth fallback).
+
+All RNG is fixed-seed so numbers are reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from dataclasses import replace
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.pud import PudSession, Q1, Q2, Q3, Q4, Q5
+
+LANE_SWEEP = (1, 2, 4)
+COLS = 4096
+
+
+def _sys_cfg(host_lanes: int = 1) -> cost.SystemConfig:
+    return replace(cost.DESKTOP, channels=2, host_lanes=host_lanes)
+
+
+def _workload(smoke: bool):
+    n = 24_000 if smoke else 96_000
+    t = P.Table.generate(n, 8, seed=13)
+    mx = 255
+    rng = dict(fi=0, x0=mx // 8, x1=mx // 2, fj=1, y0=mx // 4,
+               y1=3 * mx // 4)
+    batch = [Q1(fi=0, x0=mx // 8, x1=mx // 2), Q2(**rng), Q3(**rng),
+             Q4(fk=2, **rng), Q5(fl=3, fk=2, **rng)]
+    if not smoke:
+        batch = batch + [Q5(fl=4, fk=2, **rng), Q3(**rng)]
+    return t, batch
+
+
+def run(smoke: bool = False):
+    rows = []
+    t, batch = _workload(smoke)
+    shards = 4 if smoke else 8
+
+    session = PudSession(sys_cfg=_sys_cfg(), num_devices=1)
+    table = session.create_table(t, name="bench",
+                                 shards_per_device=shards,
+                                 cols_per_bank=COLS)
+    job = session.query(table, batch)
+    if not all(q.check(t, got) for q, got in zip(batch, job.result)):
+        raise SystemExit("host_lane_scaling: results diverged from the "
+                         "NumPy references")
+
+    # the SAME recorded job streams (measured merges included),
+    # re-scheduled under each lane count
+    ex = session.executor(table)
+    thr, busy = {}, {}
+    for k in LANE_SWEEP:
+        tl = ex.schedule(_sys_cfg(host_lanes=k))
+        thr[k] = len(batch) / (tl.makespan_ns / 1e9)
+        busy[k] = tl.host_busy_ns
+        rows.append((f"host_lane_scaling_l{k}",
+                     round(tl.makespan_ns / 1e3, 2), round(thr[k], 1)))
+        rows.append((f"host_lane_scaling_l{k}_host_util",
+                     round(tl.host_busy_ns / 1e3, 2),
+                     round(tl.host_utilization, 3)))
+    rows.append(("host_lane_scaling_speedup_1_to_2", 0.0,
+                 round(thr[2] / thr[1], 3)))
+    rows.append((f"host_lane_scaling_speedup_1_to_{LANE_SWEEP[-1]}", 0.0,
+                 round(thr[LANE_SWEEP[-1]] / thr[1], 3)))
+
+    if thr[2] < thr[1]:
+        raise SystemExit(
+            f"host_lane_scaling: 2-lane throughput {thr[2]:.1f} jobs/s "
+            f"fell below 1-lane {thr[1]:.1f} jobs/s on the Q5-bearing "
+            "batch -- the k-lane schedule regressed")
+    for lo, hi in zip(LANE_SWEEP[1:], LANE_SWEEP):
+        if thr[lo] < thr[hi] * (1 - 1e-9):
+            raise SystemExit(
+                f"host_lane_scaling: makespan not monotone in lanes "
+                f"({lo} lanes slower than {hi})")
+    ref = busy[LANE_SWEEP[0]]
+    for k in LANE_SWEEP[1:]:
+        if abs(busy[k] - ref) > max(1e-6 * ref, 1e-6):
+            raise SystemExit(
+                f"host_lane_scaling: host busy lane-time changed with "
+                f"lane count ({busy[k]:.1f} vs {ref:.1f} ns) -- a merge "
+                "got a free speedup from extra lanes")
+
+    # shared vs per-device hosts on a 2-device fleet (same job, same
+    # recorded streams; only the host-domain assignment differs)
+    fleet = PudSession(sys_cfg=_sys_cfg(), num_devices=2,
+                       hosts="per-device")
+    ftable = fleet.create_table(t, name="fleet",
+                                shards_per_device=max(2, shards // 2),
+                                cols_per_bank=COLS)
+    fjob = fleet.query(ftable, batch)
+    if not all(q.check(t, got) for q, got in zip(batch, fjob.result)):
+        raise SystemExit("host_lane_scaling: per-device-host results "
+                         "diverged from the NumPy references")
+    fex = fleet.executor(ftable)
+    span_pd = fex.schedule(fleet.sys_cfg).makespan_ns
+    fex.hosts = "shared"
+    span_sh = fex.schedule(fleet.sys_cfg).makespan_ns
+    rows.append(("host_lane_scaling_2dev_shared_host",
+                 round(span_sh / 1e3, 2),
+                 round(len(batch) / (span_sh / 1e9), 1)))
+    rows.append(("host_lane_scaling_2dev_per_device_hosts",
+                 round(span_pd / 1e3, 2),
+                 round(len(batch) / (span_pd / 1e9), 1)))
+    if span_pd > span_sh * (1 + 1e-9):
+        raise SystemExit(
+            "host_lane_scaling: per-device hosts scheduled SLOWER than "
+            f"the shared host ({span_pd:.1f} vs {span_sh:.1f} ns) -- "
+            "extra host resources may never hurt")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI regression smoke")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

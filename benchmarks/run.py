@@ -6,8 +6,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import bank_scaling, channel_scaling, kernel_wallclock, \
-    paper_figs, roofline_report, session_scaling
+from benchmarks import bank_scaling, channel_scaling, host_lane_scaling, \
+    kernel_wallclock, paper_figs, roofline_report, session_scaling
 
 
 def main() -> None:
@@ -24,6 +24,8 @@ def main() -> None:
     for name, us, derived in channel_scaling.run():
         print(f"{name},{us},{derived}")
     for name, us, derived in session_scaling.run():
+        print(f"{name},{us},{derived}")
+    for name, us, derived in host_lane_scaling.run():
         print(f"{name},{us},{derived}")
     for name, us, derived in roofline_report.run():
         print(f"{name},{us},{derived}")

@@ -39,10 +39,12 @@ groups on distinct device channels, splits a batch into waves, and
 double-buffers each group's leaf-bitmap row so host readout/merge of
 wave N overlaps PuD execution of wave N+1.  The recorded stream carries
 that structure as dependency-tagged segments plus host events -- each
-wave's leaf gather/merge is a host-lane node gated on its readout and
-chained after the previous merge -- which the per-channel bus scheduler
-turns into a timeline whose makespan includes both the overlapped
-device time and the host work it could not hide.
+wave's leaf gathers are per-group host nodes gated on their own
+readouts (independent gathers spread across the host's merge lanes)
+joined by a reduction-tree root that assembles the wave's predictions
+-- which the per-channel bus scheduler turns into a timeline whose
+makespan includes both the overlapped device time and the host work it
+could not hide.
 
 Only the native ``a < B`` comparison is needed, so no complement planes
 are stored even on Unmodified PuD.

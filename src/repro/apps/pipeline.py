@@ -8,13 +8,16 @@ buffer back and merges it on the host -- so host readout/merge of wave
 carries this structure as dependency-tagged segments (compute ``w``
 depends on compute ``w-1`` and on the readout that freed its buffer;
 readout ``w`` depends only on compute ``w``) plus explicit **host
-events**: each wave's merge is recorded as a host-lane node gated on
-its readout segment and chained after the previous merge, and a wave
-whose scalar comes from a merge (Q5's phase-2 scan) declares that merge
-as a barrier (``after_host``).  The per-channel bus scheduler therefore
-places host work on absolute time alongside the device waves, and a
-dependent wave can never be scheduled before the host round trip that
-produces its input.
+events**: each wave's host work is recorded as a merge *tree* -- one
+per-shard merge event gated on that shard's readout, plus a
+reduction-tree join node (one shared label across every shard's trace)
+gated on all the per-shard merges -- and a wave whose scalar comes
+from a merge (Q5's phase-2 scan) declares the tree's ROOT as a barrier
+(``after_host``).  The per-channel bus scheduler places host work on
+absolute time alongside the device waves across
+``SystemConfig.host_lanes`` concurrent merge lanes, so independent
+shard merges spread over the lanes while a dependent wave can never be
+scheduled before the root join that produces its input.
 
 This module turns that scheduled timeline + measured host-merge times
 into the two totals the benchmarks report:
@@ -37,7 +40,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-from repro.core.scheduler import Timeline
+from repro.core.scheduler import Timeline, lane_busy_from_spans
 
 
 @dataclass
@@ -47,7 +50,12 @@ class PipelineStats:
     ``makespan_ns`` is the pipeline's span in the barrier-aware
     schedule (device waves AND host-lane spans, relative to the
     pipeline's first wave) -- the overlapped total.  ``device_ns`` is
-    the device-wave span alone.
+    the device-wave span alone.  ``host_ns[w]`` is wave ``w``'s total
+    measured host work (every shard merge plus the reduction-tree
+    join); ``host_lane_busy_ns`` breaks the pipeline's host work down
+    per ``(host domain, lane)`` and ``host_utilization`` is the busiest
+    lane's busy fraction of the pipeline span -- ~1.0 means a host
+    lane is the pipeline ceiling.
     """
 
     wave_done_ns: list[float] = field(default_factory=list)
@@ -55,6 +63,8 @@ class PipelineStats:
     host_ns: list[float] = field(default_factory=list)
     makespan_ns: float = 0.0     # device + host span of the pipeline
     device_ns: float = 0.0       # device-wave span alone
+    host_lane_busy_ns: dict = field(default_factory=dict)
+    host_utilization: float = 0.0
 
     @property
     def num_waves(self) -> int:
@@ -110,15 +120,21 @@ def stats_from_timeline(timeline: Timeline, group_labels: list[str],
         dev_end = max(dev_end, w.end_ns)
     t0 = t0 or 0.0
     t_end = dev_end
-    for h in timeline.host_spans:
-        if h.label in tag_to_wave:
-            t_end = max(t_end, h.end_ns)
+    own_spans = [h for h in timeline.host_spans
+                 if h.label in tag_to_wave]
+    for h in own_spans:
+        t_end = max(t_end, h.end_ns)
+    lane_busy = lane_busy_from_spans(own_spans)
+    span = t_end - t0
     return PipelineStats(
         wave_done_ns=[max(0.0, d - t0) for d in done],
         wave_busy_ns=busy,
         host_ns=list(host_ns),
-        makespan_ns=t_end - t0,
+        makespan_ns=span,
         device_ns=dev_end - t0,
+        host_lane_busy_ns=lane_busy,
+        host_utilization=(max(lane_busy.values()) / span
+                          if lane_busy and span > 0 else 0.0),
     )
 
 

@@ -29,11 +29,13 @@ queries double-buffered: each query's WHERE bitmap is parked in one of
 two result rows, the next query's PuD stream is issued, and only then
 is the parked row read back and merged (COUNT/AVERAGE) on the host --
 so host readout/merge of query N overlaps PuD execution of query N+1.
-Every merge is recorded as a host event (one label across all shards ==
-one host-lane node joining their readouts), and Q5's phase-2 scan --
-whose scalar exists only after phase 1's merge -- declares that merge
-as an ``after_host`` barrier, so the scheduled timeline contains the
-host round trip instead of assuming the scalar was already available.
+Every merge is recorded as a reduction tree of host events (per-shard
+merge leaves that spread across the host's ``host_lanes`` merge lanes,
+plus a root join under one label across all shards), and Q5's phase-2
+scan -- whose scalar exists only after phase 1's root join -- declares
+that root as an ``after_host`` barrier, so the scheduled timeline
+contains the host round trip instead of assuming the scalar was
+already available.
 """
 
 from __future__ import annotations

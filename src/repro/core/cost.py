@@ -21,7 +21,9 @@ Two accounting paths coexist:
   contention, cross-channel overlap, and host-barrier bubbles all
   included, host I/O charged at per-channel bandwidth) and energy is
   summed per scheduled wave, with host power split into active power
-  over the scheduled host spans and idle power over the remainder.
+  per busy host lane (``host_lanes`` concurrent merge lanes, each
+  running at the per-lane ``host_mem_gbps`` rate) and idle power over
+  the part of the makespan where no lane is active.
   ``PuDDevice.cost_summary`` reports this next to the old
   serialized/overlapped brackets, which survive as bounds: scheduled
   time always lies in [max-of-groups, sum-of-groups + host].
@@ -95,7 +97,8 @@ class SystemConfig:
     cols_per_bank: int               # row-buffer bits == PuD SIMD lanes
     host_power_w: float              # active host power during baseline run
     host_idle_power_w: float         # host power while PuD computes
-    host_mem_gbps: float = 20.0      # single-thread host merge/memcpy rate
+    host_mem_gbps: float = 20.0      # PER-LANE host merge/memcpy rate
+    host_lanes: int = 1              # concurrent host merge lanes (threads)
     e_act_nj: float = 2.1            # single-row activation+precharge energy
     e_io_pj_per_bit: float = 22.0    # off-chip transfer energy
     multi_act_overhead: float = 0.22 # +22%/extra row (paper, [197])
@@ -291,11 +294,16 @@ def timeline_cost(timeline, sys: SystemConfig) -> "KernelCost":
     host row I/O was charged at per-channel bandwidth by the scheduler.
     Energy sums every scheduled wave (activation energy for compute
     waves, per-byte transfer energy for I/O waves) plus host power
-    split by what the host is actually doing: active power over the
-    scheduled host spans (merges, reductions), idle power over the rest
-    of the makespan -- not idle power over the whole makespan, which
-    double-counted merge time as idle.  ``elems`` is the total SIMD
-    width that computed useful lanes: each group counted once via the
+    split by what the host is actually doing: active power is charged
+    **per busy lane** -- ``host_power_w`` times the total busy
+    lane-time (``Timeline.host_busy_ns``, which sums every lane a gang-
+    scheduled node occupied), so two merges overlapping on two lanes
+    cost twice the power of one -- and idle power covers only the part
+    of the makespan where NO lane is active
+    (``makespan - Timeline.host_wall_ns``).  With ``host_lanes=1`` the
+    busy lane-time and the busy wall-clock coincide, reproducing the
+    single-lane accounting exactly.  ``elems`` is the total SIMD width
+    that computed useful lanes: each group counted once via the
     timeline's per-group tallies (padded columns excluded).
     """
     from .machine import PuDOp as _Op
@@ -306,9 +314,9 @@ def timeline_cost(timeline, sys: SystemConfig) -> "KernelCost":
             e += transfer_energy_nj(w.io_bytes, sys)
         else:
             e += wave_energy_nj(w.op, w.banks, sys)
-    host_active = min(timeline.host_busy_ns, timeline.makespan_ns)
-    e += sys.host_power_w * host_active
-    e += sys.host_idle_power_w * (timeline.makespan_ns - host_active)
+    e += sys.host_power_w * timeline.host_busy_ns
+    host_wall = min(timeline.host_wall_ns, timeline.makespan_ns)
+    e += sys.host_idle_power_w * (timeline.makespan_ns - host_wall)
     return KernelCost(time_ns=timeline.makespan_ns, energy_nj=e,
                       elems=sum(timeline.group_elems.values()))
 

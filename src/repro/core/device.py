@@ -23,7 +23,8 @@ device above it:
     hands every placed group's stream + physical footprint to the
     per-channel command-bus scheduler (:mod:`repro.core.scheduler`) and
     returns the scheduled :class:`~repro.core.scheduler.Timeline`,
-    host-lane spans included.  :meth:`cost_summary` derives device
+    host spans included (placed across the system's ``host_lanes``
+    concurrent merge lanes).  :meth:`cost_summary` derives device
     latency/energy from that timeline (``cost.timeline_cost``) and
     keeps the old serialized-sum / perfect-overlap numbers as the
     bracketing bounds the scheduler must land between.
@@ -443,6 +444,8 @@ class PuDDevice:
             "time_overlap_ns": timeline.overlap_bound_ns,
             "channel_busy_ns": timeline.channel_busy_ns,
             "host_busy_ns": timeline.host_busy_ns,
+            "host_lane_busy_ns": timeline.host_lane_busy_ns,
+            "host_utilization": timeline.host_utilization,
             "energy_nj": sum(g["energy_nj"] for g in per_group),
             "energy_scheduled_nj": kc.energy_nj,
         }

@@ -144,7 +144,16 @@ class HostEvent:
     from ``bytes_in``, the readout bytes the host work consumes.
     Events with the same non-empty ``label`` across several groups'
     traces are one logical host step (e.g. a merge over all shards'
-    readouts) and are scheduled as a single node."""
+    readouts) and are scheduled as a single node.
+
+    ``parallelism`` is a hint: the recorded work contains that many
+    independent sub-merges, so a multi-lane host scheduler may gang the
+    node over up to ``min(parallelism, host_lanes)`` lanes, dividing
+    its wall-clock while conserving total busy lane-time.  Apps that
+    can split the work record separate per-shard events plus a
+    reduction-tree join instead (finer-grained: each leaf starts as
+    soon as its own readout lands); the hint covers monolithic
+    recordings that cannot."""
 
     hid: int
     label: str
@@ -152,6 +161,7 @@ class HostEvent:
     after_host: tuple[int, ...] = ()
     duration_ns: float | None = None
     bytes_in: float = 0.0
+    parallelism: int = 1
 
 
 @dataclass
@@ -196,18 +206,21 @@ class CommandTrace:
                        after: tuple[int, ...] | None = None,
                        after_host: tuple[int, ...] = (),
                        duration_ns: float | None = None,
-                       bytes_in: float = 0.0) -> int:
+                       bytes_in: float = 0.0,
+                       parallelism: int = 1) -> int:
         """Record host-side work gated on ``after`` segments' waves (and
         ``after_host`` earlier events); returns its id.  ``after=None``
-        gates on the current segment.  ``duration_ns`` may be left
-        ``None`` and back-filled via :meth:`set_host_duration` once the
-        timed work has actually run."""
+        gates on the current segment (pass ``()`` for no wave deps).
+        ``duration_ns`` may be left ``None`` and back-filled via
+        :meth:`set_host_duration` once the timed work has actually run.
+        ``parallelism`` hints how many independent sub-merges the work
+        contains (see :class:`HostEvent`)."""
         if after is None:
             after = (self._cur_seg,)
         hid = len(self.host_events)
         self.host_events.append(HostEvent(
             hid, label, tuple(after), tuple(after_host),
-            duration_ns, bytes_in))
+            duration_ns, bytes_in, parallelism))
         return hid
 
     def set_host_duration(self, hid: int, duration_ns: float) -> None:

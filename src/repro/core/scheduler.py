@@ -36,23 +36,42 @@ Bus model
   bandwidth), holding the same exclusivity (a burst cannot interleave
   with a timed ACT sequence on the same channel).
 
-Host lane
----------
-The host is a first-class scheduled resource.  Recorded
-:class:`~repro.core.machine.HostEvent` barriers (a readout merge, a
-scalar reduction feeding a later wave) become nodes on a single serial
-*host lane*: a host node starts once the waves of its ``after``
-segments (and any earlier host nodes it chains after) have completed
-AND the lane is free; segments declaring ``after_host`` may not issue
-their first wave until the node ends.  Node duration is the measured
-host wall-clock when the app recorded one, else a bandwidth model
-(``bytes_in`` streamed once through host memory at the device's peak
-off-chip bandwidth).  Events recorded under the same label in several
-groups' traces are ONE node whose dependencies span all those groups --
-that is how a host merge that joins every shard's readout, then feeds a
-dependent broadcast wave (Q5 phase 2, GBDT leaf gather), appears in the
-timeline: readouts -> one host span -> dependent waves, with the
-makespan honestly including the host bubble.
+Host lanes
+----------
+The host is a first-class scheduled resource with ``k =
+SystemConfig.host_lanes`` concurrent merge lanes (k=1 models the old
+single-threaded host and reproduces its timelines bit-exactly).
+Recorded :class:`~repro.core.machine.HostEvent` barriers (a readout
+merge, a scalar reduction feeding a later wave) become nodes placed on
+the lanes by earliest-start list scheduling: a host node starts once
+the waves of its ``after`` segments (and any earlier host nodes it
+chains after) have completed AND a lane is free; segments declaring
+``after_host`` may not issue their first wave until the node ends.
+Node duration is the measured host wall-clock when the app recorded
+one, else a bandwidth model (``bytes_in`` streamed once through host
+memory at the PER-LANE ``host_mem_gbps`` merge rate -- adding lanes
+never speeds up a single serial merge, it only lets independent merges
+overlap).  A node whose event carries a ``parallelism`` hint ``p > 1``
+may be *ganged* over ``m <= min(p, k)`` lanes: wall-clock ``d / m``,
+but every occupied lane is busy for that span, so total busy lane-time
+(and therefore modeled host energy) is conserved.  Events recorded
+under the same label in several groups' traces are ONE node whose
+dependencies span all those groups -- that is how a reduction-tree
+join over every shard's merge, feeding a dependent broadcast wave (Q5
+phase 2, GBDT leaf gather), appears in the timeline: readouts ->
+per-shard merge spans (spread across lanes) -> one root join span ->
+dependent waves, with the makespan honestly including the host bubble.
+
+Host domains (per-device hosts)
+-------------------------------
+A fleet job may model one shared host driving every device, or one
+host per device.  Each :class:`GroupStream` carries a ``host`` domain
+id; every domain gets its own set of ``host_lanes`` lanes.  A node
+recorded only by streams of one domain runs on that domain's lanes; a
+node joining streams of several domains (a cross-device reduction) is
+a fleet-wide step and runs on the SHARED domain
+(:data:`SHARED_HOST`).  With every stream on one domain (the default)
+this degenerates to the single-host model.
 
 Federation
 ----------
@@ -89,6 +108,11 @@ from .machine import CommandTrace, HostEvent, PuDOp, Segment
 #: Footprint of a group: {channel: {rank: number of the group's banks}}.
 Footprint = dict[int, dict[int, int]]
 
+#: Host domain of nodes that join streams of several domains (a
+#: cross-device reduction runs on the shared host, never on one
+#: device's local host).
+SHARED_HOST = -1
+
 
 @dataclass(frozen=True)
 class GroupStream:
@@ -96,7 +120,10 @@ class GroupStream:
 
     ``active_elems`` is the number of SIMD lanes the engine actually
     uses (e.g. real records in a padded shard); ``None`` means every
-    column of every bank computes useful data.
+    column of every bank computes useful data.  ``host`` is the host
+    domain the stream's host events run on (per-device hosts give each
+    device's streams its own domain; the default puts everything on
+    domain 0 -- one shared host).
     """
 
     label: str
@@ -107,6 +134,7 @@ class GroupStream:
     segments: tuple[Segment, ...]     # segment table (id -> label, deps)
     host_events: tuple[HostEvent, ...] = ()
     active_elems: int | None = None
+    host: int = 0                     # host domain (see module docstring)
 
     @property
     def banks(self) -> int:
@@ -156,15 +184,28 @@ class ScheduledWave:
 
 @dataclass(frozen=True)
 class HostSpan:
-    """One scheduled host-lane node (a merged host event)."""
+    """One scheduled host node (a merged host event).
+
+    ``host`` is the domain it ran on (:data:`SHARED_HOST` for
+    cross-domain joins); ``lanes`` lists every lane it occupied -- more
+    than one only for gang-scheduled nodes (``parallelism`` hint), in
+    which case ``duration_ns`` is the divided wall-clock and
+    ``busy_ns`` the conserved total lane-time."""
 
     label: str
     start_ns: float
     end_ns: float
+    host: int = 0
+    lanes: tuple[int, ...] = (0,)
 
     @property
     def duration_ns(self) -> float:
         return self.end_ns - self.start_ns
+
+    @property
+    def busy_ns(self) -> float:
+        """Total lane-time: wall-clock times the lanes occupied."""
+        return self.duration_ns * len(self.lanes)
 
 
 @dataclass
@@ -188,6 +229,41 @@ class Timeline:
         return self.channel_busy_ns.get(channel, 0.0) / self.makespan_ns
 
     @property
+    def host_lane_busy_ns(self) -> dict[tuple[int, int], float]:
+        """Busy time per ``(host domain, lane)`` -- the per-lane view
+        of the host side of the schedule."""
+        return lane_busy_from_spans(self.host_spans)
+
+    @property
+    def host_utilization(self) -> float:
+        """Busy fraction of the BUSIEST host lane over the makespan:
+        ~1.0 means a host lane is the pipeline ceiling (adding merge
+        lanes or per-device hosts is what would help), ~0 means the
+        host is never the bottleneck."""
+        lanes = self.host_lane_busy_ns
+        if self.makespan_ns <= 0 or not lanes:
+            return 0.0
+        return max(lanes.values()) / self.makespan_ns
+
+    @property
+    def host_wall_ns(self) -> float:
+        """Wall-clock time during which ANY host lane is active (union
+        of host spans) -- the complement of the makespan's host-idle
+        time.  Equals ``host_busy_ns`` when one serial lane exists."""
+        total = 0.0
+        cur_s = cur_e = None
+        for s, e in sorted((h.start_ns, h.end_ns) for h in self.host_spans):
+            if cur_e is None or s > cur_e:
+                if cur_e is not None:
+                    total += cur_e - cur_s
+                cur_s, cur_e = s, e
+            else:
+                cur_e = max(cur_e, e)
+        if cur_e is not None:
+            total += cur_e - cur_s
+        return total
+
+    @property
     def device_span_ns(self) -> float:
         """End of the last device wave -- DRAM time only.  Throughput
         metrics normalized to scheduled DRAM time use this; it still
@@ -197,8 +273,9 @@ class Timeline:
 
     @property
     def host_busy_ns(self) -> float:
-        """Total host-lane active time (host events are serialized)."""
-        return sum(h.duration_ns for h in self.host_spans)
+        """Total busy lane-time across every host lane of every domain
+        (a gang-scheduled node counts once per lane it occupied)."""
+        return sum(h.busy_ns for h in self.host_spans)
 
     def segment_spans(self) -> dict[tuple[str, str], tuple[float, float]]:
         """(group label, segment label) -> (first start, last end), for
@@ -225,25 +302,42 @@ class Timeline:
     @property
     def overlap_bound_ns(self) -> float:
         """Perfect-overlap lower bound: the slowest group alone, or the
-        serial host lane if that dominates."""
+        busiest host lane if that dominates (with one serial lane that
+        is the whole host workload)."""
         return max(max(self.group_busy_ns.values(), default=0.0),
-                   self.host_busy_ns)
+                   max(self.host_lane_busy_ns.values(), default=0.0))
+
+
+def lane_busy_from_spans(spans) -> dict[tuple[int, int], float]:
+    """Busy time per ``(host domain, lane)`` over a span list."""
+    busy: dict[tuple[int, int], float] = {}
+    for h in spans:
+        for lane in h.lanes:
+            key = (h.host, lane)
+            busy[key] = busy.get(key, 0.0) + h.duration_ns
+    return busy
 
 
 def rekey_stream(stream: GroupStream, device_index: int,
-                 stride: int) -> GroupStream:
+                 stride: int, host: int | None = None) -> GroupStream:
     """Move a stream's footprint into device ``device_index``'s channel
     namespace (channel ``c`` -> ``device_index * stride + c``) for
-    joint fleet scheduling: devices' buses stay independent while ONE
-    :class:`ChannelScheduler` host lane joins them.  ``stride`` must be
+    joint fleet scheduling: devices' buses stay independent while the
+    :class:`ChannelScheduler` host lanes join them.  ``stride`` must be
     >= every device's channel count (callers use
     ``max(d.channels for d in devices)``) so namespaces never collide.
+    ``host`` additionally moves the stream into that host domain
+    (per-device hosts pass the device index; ``None`` keeps the
+    stream's domain -- one shared host for the whole fleet).
     """
     from dataclasses import replace
 
-    return replace(stream, footprint={
+    out = replace(stream, footprint={
         device_index * stride + c: dict(ranks)
         for c, ranks in stream.footprint.items()})
+    if host is not None:
+        out = replace(out, host=host)
+    return out
 
 
 def federate_timelines(timelines: list[Timeline],
@@ -285,16 +379,36 @@ def federate_timelines(timelines: list[Timeline],
     """
     from dataclasses import replace
 
-    if len(timelines) == 1 and merge_ns <= 0.0:
-        return timelines[0]
+    if len(timelines) == 1:
+        # nothing to unify: keep the timeline (and its host domains --
+        # a jointly scheduled fleet timeline may carry several) intact,
+        # at most appending the serving layer's merge node
+        tl = timelines[0]
+        if merge_ns <= 0.0:
+            return tl
+        spans = list(tl.host_spans)
+        spans.append(HostSpan(merge_label, tl.makespan_ns,
+                              tl.makespan_ns + merge_ns,
+                              host=SHARED_HOST))
+        return Timeline(
+            waves=list(tl.waves), makespan_ns=tl.makespan_ns + merge_ns,
+            channel_busy_ns=dict(tl.channel_busy_ns),
+            group_busy_ns=dict(tl.group_busy_ns),
+            group_span_ns=dict(tl.group_span_ns),
+            group_elems=dict(tl.group_elems), host_spans=spans)
     stride = 1 + max((c for tl in timelines
                       for c in tl.channel_busy_ns), default=0)
+    # re-key host domains like channels: device i's local domain d
+    # becomes i * dstride + d, so two devices' hosts never share a
+    # lane key even when each timeline carries several domains
+    dstride = 1 + max((h.host for tl in timelines for h in tl.host_spans
+                       if h.host != SHARED_HOST), default=0)
     waves: list[ScheduledWave] = []
     channel_busy: dict[int, float] = {}
     group_busy: dict[str, float] = {}
     group_span: dict[str, tuple[float, float]] = {}
     group_elems: dict[str, int] = {}
-    merged_hosts: dict[str, list[float]] = {}
+    merged_hosts: dict[str, dict] = {}
     for di, tl in enumerate(timelines):
         for w in tl.waves:
             waves.append(replace(
@@ -305,19 +419,37 @@ def federate_timelines(timelines: list[Timeline],
         group_span.update(tl.group_span_ns)
         group_elems.update(tl.group_elems)
         for h in tl.host_spans:
-            acc = merged_hosts.setdefault(h.label,
-                                          [h.start_ns, h.duration_ns])
-            acc[0] = max(acc[0], h.start_ns)
-            acc[1] = max(acc[1], h.duration_ns)
-    host_spans = [HostSpan(label, start, start + dur)
-                  for label, (start, dur) in merged_hosts.items()]
+            dom = di * dstride + h.host if h.host != SHARED_HOST \
+                else SHARED_HOST
+            acc = merged_hosts.setdefault(h.label, {
+                "start": h.start_ns, "dur": -1.0,
+                "hosts": set(), "lanes": h.lanes})
+            acc["start"] = max(acc["start"], h.start_ns)
+            # the unified span runs for the LONGEST contributor's
+            # duration; take that contributor's lanes too, so busy_ns
+            # is its conserved lane-time regardless of input order
+            # (ties broken toward the wider gang)
+            if (h.duration_ns, len(h.lanes)) > (acc["dur"],
+                                                len(acc["lanes"])):
+                acc["dur"] = h.duration_ns
+                acc["lanes"] = h.lanes
+            acc["hosts"].add(dom)
+    host_spans = []
+    for label, acc in merged_hosts.items():
+        # a span unified across devices is a fleet-wide host step
+        dom = acc["hosts"].pop() if len(acc["hosts"]) == 1 \
+            else SHARED_HOST
+        host_spans.append(HostSpan(
+            label, acc["start"], acc["start"] + acc["dur"],
+            host=dom, lanes=acc["lanes"]))
     host_spans.sort(key=lambda h: h.start_ns)
     makespan = max(
         max((w.end_ns for w in waves), default=0.0),
         max((h.end_ns for h in host_spans), default=0.0))
     if merge_ns > 0.0:
         host_spans.append(
-            HostSpan(merge_label, makespan, makespan + merge_ns))
+            HostSpan(merge_label, makespan, makespan + merge_ns,
+                     host=SHARED_HOST))
         makespan += merge_ns
     return Timeline(waves=waves, makespan_ns=makespan,
                     channel_busy_ns=channel_busy, group_busy_ns=group_busy,
@@ -327,7 +459,8 @@ def federate_timelines(timelines: list[Timeline],
 
 class ChannelScheduler:
     """Schedules recorded group streams onto a SystemConfig's channels
-    (and their host events onto the serial host lane)."""
+    (and their host events onto ``host_lanes`` merge lanes per host
+    domain)."""
 
     def __init__(self, sys_cfg) -> None:
         self.sys = sys_cfg
@@ -335,6 +468,8 @@ class ChannelScheduler:
         self._act_gap = max(t.tFAW / 4.0, t.tRRD_L)
         # Per-channel share of the device's peak off-chip bandwidth.
         self._channel_bw = sys_cfg.bandwidth_gbps / sys_cfg.channels
+        # Concurrent host merge lanes (k=1: the old serial host).
+        self.host_lanes = max(1, int(getattr(sys_cfg, "host_lanes", 1)))
 
     # ------------------------------------------------------------------ #
     def wave_duration_ns(self, op: PuDOp, stream: GroupStream) -> float:
@@ -361,11 +496,16 @@ class ChannelScheduler:
                          bytes_in: float) -> float:
         """Host node duration: measured wall-clock when the app recorded
         one, else ``bytes_in`` streamed once through host memory at the
-        system's ``host_mem_gbps`` single-thread merge rate (the merge
-        is one pass over the readout bytes, bandwidth-bound like the
-        CPU baseline kernels).  A host-side rate -- not any function of
-        the DRAM channel topology -- so resizing the device's channels
-        never changes modeled host-merge speed."""
+        system's PER-LANE ``host_mem_gbps`` merge rate (the merge is
+        one pass over the readout bytes, bandwidth-bound like the CPU
+        baseline kernels).  Deliberately NOT scaled by ``host_lanes``:
+        one serial merge never runs faster because idle lanes exist, so
+        a merge split across k lanes (per-shard events, or a
+        ``parallelism`` gang) conserves total busy lane-time -- the
+        bytes pay the per-lane rate wherever they land.  A host-side
+        rate -- not any function of the DRAM channel topology -- so
+        resizing the device's channels never changes modeled host-merge
+        speed."""
         if measured is not None:
             return measured
         return bytes_in / self.sys.host_mem_gbps
@@ -428,7 +568,8 @@ class ChannelScheduler:
                 key = node_key[gi][h.hid]
                 n = nodes.setdefault(key, {
                     "label": h.label or key, "seg_deps": set(),
-                    "host_deps": set(), "measured": None, "bytes": 0.0})
+                    "host_deps": set(), "measured": None, "bytes": 0.0,
+                    "par": 1, "domains": set()})
                 segs, hosts = expand_deps(gi, h.after, h.after_host)
                 n["seg_deps"] |= {(gi, d) for d in segs}
                 n["host_deps"] |= {node_key[gi][x] for x in hosts}
@@ -436,6 +577,13 @@ class ChannelScheduler:
                 if h.duration_ns is not None:
                     n["measured"] = max(n["measured"] or 0.0, h.duration_ns)
                 n["bytes"] += h.bytes_in
+                n["par"] = max(n["par"], h.parallelism)
+                n["domains"].add(s.host)
+        for n in nodes.values():
+            # a node joining several host domains is a cross-device
+            # step: it runs on the shared host, not any device's own
+            n["dom"] = (next(iter(n["domains"]))
+                        if len(n["domains"]) == 1 else SHARED_HOST)
 
         # Effective per-segment deps (wave-bearing segments + host keys).
         eff_after: list[dict[int, tuple[int, ...]]] = []
@@ -453,7 +601,10 @@ class ChannelScheduler:
 
         node_end: dict[str, float] = {}
         pending_nodes = set(nodes)
-        host_free = 0.0
+        # Per-domain host lanes: each domain (one shared host, or one
+        # host per device, plus SHARED_HOST for cross-domain joins)
+        # owns `host_lanes` lanes, free at the recorded times.
+        lane_free: dict[int, list[float]] = {}
 
         def seg_ready(gi: int, sid: int) -> bool:
             return (all(seg_left[gi][d] == 0 for d in eff_after[gi][sid])
@@ -470,14 +621,32 @@ class ChannelScheduler:
             return (all(seg_left[gi][d] == 0 for gi, d in n["seg_deps"])
                     and all(k in node_end for k in n["host_deps"]))
 
-        def node_start(key: str) -> float:
+        def node_plan(key: str) -> tuple[float, float, tuple[int, ...]]:
+            """(start, end, lanes) for a ready node: earliest-start
+            list scheduling over its domain's lanes.  A node with a
+            ``parallelism`` hint p may gang over m <= min(p, k) lanes
+            (wall / m, busy conserved); of the feasible widths the one
+            finishing EARLIEST wins (a wide gang that must wait for a
+            busy lane can lose to a narrow one that starts now)."""
             n = nodes[key]
-            t = host_free
+            dep = 0.0
             for gi, d in n["seg_deps"]:
-                t = max(t, seg_end[gi][d])
+                dep = max(dep, seg_end[gi][d])
             for k in n["host_deps"]:
-                t = max(t, node_end[k])
-            return t
+                dep = max(dep, node_end[k])
+            lanes = lane_free.setdefault(
+                n["dom"], [0.0] * self.host_lanes)
+            order = sorted(range(len(lanes)),
+                           key=lambda i: (lanes[i], i))
+            dur = self.host_duration_ns(n["measured"], n["bytes"])
+            best = None
+            for m in range(1, min(max(1, n["par"]), len(lanes)) + 1):
+                start = max(dep, lanes[order[m - 1]])
+                cand = (start + dur / m, start, m)
+                if best is None or cand < best:
+                    best = cand
+            end, start, m = best
+            return start, end, tuple(sorted(order[:m]))
 
         remaining = sum(len(s.ops) for s in streams)
         while remaining or pending_nodes:
@@ -485,10 +654,10 @@ class ChannelScheduler:
             for key in pending_nodes:
                 if not node_ready(key):
                     continue
-                start = node_start(key)
-                cand = (start, -1, 0, -1, key)
+                plan = node_plan(key)
+                cand = (plan[0], -1, 0, -1, key)
                 if best is None or cand < best[0]:
-                    best = (cand, "host", key, None, None, start)
+                    best = (cand, "host", key, None, None, plan)
             for gi, s in enumerate(streams):
                 for sid, ws in queues[gi].items():
                     if not ws or not seg_ready(gi, sid):
@@ -507,13 +676,14 @@ class ChannelScheduler:
             assert best is not None, \
                 "dependency cycle in stream segments / host events"
             if best[1] == "host":
-                _, _, key, _, _, start = best
-                end = start + self.host_duration_ns(
-                    nodes[key]["measured"], nodes[key]["bytes"])
+                _, _, key, _, _, (start, end, node_lanes) = best
+                dom = nodes[key]["dom"]
                 host_spans.append(
-                    HostSpan(nodes[key]["label"], start, end))
+                    HostSpan(nodes[key]["label"], start, end,
+                             host=dom, lanes=node_lanes))
                 node_end[key] = end
-                host_free = end
+                for lane in node_lanes:
+                    lane_free[dom][lane] = end
                 pending_nodes.remove(key)
                 continue
             _, _, gi, sid, (w, op), start = best

@@ -29,10 +29,15 @@ Fleet scheduling: every job is scheduled JOINTLY across the fleet by
 one :class:`~repro.core.scheduler.ChannelScheduler` -- each device's
 channels are re-keyed into their own namespace (device buses stay
 independent; waves of different devices never serialize), while the
-single serial host lane joins them, so a merge that consumes every
-device's readouts is one node that no device's dependent wave can
-start before (the host-barrier invariant holds across devices, not
-just within one).  Timelines are *job-scoped*: :meth:`schedule` trims
+host joins them.  The host is concurrent: each wave's merge is
+recorded as a reduction tree (per-shard merge leaves + a root join
+with one shared label across every shard's trace), leaves spread over
+``SystemConfig.host_lanes`` merge lanes, and with ``hosts=
+"per-device"`` each device's leaves run on that device's own host with
+only the cross-device root joins on the shared host.  Either way the
+root join is one node that no device's dependent wave can start before
+(the host-barrier invariant holds across devices, not just within
+one).  Timelines are *job-scoped*: :meth:`schedule` trims
 each engine's stream to the waves/host events recorded since the job
 began, so per-job metrics exclude one-time setup (LUT loads) and
 earlier batches, and scheduling cost does not grow with session
@@ -43,6 +48,7 @@ the post-hoc union for timelines of genuinely independent hosts.)
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import replace
 
 import numpy as np
@@ -65,14 +71,32 @@ from repro.core.scheduler import (
 class _FederatedExecutor:
     """Shared device-fleet plumbing: joint fleet scheduling with
     job-scoped streams, and the (device, bank-group) placement list the
-    planner frees."""
+    planner frees.
 
-    def __init__(self, devices) -> None:
+    ``hosts`` selects the fleet's host model: ``"shared"`` (default)
+    schedules every device's merges on ONE host's ``host_lanes`` lanes;
+    ``"per-device"`` gives each device its own host (its shards' merge
+    leaves run on that device's local lanes) with only cross-device
+    reduction-tree joins on the shared host.  ``merge_tree`` controls
+    the recorded host structure: ``True`` records one merge event per
+    shard plus an explicit reduction-tree join (independent shard
+    merges can spread across lanes; dependent waves wait on the tree
+    root), ``False`` keeps the PR-4 monolithic one-node-per-wave
+    recording (with a ``parallelism`` hint so a multi-lane host can
+    still gang it)."""
+
+    def __init__(self, devices, hosts: str = "shared",
+                 merge_tree: bool = True) -> None:
         devices = list(devices) if isinstance(devices, (list, tuple)) \
             else [devices]
         if not devices:
             raise ValueError("need at least one device")
+        if hosts not in ("shared", "per-device"):
+            raise ValueError(
+                f"hosts must be 'shared' or 'per-device', got {hosts!r}")
         self.devices = devices
+        self.hosts = hosts
+        self.merge_tree = merge_tree
         #: [(device, BankedSubarray)] of every group this executor placed;
         #: the placement planner frees exactly these on evict/release.
         self.placements: list[tuple[object, object]] = []
@@ -121,7 +145,10 @@ class _FederatedExecutor:
                         x for x in h.after_host if x in kept))
                     for h in tr.host_events[h0:]),
                 active_elems=group.active_elems)
-            out.append(rekey_stream(stream, i // per_dev, stride))
+            di = i // per_dev
+            out.append(rekey_stream(
+                stream, di, stride,
+                host=di if self.hosts == "per-device" else 0))
         return out
 
     def schedule(self, sys_cfg, merge_ns: float = 0.0) -> Timeline:
@@ -159,13 +186,15 @@ class QueryBatchExecutor(_FederatedExecutor):
     issued on every shard before query N's parked bitmaps are read back
     and merged host-side, so the host work overlaps PuD execution and
     shard readouts overlap other channels' compute in each device's bus
-    scheduler.  Each wave's merge is recorded as a host event shared by
-    every shard's trace (one host-lane node joining all readouts --
-    across devices too, once federated).  Q5's second phase takes its
-    scalar from the first phase's merge over the GLOBAL bitmap (a host
-    barrier): the dependent wave is created during that merge AND
-    declares it via ``after_host``, so the scheduled timeline -- not
-    just the record order -- contains the pipeline bubble.
+    scheduler.  Each wave's merge is recorded as a reduction TREE: one
+    per-shard merge leaf gated on that shard's readout (independent
+    leaves spread across the host's merge lanes) plus a root join
+    under one label shared by every shard's trace (one node joining
+    all leaves -- across devices too).  Q5's second phase takes its
+    scalar from the first phase's root join over the GLOBAL bitmap (a
+    host barrier): the dependent wave is created during that merge AND
+    declares the ROOT via ``after_host``, so the scheduled timeline --
+    not just the record order -- contains the pipeline bubble.
 
     Queries are tuples: ``("q1", fi, x0, x1)``, ``("q2"|"q3", fi, x0,
     x1, fj, y0, y1)``, ``("q4", fk, fi, x0, x1, fj, y0, y1)``,
@@ -178,10 +207,11 @@ class QueryBatchExecutor(_FederatedExecutor):
 
     def __init__(self, table, arch, devices, shards_per_device: int = 2,
                  method: str = "clutch", num_chunks: int | None = None,
-                 cols_per_bank: int = 65536, channels="auto") -> None:
+                 cols_per_bank: int = 65536, channels="auto",
+                 hosts: str = "shared", merge_tree: bool = True) -> None:
         from repro.apps.predicate import PudQueryEngine, Table
 
-        super().__init__(devices)
+        super().__init__(devices, hosts=hosts, merge_tree=merge_tree)
         if shards_per_device < 1:
             raise ValueError("need at least one shard per device")
         QueryBatchExecutor._uid += 1
@@ -250,14 +280,17 @@ class QueryBatchExecutor(_FederatedExecutor):
                     if buf in last_r_by_buf[s]:
                         after += (last_r_by_buf[s][buf],)
                 # host barrier: a Q5 phase-2 wave may not start before
-                # the merge that produced its scalar bounds
+                # the merge tree's ROOT produced its scalar bounds
                 after_host = (wave["hids"][s],) if wave.get("hids") else ()
                 eng.submit(wave["kind"], wave["params"], buf,
                            segment=f"{tag}:c", after=after,
                            after_host=after_host)
                 prev_c[s] = eng.sub.trace.current_segment
                 c_segs.append(prev_c[s])
-            self._last_tags.append([f"{tag}:c", f"{tag}:r", f"{tag}:h"])
+            tags = [f"{tag}:c", f"{tag}:r", f"{tag}:h"]
+            if self.merge_tree:
+                tags += [f"{tag}:h.s{s}" for s in range(len(engines))]
+            self._last_tags.append(tags)
             return (wave, w, buf, c_segs)
 
         def collect(item) -> None:
@@ -265,32 +298,69 @@ class QueryBatchExecutor(_FederatedExecutor):
             tag = f"{base}.w{wi}"
             words = []
             hids = []
+            leaf_hids: list[int] = []
             for s, eng in enumerate(engines):
                 # the readout depends only on the compute segment that
                 # parked this buffer, not on later waves
                 last_r_by_buf[s][buf] = eng.sub.trace.begin_segment(
                     f"{tag}:r", after=(c_segs[s],))
                 words.append(eng.read_parked(buf))
-                # one shared label across shards (and devices) == one
-                # host-lane node joining every shard's readout; merges
-                # chain serially
-                hids.append(eng.sub.trace.add_host_event(
-                    f"{tag}:h", after=(last_r_by_buf[s][buf],),
-                    after_host=() if prev_h[s] is None else (prev_h[s],),
-                    bytes_in=eng.sub.num_banks * eng.sub.num_cols / 8))
-                prev_h[s] = hids[s]
+                tr = eng.sub.trace
+                readout_bytes = eng.sub.num_banks * eng.sub.num_cols / 8
+                if self.merge_tree:
+                    # per-shard merge leaf: starts as soon as ITS
+                    # readout lands, independent of the other shards
+                    leaf = tr.add_host_event(
+                        f"{tag}:h.s{s}", after=(last_r_by_buf[s][buf],),
+                        bytes_in=readout_bytes)
+                    # reduction-tree join: one shared label across every
+                    # shard's trace (and every device's) == ONE root
+                    # node gated on all the leaves; it consumes the
+                    # leaves' merged bitmaps, so its fallback bytes are
+                    # the shard's OUTPUT bits -- total bytes conserved
+                    # across the tree, never multiplied by lane count
+                    hids.append(tr.add_host_event(
+                        f"{tag}:h", after=(), after_host=(leaf,),
+                        bytes_in=(self.bounds[s][1]
+                                  - self.bounds[s][0]) / 8))
+                    leaf_hids.append(leaf)
+                else:
+                    # PR-4 monolithic recording: one node per wave,
+                    # chained after the previous wave's merge; the
+                    # parallelism hint still lets a multi-lane host
+                    # gang its internally-independent shard merges
+                    hids.append(tr.add_host_event(
+                        f"{tag}:h", after=(last_r_by_buf[s][buf],),
+                        after_host=() if prev_h[s] is None
+                        else (prev_h[s],),
+                        bytes_in=readout_bytes,
+                        parallelism=len(engines)))
+                    prev_h[s] = hids[s]
+
+            leaf_ns: list[float] = []
 
             def merge() -> None:
-                bitmap = np.concatenate(
-                    [eng.merge_words(ws)
-                     for eng, ws in zip(engines, words)])
-                wave["merge"](bitmap)
+                bitmaps = []
+                for eng, ws in zip(engines, words):
+                    t0 = time.perf_counter()
+                    bitmaps.append(eng.merge_words(ws))
+                    leaf_ns.append((time.perf_counter() - t0) * 1e9)
+                wave["merge"](np.concatenate(bitmaps))
             self._last_host.measure(merge)
             merge_ns = self._last_host.samples_ns[-1]
-            for s, eng in enumerate(engines):
-                eng.sub.trace.set_host_duration(hids[s], merge_ns)
+            if self.merge_tree:
+                # the join is everything the leaves didn't cover (the
+                # concatenation + the query's aggregate)
+                root_ns = max(merge_ns - sum(leaf_ns), 0.0)
+                for s, eng in enumerate(engines):
+                    eng.sub.trace.set_host_duration(
+                        leaf_hids[s], leaf_ns[s])
+                    eng.sub.trace.set_host_duration(hids[s], root_ns)
+            else:
+                for s, eng in enumerate(engines):
+                    eng.sub.trace.set_host_duration(hids[s], merge_ns)
             # a dependent wave enqueued during this merge (Q5 phase 2)
-            # is barred on this wave's merge event
+            # is barred on this wave's root join event
             for queued in work_ref[0]:
                 if queued.get("barrier") and "hids" not in queued:
                     queued["hids"] = list(hids)
@@ -376,11 +446,12 @@ class GbdtBatchExecutor(_FederatedExecutor):
 
     def __init__(self, forest, arch, devices, groups_per_device: int = 2,
                  banks_per_group: int = 4,
-                 num_chunks: int | None = None, channels="auto") -> None:
+                 num_chunks: int | None = None, channels="auto",
+                 hosts: str = "shared", merge_tree: bool = True) -> None:
         from repro.apps.gbdt import GbdtPudEngine
         from repro.apps.pipeline import HostTimer
 
-        super().__init__(devices)
+        super().__init__(devices, hosts=hosts, merge_tree=merge_tree)
         if groups_per_device < 1:
             raise ValueError("need at least one group per device")
         GbdtBatchExecutor._uid += 1
@@ -430,10 +501,13 @@ class GbdtBatchExecutor(_FederatedExecutor):
                     widths: list[tuple[int, int, int | None]]) -> None:
             words = []
             hids = []
+            leaf_hids: list[int | None] = []
+            active = sum(1 for wd, _, _ in widths if wd)
             for g, (wd, buf, c_seg) in enumerate(widths):
                 if wd == 0:
                     words.append(None)
                     hids.append(None)
+                    leaf_hids.append(None)
                     continue
                 tr = engines[g].sub.trace
                 # the readout depends only on the compute segment that
@@ -441,26 +515,55 @@ class GbdtBatchExecutor(_FederatedExecutor):
                 prev_r[g] = tr.begin_segment(
                     f"{base}.w{w}:r", after=(c_seg,))
                 words.append(engines[g]._read_wave(buf))
-                # the leaf gather/merge is host work: one shared label
-                # across groups == one host-lane node joining their
-                # readouts, chained after the previous wave's merge
-                hids.append(tr.add_host_event(
-                    f"{base}.w{w}:h", after=(prev_r[g],),
-                    after_host=() if prev_h[g] is None else (prev_h[g],),
-                    bytes_in=engines[g].sub.num_banks *
-                    engines[g].sub.num_cols / 8))
-                prev_h[g] = hids[g]
+                readout_bytes = (engines[g].sub.num_banks *
+                                 engines[g].sub.num_cols / 8)
+                if self.merge_tree:
+                    # per-group leaf gather: waits only on its own
+                    # group's readout, so gathers spread across lanes
+                    leaf_hids.append(tr.add_host_event(
+                        f"{base}.w{w}:h.g{g}", after=(prev_r[g],),
+                        bytes_in=readout_bytes))
+                    # reduction-tree join assembling the wave's
+                    # predictions (shared label == one root node over
+                    # every participating group's gather); fallback
+                    # bytes are the group's OUTPUT predictions
+                    hids.append(tr.add_host_event(
+                        f"{base}.w{w}:h", after=(),
+                        after_host=(leaf_hids[g],), bytes_in=wd * 4.0))
+                else:
+                    # PR-4 monolithic recording (parallelism hint keeps
+                    # multi-lane hosts useful for legacy streams)
+                    leaf_hids.append(None)
+                    hids.append(tr.add_host_event(
+                        f"{base}.w{w}:h", after=(prev_r[g],),
+                        after_host=() if prev_h[g] is None
+                        else (prev_h[g],),
+                        bytes_in=readout_bytes, parallelism=active))
+                    prev_h[g] = hids[g]
+
+            leaf_ns: dict[int, float] = {}
 
             def merge() -> None:
                 for g, (wd, _, _) in enumerate(widths):
                     if wd:
+                        t0 = time.perf_counter()
                         preds_out.append(
                             engines[g]._merge_wave(words[g], wd)[1])
+                        leaf_ns[g] = (time.perf_counter() - t0) * 1e9
             self._last_host.measure(merge)
             merge_ns = self._last_host.samples_ns[-1]
-            for g, hid in enumerate(hids):
-                if hid is not None:
-                    engines[g].sub.trace.set_host_duration(hid, merge_ns)
+            if self.merge_tree:
+                root_ns = max(merge_ns - sum(leaf_ns.values()), 0.0)
+                for g, hid in enumerate(hids):
+                    if hid is not None:
+                        tr = engines[g].sub.trace
+                        tr.set_host_duration(leaf_hids[g], leaf_ns[g])
+                        tr.set_host_duration(hid, root_ns)
+            else:
+                for g, hid in enumerate(hids):
+                    if hid is not None:
+                        engines[g].sub.trace.set_host_duration(
+                            hid, merge_ns)
 
         n_waves = math.ceil(X.shape[0] / self.wave_width)
         off = 0
@@ -484,8 +587,11 @@ class GbdtBatchExecutor(_FederatedExecutor):
                     f"{base}.w{w}:c", after=after)
                 eng._compute_wave(Xg, buf)
                 widths.append((Xg.shape[0], buf, prev_c[g]))
-            self._last_tags.append([f"{base}.w{w}:c", f"{base}.w{w}:r",
-                                    f"{base}.w{w}:h"])
+            tags = [f"{base}.w{w}:c", f"{base}.w{w}:r", f"{base}.w{w}:h"]
+            if self.merge_tree:
+                tags += [f"{base}.w{w}:h.g{g}"
+                         for g in range(len(engines))]
+            self._last_tags.append(tags)
             if pending is not None:
                 collect(*pending)
             pending = (w, widths)

@@ -30,6 +30,13 @@ and return a :class:`JobResult` carrying the merged result, the
 barrier-aware :class:`~repro.apps.pipeline.PipelineStats`, and the
 federated :class:`~repro.core.scheduler.Timeline`.
 
+The host side is concurrent: per-wave merges are recorded as
+reduction trees whose per-shard leaves spread over
+``sys_cfg.host_lanes`` merge lanes, and ``PudSession(...,
+hosts="per-device")`` gives every device its own host (local leaves,
+shared cross-device joins) -- ``stats.host_utilization`` shows whether
+a host lane is the pipeline ceiling.
+
 This replaces direct construction of ``PudQueryEngine`` /
 ``ShardedQueryPipeline`` / ``GbdtPudEngine`` / ``GbdtBatchPipeline``,
 which are now internal executors behind the session (the pipeline
@@ -103,8 +110,18 @@ class PudSession:
 
     def __init__(self, sys_cfg=cost.DESKTOP, devices=None,
                  num_devices: int = 1, arch: PuDArch = PuDArch.MODIFIED,
-                 num_rows: int = 1024, seed: int = 0) -> None:
+                 num_rows: int = 1024, seed: int = 0,
+                 hosts: str = "shared") -> None:
+        if hosts not in ("shared", "per-device"):
+            raise ValueError(
+                f"hosts must be 'shared' or 'per-device', got {hosts!r}")
         self.sys_cfg = sys_cfg
+        #: Fleet host model: "shared" = one host (with
+        #: ``sys_cfg.host_lanes`` merge lanes) drives every device;
+        #: "per-device" = each device schedules its merges on its OWN
+        #: host's lanes, with only cross-device reduction joins on the
+        #: shared host.
+        self.hosts = hosts
         if devices is not None:
             self.devices = list(devices)
             archs = {d.arch for d in self.devices}
@@ -164,7 +181,7 @@ class PudSession:
                 data, self.arch, self.devices,
                 shards_per_device=shards_per_device, method=method,
                 num_chunks=num_chunks, cols_per_bank=cols_per_bank,
-                channels=channels)
+                channels=channels, hosts=self.hosts)
 
         self.planner.admit(name, "table", build, pinned=pinned)
         return TableHandle(name=name, session=self,
@@ -187,7 +204,7 @@ class PudSession:
                 forest, self.arch, self.devices,
                 groups_per_device=groups_per_device,
                 banks_per_group=banks_per_group, num_chunks=num_chunks,
-                channels=channels)
+                channels=channels, hosts=self.hosts)
 
         self.planner.admit(name, "forest", build, pinned=pinned)
         return ForestHandle(name=name, session=self,
@@ -265,14 +282,17 @@ class PudSession:
         """Jointly scheduled timeline of every device's full recorded
         streams -- the session-lifetime view (LUT loads and all jobs;
         each :class:`JobResult` carries its own job-scoped timeline).
-        Device channels are re-keyed into per-device namespaces; the
-        single host lane spans the fleet."""
+        Device channels are re-keyed into per-device namespaces; host
+        events land on the session's host model (one shared host's
+        lanes, or per-device hosts with cross-device joins shared)."""
         from repro.core.scheduler import ChannelScheduler, rekey_stream
 
         stride = max(d.channels for d in self.devices)
-        streams = [rekey_stream(st, di, stride)
-                   for di, d in enumerate(self.devices)
-                   for st in d.streams()]
+        streams = [
+            rekey_stream(st, di, stride,
+                         host=di if self.hosts == "per-device" else 0)
+            for di, d in enumerate(self.devices)
+            for st in d.streams()]
         return ChannelScheduler(self.sys_cfg).schedule(streams)
 
     def cost_summary(self) -> dict:

@@ -27,6 +27,11 @@ request's own wave-completion time when the batch contains no
 host-barrier re-submission (Q5 inserts an extra dependent wave, whose
 re-ordered tags make per-wave attribution ambiguous -- those batches
 report the batch makespan for every member).
+
+Deadlines: a request may carry ``deadline_ns``; at flush its scheduled
+latency is checked against it and an expired request fails alone
+(``ok=False``) -- serving hardening's first slice, the batch is never
+poisoned by one late member.
 """
 
 from __future__ import annotations
@@ -49,12 +54,19 @@ from repro.pud.session import (
 class PudRequest:
     """One client request: a query against a table resource, or an
     instance batch against a forest resource (exactly one of ``query``
-    / ``X`` must be set)."""
+    / ``X`` must be set).
+
+    ``deadline_ns`` is an optional per-request latency budget, checked
+    at flush against the request's scheduled completion time in the
+    batch it rode in: a request whose scheduled latency exceeds its
+    deadline comes back with ``ok=False`` (result withheld) while the
+    rest of the batch is unaffected."""
 
     rid: int
     resource: str | ResourceHandle
     query: Any | None = None          # a repro.pud.queries description
     X: np.ndarray | None = None       # [B, F] instances for a forest
+    deadline_ns: float | None = None  # scheduled-latency budget
 
     def __post_init__(self) -> None:
         if (self.query is None) == (self.X is None):
@@ -74,13 +86,18 @@ class PudRequest:
 @dataclass
 class PudResponse:
     """One request's outcome: its result, the shared stats of the batch
-    it rode in (``batch_size`` peers), and its latency attribution."""
+    it rode in (``batch_size`` peers), and its latency attribution.
+    ``ok`` is ``False`` for a request that missed its ``deadline_ns``
+    (the batch still executed; the result is withheld and ``error``
+    says by how much the deadline was missed)."""
 
     rid: int
     result: Any
     stats: Any                    # PipelineStats of the whole batch
     latency_ns: float
     batch_size: int = 1
+    ok: bool = True
+    error: str | None = None
 
 
 @dataclass
@@ -114,7 +131,14 @@ class PudService:
         failure (unknown resource, capacity-queued resource, ...) the
         pending queue is left intact so the caller can :meth:`cancel`
         the offending request and flush again; jobs of groups that had
-        already executed are re-run on the retry."""
+        already executed are re-run on the retry.
+
+        Requests carrying a ``deadline_ns`` are checked against their
+        scheduled latency in the batch's barrier-aware timeline (the
+        job makespan when per-wave attribution is ambiguous): an
+        expired request fails individually (``ok=False``, result
+        withheld) WITHOUT poisoning the batch -- its peers' responses
+        are exactly what they would have been."""
         pending = self._pending
         groups: dict[tuple[str, str], list[PudRequest]] = {}
         for req in pending:
@@ -136,25 +160,40 @@ class PudService:
                 done = job.stats.wave_done_ns
                 exact = len(done) == len(reqs)
                 for i, r in enumerate(reqs):
-                    by_rid[r.rid] = PudResponse(
+                    by_rid[r.rid] = self._deadline_checked(PudResponse(
                         rid=r.rid, result=results[i], stats=job.stats,
                         latency_ns=done[i] if exact
                         else job.stats.makespan_ns,
-                        batch_size=len(reqs))
+                        batch_size=len(reqs)), r)
             else:
                 sizes = [np.asarray(r.X).shape[0] for r in reqs]
                 X = np.concatenate([np.asarray(r.X) for r in reqs])
                 job = self.session.predict(handle, X)
                 off = 0
                 for r, sz in zip(reqs, sizes):
-                    by_rid[r.rid] = PudResponse(
+                    by_rid[r.rid] = self._deadline_checked(PudResponse(
                         rid=r.rid, result=job.result[off:off + sz],
                         stats=job.stats,
                         latency_ns=job.stats.makespan_ns,
-                        batch_size=len(reqs))
+                        batch_size=len(reqs)), r)
                     off += sz
         self._pending = []
         return [by_rid[r.rid] for r in pending]
+
+    @staticmethod
+    def _deadline_checked(resp: PudResponse,
+                          req: PudRequest) -> PudResponse:
+        """Fail ONE response whose scheduled latency blew its deadline;
+        the batch (and every peer response) is untouched."""
+        if req.deadline_ns is not None \
+                and resp.latency_ns > req.deadline_ns:
+            resp.result = None
+            resp.ok = False
+            resp.error = (
+                f"deadline exceeded: scheduled latency "
+                f"{resp.latency_ns:.0f} ns > deadline {req.deadline_ns:.0f}"
+                " ns")
+        return resp
 
     # ------------------------------------------------------------------ #
     def _handle(self, name: str, kind: str) -> ResourceHandle:

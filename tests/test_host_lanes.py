@@ -1,0 +1,361 @@
+"""Concurrent-host-model tests: k merge lanes on the scheduler
+(k=1 bit-exact vs the PR-4 serial-lane placement, lane monotonicity,
+gang scheduling via the ``parallelism`` hint, bytes-model conservation
+across a split merge), the executors' per-shard merge leaves +
+reduction-tree joins (Q5 and GBDT barrier correctness), per-device
+hosts on asymmetric fleets, per-lane busy / ``host_utilization``
+exposure, per-busy-lane energy accounting, and ``PudService`` request
+deadlines."""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import HostEvent, PuDArch, PuDOp, Segment
+from repro.core.scheduler import (
+    SHARED_HOST,
+    ChannelScheduler,
+    GroupStream,
+)
+from repro.pud import PudSession, Q1, Q2, Q3, Q4, Q5
+from repro.pud.executors import QueryBatchExecutor
+from repro.serve.pud_service import PudRequest, PudService
+
+MX = 255
+QA = dict(fi=0, x0=MX // 8, x1=MX // 2, fj=1, y0=MX // 4, y1=3 * MX // 4)
+
+
+def _lanes(k: int, sys_cfg=cost.DESKTOP) -> cost.SystemConfig:
+    return replace(sys_cfg, host_lanes=k)
+
+
+def _stream(label, footprint, ops, cols=4096, segs=None, segments=None,
+            host_events=(), host=0):
+    ops = tuple(ops)
+    return GroupStream(
+        label=label, footprint=footprint, cols_per_bank=cols, ops=ops,
+        segs=tuple(segs) if segs else (0,) * len(ops),
+        segments=tuple(segments) if segments else (Segment(0, "", ()),),
+        host_events=tuple(host_events), host=host)
+
+
+def _merge_stream(label, ch, dur, n_ops=1, host=0, bytes_in=0.0,
+                  parallelism=1):
+    """compute -> readout -> one merge event, on channel ``ch``."""
+    segments = (Segment(0, "c", ()), Segment(1, "r", (0,)))
+    events = (HostEvent(0, f"{label}-merge", after=(1,),
+                        duration_ns=dur, bytes_in=bytes_in,
+                        parallelism=parallelism),)
+    return _stream(label, {ch: {0: 4}},
+                   [PuDOp.ROWCOPY] * n_ops + [PuDOp.READ],
+                   segs=(0,) * n_ops + (1,), segments=segments,
+                   host_events=events, host=host)
+
+
+# --------------------- k-lane scheduler semantics ---------------------- #
+
+def test_two_lanes_overlap_independent_merges():
+    """Two independent merges on disjoint channels: ONE lane serializes
+    them (the PR-4 model), TWO lanes run them concurrently, and the
+    per-lane busy / utilization accounting reflects it."""
+    streams = [_merge_stream("a", 0, 2000.0), _merge_stream("b", 1, 2000.0)]
+    tl1 = ChannelScheduler(_lanes(1)).schedule(streams)
+    tl2 = ChannelScheduler(_lanes(2)).schedule(streams)
+    s1 = sorted(tl1.host_spans, key=lambda h: h.start_ns)
+    s2 = sorted(tl2.host_spans, key=lambda h: h.start_ns)
+    # k=1: serial host lane, exactly the old behavior
+    assert s1[1].start_ns >= s1[0].end_ns - 1e-9
+    assert tl1.host_busy_ns == pytest.approx(4000.0)
+    # k=2: both merges start when their readouts land -> they overlap
+    assert s2[1].start_ns < s2[0].end_ns
+    assert {h.lanes[0] for h in s2} == {0, 1}
+    assert tl2.makespan_ns < tl1.makespan_ns
+    assert tl2.host_busy_ns == pytest.approx(4000.0)  # work conserved
+    assert tl2.host_lane_busy_ns == pytest.approx(
+        {(0, 0): 2000.0, (0, 1): 2000.0})
+    assert tl2.host_utilization == pytest.approx(
+        2000.0 / tl2.makespan_ns)
+
+
+def test_k1_reproduces_pr4_serial_lane_placement():
+    """Bit-exact regression gate: with ``host_lanes=1`` and the PR-4
+    monolithic merge recording, every host node's scheduled start is
+    exactly ``max(previous node's end, its own readouts' end)`` -- the
+    serial-lane placement PR 3/4 shipped -- and there is exactly one
+    node per pipeline wave."""
+    t = P.Table.generate(12_000, 8, seed=5)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    ex = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=4096,
+                            merge_tree=False)
+    res = ex.run([("q1", 0, MX // 8, MX // 2),
+                  ("q3", *QA.values()),
+                  ("q5", 3, 2, *QA.values())])
+    assert (res[0] == P.reference_q1(t, 0, MX // 8, MX // 2)).all()
+    assert res[2] == P.reference_q5(t, 3, 2, *QA.values())
+    tl = ex.schedule(_lanes(1))
+    spans = sorted(tl.host_spans, key=lambda h: h.start_ns)
+    assert len(spans) == 4          # three queries + Q5 phase 2
+    prev_end = 0.0
+    for h in spans:
+        wave = h.label[:-2]         # "...wN:h" -> "...wN"
+        readout_end = max(w.end_ns for w in tl.waves
+                          if w.seg_label == f"{wave}:r")
+        assert h.start_ns == pytest.approx(max(prev_end, readout_end))
+        assert h.lanes == (0,)
+        prev_end = h.end_ns
+
+
+def test_lane_count_monotonicity_on_q5_batch():
+    """makespan(k+1) <= makespan(k): adding merge lanes never slows the
+    schedule of a Q5-bearing sharded query batch, and on this
+    host-heavy workload the second lane strictly helps."""
+    t = P.Table.generate(16_000, 8, seed=9)
+    dev = PuDDevice.from_system(
+        replace(cost.DESKTOP, channels=2), PuDArch.MODIFIED)
+    ex = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=4, cols_per_bank=4096)
+    ex.run([("q1", 0, MX // 8, MX // 2), ("q2", *QA.values()),
+            ("q5", 3, 2, *QA.values()), ("q3", *QA.values())])
+    sys2 = replace(cost.DESKTOP, channels=2)
+    spans = [ChannelScheduler(_lanes(k, sys2)).schedule(
+        ex._job_streams()).makespan_ns for k in (1, 2, 3, 4)]
+    for lo, hi in zip(spans[1:], spans):
+        assert lo <= hi + 1e-6
+    assert spans[1] < spans[0]
+
+
+def test_query_merge_tree_q5_barrier_on_root():
+    """Tree recording: per-shard leaves wait only on their own shard's
+    readout, the root join waits on every leaf, and Q5's phase-2 waves
+    wait on the ROOT -- on two lanes the leaves overlap."""
+    t = P.Table.generate(16_000, 8, seed=10)
+    dev = PuDDevice.from_system(
+        replace(cost.DESKTOP, channels=2), PuDArch.MODIFIED)
+    ex = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=4096)
+    res = ex.run([("q5", 3, 2, *QA.values())])
+    assert res[0] == P.reference_q5(t, 3, 2, *QA.values())
+    tl = ex.schedule(_lanes(2, replace(cost.DESKTOP, channels=2)))
+    leaves = [h for h in tl.host_spans if ".w0:h.s" in h.label]
+    (root,) = [h for h in tl.host_spans if h.label.endswith(".w0:h")]
+    assert len(leaves) == 2
+    for leaf in leaves:
+        s_idx = leaf.label.rsplit(".s", 1)[1]
+        own_readout = max(
+            w.end_ns for w in tl.waves
+            if w.group.endswith(f".s{s_idx}")
+            and w.seg_label.endswith("w0:r"))
+        assert leaf.start_ns >= own_readout - 1e-9
+        assert root.start_ns >= leaf.end_ns - 1e-9
+    p2 = [w for w in tl.waves if w.seg_label.endswith("w1:c")]
+    assert p2 and min(w.start_ns for w in p2) >= root.end_ns - 1e-9
+
+
+def test_gbdt_merge_tree_leaf_gathers_spread():
+    """GBDT leaf gathers become per-group host nodes + a root join;
+    predictions still match the reference and the root never precedes
+    a gather."""
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=4, n_bits=8, seed=3)
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 256, (16, 4), dtype=np.uint64)
+    session = PudSession(sys_cfg=_lanes(2), num_devices=1)
+    h = session.load_forest(forest, name="f", groups_per_device=2,
+                            banks_per_group=4)
+    job = session.predict(h, x)
+    np.testing.assert_allclose(job.result, G.reference_predict(forest, x),
+                               atol=1e-3)
+    tl = job.timeline
+    waves = {h2.label.split(":h")[0] for h2 in tl.host_spans}
+    for wave in waves:
+        leaves = [h2 for h2 in tl.host_spans
+                  if h2.label.startswith(f"{wave}:h.g")]
+        (root,) = [h2 for h2 in tl.host_spans
+                   if h2.label == f"{wave}:h"]
+        assert len(leaves) == 2
+        assert root.start_ns >= max(l.end_ns for l in leaves) - 1e-9
+    assert job.stats.host_lane_busy_ns
+    assert 0.0 < job.stats.host_utilization <= 1.0
+
+
+def test_parallelism_hint_gangs_monolithic_merge():
+    """A monolithic node carrying ``parallelism=p`` may gang over
+    min(p, k) lanes: wall-clock divides, busy lane-time is conserved,
+    and k=1 is untouched."""
+    B = 80_000.0
+    rate = cost.DESKTOP.host_mem_gbps
+    s = _merge_stream("a", 0, None, bytes_in=B, parallelism=4)
+    tl1 = ChannelScheduler(_lanes(1)).schedule([s])
+    tl4 = ChannelScheduler(_lanes(4)).schedule([s])
+    (h1,) = tl1.host_spans
+    (h4,) = tl4.host_spans
+    assert h1.duration_ns == pytest.approx(B / rate)
+    assert h1.busy_ns == pytest.approx(B / rate)
+    assert h4.duration_ns == pytest.approx(B / rate / 4)
+    assert len(h4.lanes) == 4
+    assert h4.busy_ns == pytest.approx(B / rate)    # conserved
+    # a serial event (parallelism=1) never speeds up from extra lanes
+    serial = _merge_stream("b", 0, None, bytes_in=B)
+    (hs,) = ChannelScheduler(_lanes(8)).schedule([serial]).host_spans
+    assert hs.duration_ns == pytest.approx(B / rate)
+
+
+def test_bytes_model_conserved_across_split_merge():
+    """An unmeasured merge split into per-shard leaves + a root join
+    must conserve total bytes: k lanes shorten the wall-clock but never
+    grant a k-times cheaper merge."""
+    B = 131_072.0
+    rate = cost.DESKTOP.host_mem_gbps
+    root_bytes = 512.0
+
+    def shard(label, ch):
+        segments = (Segment(0, "c", ()), Segment(1, "r", (0,)))
+        events = (
+            HostEvent(0, f"{label}-leaf", after=(1,), bytes_in=B / 2),
+            HostEvent(1, "join", after=(), after_host=(0,),
+                      bytes_in=root_bytes / 2),
+        )
+        return _stream(label, {ch: {0: 4}}, [PuDOp.ROWCOPY, PuDOp.READ],
+                       segs=(0, 1), segments=segments, host_events=events)
+
+    streams = [shard("a", 0), shard("b", 1)]
+    tl1 = ChannelScheduler(_lanes(1)).schedule(streams)
+    tl2 = ChannelScheduler(_lanes(2)).schedule(streams)
+    want_busy = B / rate + root_bytes / rate
+    assert tl1.host_busy_ns == pytest.approx(want_busy)
+    assert tl2.host_busy_ns == pytest.approx(want_busy)  # conserved
+    # two lanes overlap the two leaves -> host wall-clock shrinks by
+    # one leaf's duration, no more
+    assert tl1.host_wall_ns == pytest.approx(want_busy)
+    assert tl2.host_wall_ns == pytest.approx(
+        want_busy - B / 2 / rate)
+    assert tl2.makespan_ns < tl1.makespan_ns
+
+
+def test_per_device_hosts_asymmetric_fleet():
+    """Per-device hosts: each device's merge leaves run on its OWN
+    host's lanes (domains 0 and 1), only the cross-device root joins
+    run on the shared host, the host-barrier invariant still holds for
+    Q5's phase 2 on every device, and results stay bit-exact on an
+    asymmetric fleet."""
+    fast = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=2,
+                     banks_per_rank=16, cols_per_bank=4096)
+    slow = PuDDevice(PuDArch.MODIFIED, channels=1, ranks_per_channel=1,
+                     banks_per_rank=16, cols_per_bank=4096)
+    s = PudSession(sys_cfg=cost.DESKTOP, devices=[fast, slow],
+                   hosts="per-device")
+    t = P.Table.generate(24_000, 8, seed=12)
+    h = s.create_table(t, name="t", cols_per_bank=4096)
+    qs = [Q1(fi=0, x0=MX // 8, x1=MX // 2), Q3(**QA),
+          Q5(fl=3, fk=2, **QA)]
+    job = s.query(h, qs)
+    assert (job.result[0] == qs[0].reference(t)).all()
+    assert job.result[1] == qs[1].reference(t)
+    assert job.result[2] == qs[2].reference(t)
+    tl = job.timeline
+    # shards 0,1 live on device 0; shards 2,3 on device 1
+    for span in tl.host_spans:
+        if ":h.s" in span.label:
+            shard = int(span.label.rsplit(".s", 1)[1])
+            assert span.host == shard // 2
+        else:
+            assert span.host == SHARED_HOST
+    # Q5 phase 2 (wave 3) still waits for the fleet-wide root join
+    (root,) = [h2 for h2 in tl.host_spans if h2.label.endswith("w2:h")]
+    p2 = [w for w in tl.waves if w.seg_label.endswith("w3:c")]
+    assert p2 and min(w.start_ns for w in p2) >= root.end_ns - 1e-9
+    # per-device hosts add host resources: never slower than shared
+    ex = s.executor(h)
+    span_pd = ex.schedule(s.sys_cfg).makespan_ns
+    ex.hosts = "shared"
+    span_sh = ex.schedule(s.sys_cfg).makespan_ns
+    assert span_pd <= span_sh + 1e-6
+
+
+def test_timeline_cost_charges_per_busy_lane():
+    """Host energy: active power per busy lane-time, idle power only
+    where NO lane is active -- two overlapping merges on two lanes cost
+    double active power, not double idle."""
+    streams = [_merge_stream("a", 0, 2000.0), _merge_stream("b", 1, 2000.0)]
+    sys2 = _lanes(2)
+    tl = ChannelScheduler(sys2).schedule(streams)
+    kc = cost.timeline_cost(tl, sys2)
+    wave_e = sum(
+        cost.wave_energy_nj(w.op, w.banks, sys2)
+        if w.op not in (PuDOp.READ, PuDOp.WRITE)
+        else cost.transfer_energy_nj(w.io_bytes, sys2)
+        for w in tl.waves)
+    want = (wave_e + sys2.host_power_w * tl.host_busy_ns
+            + sys2.host_idle_power_w * (tl.makespan_ns - tl.host_wall_ns))
+    assert kc.energy_nj == pytest.approx(want)
+    assert tl.host_busy_ns == pytest.approx(4000.0)
+    assert tl.host_wall_ns < tl.host_busy_ns   # lanes overlapped
+
+
+def test_federate_preserves_domains_of_joint_timeline():
+    """A jointly scheduled per-device-host fleet timeline passed alone
+    to ``federate_timelines`` with a serving merge keeps its host
+    domains distinct (device hosts must not collapse onto one lane
+    key), and the merge node lands on the shared host."""
+    from repro.core.scheduler import federate_timelines
+
+    devs = [PuDDevice(PuDArch.MODIFIED, channels=1, ranks_per_channel=1,
+                      banks_per_rank=16, cols_per_bank=4096)
+            for _ in range(2)]
+    s = PudSession(sys_cfg=cost.DESKTOP, devices=devs,
+                   hosts="per-device")
+    t = P.Table.generate(8_000, 8, seed=3)
+    h = s.create_table(t, name="t", cols_per_bank=4096)
+    s.query(h, [Q1(fi=0, x0=10, x1=200), Q3(**QA)])
+    ex = s.executor(h)
+    tl = ex.schedule(cost.DESKTOP)
+    fed = federate_timelines([tl], merge_ns=321.0)
+    assert {sp.host for sp in tl.host_spans} \
+        == {sp.host for sp in fed.host_spans if sp.label
+            != "federate:merge"}
+    assert {0, 1} <= {sp.host for sp in fed.host_spans}
+    assert fed.host_spans[-1].label == "federate:merge"
+    assert fed.host_spans[-1].host == SHARED_HOST
+    assert fed.makespan_ns == pytest.approx(tl.makespan_ns + 321.0)
+    assert fed.host_busy_ns == pytest.approx(tl.host_busy_ns + 321.0)
+
+
+# ------------------------- service deadlines --------------------------- #
+
+def _service():
+    session = PudSession(sys_cfg=cost.DESKTOP, num_devices=1)
+    t = P.Table.generate(4_000, 8, seed=2)
+    session.create_table(t, name="events", shards_per_device=1,
+                         cols_per_bank=4096)
+    return PudService(session), t
+
+
+def test_deadline_expires_without_poisoning_batch():
+    svc, t = _service()
+    svc.submit(PudRequest(rid=1, resource="events",
+                          query=Q1(fi=0, x0=10, x1=200)))
+    svc.submit(PudRequest(rid=2, resource="events", query=Q3(**QA),
+                          deadline_ns=1e-3))     # impossibly tight
+    svc.submit(PudRequest(rid=3, resource="events", query=Q3(**QA),
+                          deadline_ns=1e15))     # generous
+    r1, r2, r3 = svc.flush()
+    assert r1.ok and (r1.result == P.reference_q1(t, 0, 10, 200)).all()
+    assert not r2.ok and r2.result is None
+    assert "deadline" in r2.error
+    assert r2.latency_ns > 0.0                   # attribution survives
+    assert r3.ok and r3.error is None
+    assert r3.result == P.reference_q3(t, *QA.values())
+    assert svc.queue_depth == 0                  # batch fully drained
+
+
+def test_deadline_default_is_off():
+    svc, t = _service()
+    svc.submit(PudRequest(rid=7, resource="events", query=Q3(**QA)))
+    (r,) = svc.flush()
+    assert r.ok and r.error is None
