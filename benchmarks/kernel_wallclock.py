@@ -1,11 +1,35 @@
 """Measured wall-clock of the TPU-kernel implementations (interpret mode
 on CPU -- relative numbers only; the roofline section covers the TPU
 target).  Also times the functional PuD machine simulator, including the
-bulk LUT-load path against the seed's per-row loop."""
+bulk LUT-load path against the seed's per-row loop.
+
+The fused section (``--smoke`` in CI, full shape for the committed
+``BENCH_kernel_wallclock.json``) races the SAME Q2/Q3 predicate three
+ways and gates on both parity and speed:
+
+  * **fused one-jit** -- one compiled ``shard_map`` program sweeping
+    every shard (:class:`repro.kernels.fused_session.FusedTableExec`);
+  * **chained per-kernel** -- the pre-fusion dispatch pattern: one
+    ``compare_gt_scalar`` launch per (shard, range, side) with the
+    AND/OR + popcount as separate jnp glue;
+  * **NumPy machine** -- the simulated-DRAM executor
+    (:class:`repro.pud.executors.QueryBatchExecutor`), the cost oracle.
+
+Exit is nonzero if any path disagrees bit-exactly, or if the fused
+one-jit path fails to beat the chained dispatch pattern.  Run as a
+script this writes ``BENCH_kernel_wallclock.json`` at the repo root.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
 
 import jax
 import jax.numpy as jnp
@@ -97,7 +121,142 @@ def lut_load_rows():
     ]
 
 
-def run():
+# ------------- fused one-jit vs chained per-kernel vs machine ---------- #
+
+def fused_section(smoke: bool = False):
+    """Time one Q2 (AND + bitmap) / Q3 (OR + count) predicate pair over
+    a record-sharded table on all three execution paths; gate parity
+    bit-exactly and fused-beats-chained before returning rows."""
+    from repro.apps import predicate as Pred
+    from repro.core import cost
+    from repro.core.device import PuDDevice
+    from repro.kernels.fused_session import FusedTableExec
+    from repro.pud.executors import QueryBatchExecutor
+
+    n, shards = (20_000, 2) if smoke else (200_000, 4)
+    n_bits, chunks = 8, 2
+    mx = (1 << n_bits) - 1
+    t = Pred.Table.generate(n, n_bits, num_features=3, seed=0)
+    ranges = [(0, mx // 8, mx // 2), (1, mx // 4, 3 * mx // 4)]
+    q2 = ("q2", *ranges[0], *ranges[1])
+    q3 = ("q3", *ranges[0], *ranges[1])
+
+    # fused: ONE jitted shard_map program for the whole resource
+    ex = FusedTableExec(t, num_shards=shards, num_chunks=chunks)
+    idx = jnp.asarray(np.concatenate([ex._range_idx(*r) for r in ranges]))
+    fn = ex._fn(2, True)
+
+    def fused():
+        _, total = fn(ex.lut, idx)
+        return int(jax.block_until_ready(total))
+
+    # chained: the pre-fusion pattern -- separate normal/complement LUTs
+    # per (shard, feature), one compare_gt_scalar dispatch per (shard,
+    # range, side), OR + popcount as jnp glue between launches
+    plan = make_plan(n_bits, chunks)
+    luts = []
+    for s in range(shards):
+        lo = s * ex.per
+        per_feat = []
+        for f in t.features:
+            v = np.zeros(ex.per, np.uint32)
+            chunk = np.asarray(f[lo:lo + ex.per], np.uint64)
+            v[:chunk.shape[0]] = chunk.astype(np.uint32)
+            per_feat.append((ops.encode_lut(jnp.asarray(v), plan),
+                             ops.encode_lut(jnp.asarray(v), plan,
+                                            complement=True)))
+        luts.append(per_feat)
+
+    def chained():
+        total = 0
+        for s in range(shards):
+            bm = None
+            for fi, x0, x1 in ranges:
+                glt, gle = ops.resolve_indices(plan, x0)
+                llt, lle = ops.resolve_indices(plan, mx - x1)
+                gt = ops.compare_gt_scalar(luts[s][fi][0],
+                                           jnp.asarray(glt),
+                                           jnp.asarray(gle))
+                lt = ops.compare_gt_scalar(luts[s][fi][1],
+                                           jnp.asarray(llt),
+                                           jnp.asarray(lle))
+                r = gt & lt
+                bm = r if bm is None else (bm | r)
+            total += int(jax.lax.population_count(bm)
+                         .astype(jnp.uint32).sum())
+        return total
+
+    # machine: the simulated-DRAM cost oracle
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    qx = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=shards, num_chunks=chunks)
+
+    def machine():
+        return qx.run([q3])[0]
+
+    def hosttime(f, reps=2):
+        f()  # warm (compile / trace caches)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = f()
+        return (time.perf_counter() - t0) / reps * 1e6, out
+
+    us_f, cnt_f = hosttime(fused)
+    us_c, cnt_c = hosttime(chained)
+    us_m, cnt_m = hosttime(machine)
+
+    # parity gates: counts AND bitmaps, all three paths vs NumPy
+    ref_cnt = Pred.reference_q3(t, *ranges[0], *ranges[1])
+    if not cnt_f == cnt_c == cnt_m == ref_cnt:
+        raise SystemExit(
+            f"fused-section count parity broke: fused={cnt_f} "
+            f"chained={cnt_c} machine={cnt_m} reference={ref_cnt}")
+    bm_fused = ex.run([q2])[0]
+    bm_machine = qx.run([q2])[0]
+    bm_ref = Pred.reference_q2(t, *ranges[0], *ranges[1])
+    if not ((bm_fused == bm_machine).all()
+            and (bm_fused == bm_ref).all()):
+        raise SystemExit("fused-section Q2 bitmap parity broke")
+    # speed gate: the whole point of the one-jit path
+    if us_f > us_c:
+        raise SystemExit(
+            f"fused one-jit ({us_f:.0f} us) lost to the chained "
+            f"per-kernel path ({us_c:.0f} us) on {n} records")
+
+    tag = f"q3_{n // 1000}k_{shards}shard"
+    return [
+        (f"fused_onejit_{tag}", round(us_f, 1), round(n / us_f, 1)),
+        (f"chained_perkernel_{tag}", round(us_c, 1), round(n / us_c, 1)),
+        (f"machine_numpy_{tag}", round(us_m, 1), round(n / us_m, 1)),
+        (f"fused_speedup_vs_chained_{tag}", round(us_f, 1),
+         round(us_c / us_f, 2)),
+        (f"fused_speedup_vs_machine_{tag}", round(us_f, 1),
+         round(us_m / us_f, 2)),
+        (f"fused_parity_exact_{tag}", 0.0, 1),
+    ]
+
+
+def write_bench_json(rows, smoke: bool, path: str | None = None) -> str:
+    """Emit ``BENCH_kernel_wallclock.json`` at the repo root: the rows
+    plus enough metadata to interpret them run-to-run."""
+    path = path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_kernel_wallclock.json")
+    payload = {
+        "benchmark": "kernel_wallclock",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "columns": ["name", "us_per_call", "derived"],
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def run(smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
     n = 1 << 18
@@ -126,4 +285,22 @@ def run():
     rows.append(("kernel_leaf_gather_256x512", round(us, 1),
                  round(256 * 512 / us, 1)))
     rows.extend(lut_load_rows())
+    rows.extend(fused_section(smoke))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fused-section config for CI regression "
+                         "smoke (parity + speed gates still enforced)")
+    args = ap.parse_args()
+    rows = fused_section(args.smoke) if args.smoke else run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    print(f"wrote {write_bench_json(rows, args.smoke)}")
+
+
+if __name__ == "__main__":
+    main()

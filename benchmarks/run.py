@@ -1,34 +1,57 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV
+# and write one ``BENCH_<name>.json`` per registered benchmark at the
+# repo root (fixed RNG seeds throughout, so every emitted number is
+# reproducible run-to-run).
+import json
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(
-    os.path.dirname(os.path.abspath(__file__))), "src"))
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
 
 from benchmarks import bank_scaling, channel_scaling, host_lane_scaling, \
     kernel_wallclock, paper_figs, roofline_report, session_scaling
 
 
+def _paper_figs():
+    return [row for fig in paper_figs.ALL_FIGS for row in fig()]
+
+
+#: name -> zero-arg callable returning [(name, us_per_call, derived)].
+#: Every entry gets its own ``BENCH_<name>.json`` at the repo root.
+REGISTRY = {
+    "paper_figs": _paper_figs,
+    "kernel_wallclock": kernel_wallclock.run,
+    "bank_scaling": bank_scaling.run,
+    "channel_scaling": channel_scaling.run,
+    "session_scaling": session_scaling.run,
+    "host_lane_scaling": host_lane_scaling.run,
+    "roofline_report": roofline_report.run,
+}
+
+
+def write_json(name: str, rows) -> str:
+    path = os.path.join(ROOT, f"BENCH_{name}.json")
+    payload = {
+        "benchmark": name,
+        "columns": ["name", "us_per_call", "derived"],
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
-    # Every benchmark below uses fixed RNG seeds (or is closed-form), so
-    # the emitted numbers are reproducible run-to-run.
     print("name,us_per_call,derived")
-    for fig in paper_figs.ALL_FIGS:
-        for name, us, derived in fig():
+    for bench, fn in REGISTRY.items():
+        rows = fn()
+        for name, us, derived in rows:
             print(f"{name},{us},{derived}")
-    for name, us, derived in kernel_wallclock.run():
-        print(f"{name},{us},{derived}")
-    for name, us, derived in bank_scaling.run():
-        print(f"{name},{us},{derived}")
-    for name, us, derived in channel_scaling.run():
-        print(f"{name},{us},{derived}")
-    for name, us, derived in session_scaling.run():
-        print(f"{name},{us},{derived}")
-    for name, us, derived in host_lane_scaling.run():
-        print(f"{name},{us},{derived}")
-    for name, us, derived in roofline_report.run():
-        print(f"{name},{us},{derived}")
+        write_json(bench, rows)
 
 
 if __name__ == '__main__':

@@ -129,6 +129,15 @@ def fit_oblivious_forest(X: np.ndarray, y: np.ndarray, num_trees: int,
     return ObliviousForest(feat, thr, leaves, n_bits, f)
 
 
+def assemble_leaves(leaves: np.ndarray, addrs: np.ndarray) -> np.ndarray:
+    """Host-side leaf assembly shared by the machine and fused backends:
+    ``leaves`` [T, L] float32, ``addrs`` [B, T] -> [B] float32 per-
+    instance sums.  Both backends MUST use this exact expression --
+    float32 summation order is part of the bit-exact parity contract."""
+    t = leaves.shape[0]
+    return leaves[np.arange(t)[None], addrs].sum(-1).astype(np.float32)
+
+
 def reference_leaf_addrs(forest: ObliviousForest, X: np.ndarray
                          ) -> np.ndarray:
     """[B, T] int32 ground-truth leaf addresses (depth 0 bit is MSB)."""
@@ -293,8 +302,7 @@ class GbdtPudEngine:
             self.wave_width, forest.num_trees, forest.depth)
         weights = 1 << np.arange(forest.depth)[::-1]
         addrs = (bits * weights).sum(-1).astype(np.int32)      # [W, T]
-        preds = forest.leaves[np.arange(forest.num_trees)[None],
-                              addrs].sum(-1).astype(np.float32)
+        preds = assemble_leaves(forest.leaves, addrs)
         return addrs[:w], preds[:w]
 
     def infer_one(self, x: np.ndarray) -> tuple[np.ndarray, float]:

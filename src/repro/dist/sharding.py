@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
@@ -65,6 +66,23 @@ def shardings(mesh, spec_tree, tree):
     return jax.tree.map(
         lambda spec, leaf: NamedSharding(mesh, fit(spec, leaf.shape, mesh)),
         spec_tree, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_mesh(num_shards: int, axis: str = "shards", devices=None):
+    """1-D mesh for sharding a ``num_shards``-long leading axis.
+
+    Uses the largest device-list prefix whose size divides
+    ``num_shards`` (so ``shard_map`` blocks stay uniform): on one CPU
+    device that is a size-1 mesh (the collective degenerates to the
+    identity), on an N-device fleet each device gets ``num_shards / d``
+    shards.  This is how :mod:`repro.kernels.fused_session` maps the
+    session's record shards onto real accelerator devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    d = 1
+    for k in range(1, min(num_shards, len(devices)) + 1):
+        if num_shards % k == 0:
+            d = k
+    return jax.sharding.Mesh(np.array(devices[:d]), (axis,))
 
 
 def _ambient_mesh():

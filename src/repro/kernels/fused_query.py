@@ -1,10 +1,25 @@
-"""Pallas TPU kernel: fused range predicate + popcount (beyond-paper).
+"""Pallas TPU kernels: fused predicates + popcount (beyond-paper).
 
-Evaluates ``x0 < B < x1`` in a single VMEM pass: the ``>``-side merge runs
-on the normal LUT, the ``<``-side on the complement LUT (the NOT-free
-rewrite Unmodified PuD uses), the two bitmaps are ANDed and popcounted --
-fusing what the paper executes as separate PuD predicate + reduction +
-host COUNT steps.  This is the Q1/Q3 hot path of :mod:`repro.apps.predicate`.
+``fused_range_count`` evaluates ``x0 < B < x1`` in a single VMEM pass:
+the ``>``-side merge runs on the normal LUT, the ``<``-side on the
+complement LUT (the NOT-free rewrite Unmodified PuD uses), the two
+bitmaps are ANDed and popcounted -- fusing what the paper executes as
+separate PuD predicate + reduction + host COUNT steps.
+
+``fused_predicate_banked`` generalizes that fusion to a WHOLE resource:
+one ``pallas_call`` grid over *(shard, word block)* evaluates one or
+two range predicates (AND/OR combined) against a stacked LUT holding
+every feature's normal+complement planes for every record shard, and
+accumulates a per-shard popcount -- the entire device half of a Q1-Q5
+query in ONE kernel launch, no per-group Python loop.  It is the
+batched engine behind :mod:`repro.kernels.fused_session`.
+
+``gbdt_leafbits_banked`` is the GBDT counterpart: one grid over
+*(instance, word block)* folds every feature's per-instance threshold
+comparison (per-instance gather indices, like the banked machine's
+broadcast wave with per-bank lookups) through the one-hot feature
+masks into the leaf-address bitmap row -- the whole per-wave compute
+loop of :class:`repro.apps.gbdt.GbdtPudEngine` as one kernel.
 """
 
 from __future__ import annotations
@@ -73,3 +88,164 @@ def fused_range_count(lut: jnp.ndarray, lut_c: jnp.ndarray,
         ],
         interpret=use_interpret(),
     )(idx, lut, lut_c)
+
+
+# --------------------------------------------------------------------- #
+# Resource-batched fused predicates (the fused-session engine)
+# --------------------------------------------------------------------- #
+
+def _vmem_block(rows: int, w: int, preferred: int,
+                budget_bytes: int = 4 << 20) -> int:
+    """Block width keeping an (rows, bw) uint32 LUT tile under the VMEM
+    budget.  The full width wins whenever the tile fits -- W is often
+    128 * odd (no power-of-two divisor above the lane count), and
+    falling back to 128-word blocks there would multiply grid steps by
+    W/128 for no locality gain.  Otherwise the largest power-of-two
+    divisor under budget (>= 128 lanes -- tiny tiles always fit)."""
+    if rows * w * 4 <= budget_bytes:
+        return w
+    from .common import choose_block
+    bw = choose_block(w, min(preferred, w))
+    while bw > 128 and rows * bw * 4 > budget_bytes:
+        bw //= 2
+    assert w % bw == 0, (w, bw)
+    return bw
+
+
+def _predicate_kernel(idx_ref, lut_ref, bm_ref, cnt_ref, *,
+                      num_chunks: int, num_ranges: int, disjunction: bool):
+    c = num_chunks
+
+    def row(i):
+        # dynamic one-sublane gather from the shard's VMEM-resident tile
+        return pl.load(lut_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None))
+                       )[0, 0]
+
+    def merge(off):
+        # Algorithm 1 over idx[off:off+C] (lt) / idx[off+C:off+2C] (le)
+        acc = row(idx_ref[off])
+        for j in range(1, c):
+            acc = maj3(acc, row(idx_ref[off + j]), row(idx_ref[off + c + j]))
+        return acc
+
+    def range_bm(rix):
+        # gt-side on the normal planes, lt-side on the complement planes
+        off = rix * 4 * c
+        return merge(off) & merge(off + 2 * c)
+
+    bm = range_bm(0)
+    for rix in range(1, num_ranges):
+        nxt = range_bm(rix)
+        bm = (bm | nxt) if disjunction else (bm & nxt)
+    bm_ref[0, ...] = bm
+    # per-shard popcount accumulated across the word-block grid axis
+    # (TPU grids are sequential per core; interpret mode likewise)
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        cnt_ref[0] = jnp.uint32(0)
+    cnt_ref[0] += jax.lax.population_count(bm).astype(jnp.uint32).sum()
+
+
+def fused_predicate_banked(lut: jnp.ndarray, idx: jnp.ndarray,
+                           num_chunks: int, num_ranges: int,
+                           disjunction: bool = False,
+                           block_words: int = 1024
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-launch Q1-Q3-shaped predicate over a whole sharded resource.
+
+    lut: [S, R, W] uint32 -- per record shard, every feature's stacked
+    normal planes followed by every feature's complement planes (row
+    offsets are the caller's business; see
+    :class:`repro.kernels.fused_session.FusedTableExec`).
+    idx: [num_ranges * 4 * C] int32 -- per range predicate, the
+    concatenation (gt_lt, gt_le, lt_lt, lt_le) of Algorithm 1 row
+    indices, already offset to the right feature block.  ``num_ranges``
+    is 1 (plain range) or 2 combined with AND (``disjunction=False``)
+    or OR.  Returns (bitmap [S, W] uint32, per-shard popcount [S]
+    uint32) -- bitmap AND/OR *and* COUNT leave the kernel in one pass.
+    """
+    s, r, w = lut.shape
+    assert r % SUBLANES == 0 and w % 128 == 0, (r, w)
+    assert idx.shape == (num_ranges * 4 * num_chunks,), idx.shape
+    bw = _vmem_block(r, w, block_words)
+    kernel = functools.partial(_predicate_kernel, num_chunks=num_chunks,
+                               num_ranges=num_ranges,
+                               disjunction=disjunction)
+    return pl.pallas_call(
+        kernel,
+        grid=(s, w // bw),
+        in_specs=[
+            pl.BlockSpec((num_ranges * 4 * num_chunks,),
+                         lambda si, i: (0,)),
+            pl.BlockSpec((1, r, bw), lambda si, i: (si, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda si, i: (si, i)),
+            pl.BlockSpec((1,), lambda si, i: (si,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, w), jnp.uint32),
+            jax.ShapeDtypeStruct((s,), jnp.uint32),
+        ],
+        interpret=use_interpret(),
+    )(idx, lut)
+
+
+def _leafbits_kernel(idx_ref, lut_ref, mask_ref, bm_ref, *,
+                     num_chunks: int, num_features: int):
+    c = num_chunks
+
+    def row(i):
+        return pl.load(lut_ref, (pl.ds(i, 1), slice(None)))[0]
+
+    def merge(off):
+        acc = row(idx_ref[0, off])
+        for j in range(1, c):
+            acc = maj3(acc, row(idx_ref[0, off + j]),
+                       row(idx_ref[0, off + c + j]))
+        return acc
+
+    acc = jnp.zeros_like(mask_ref[0])
+    for f in range(num_features):
+        # cmp = Clutch(v_f < thresholds); acc |= cmp AND mask_f
+        cmp = merge(f * 2 * c)
+        acc = acc | (cmp & mask_ref[f])
+    bm_ref[0, ...] = acc
+
+
+def gbdt_leafbits_banked(lut: jnp.ndarray, masks: jnp.ndarray,
+                         idx: jnp.ndarray, num_chunks: int,
+                         num_features: int, block_words: int = 1024
+                         ) -> jnp.ndarray:
+    """One-launch GBDT leaf-address bitmap for a whole instance batch.
+
+    lut: [R, W] uint32 -- the forest's threshold LUT planes (shared by
+    every instance, like the machine's broadcast wave).  masks:
+    [F_pad, W] uint32 packed one-hot feature masks (rows past
+    ``num_features`` are padding).  idx: [B, F * 2 * C] int32 --
+    per instance, per feature, (lt, le) Algorithm 1 row indices for
+    that instance's feature value (the per-bank gather of the machine
+    model).  Returns the leaf-address bitmap [B, W] uint32.
+    """
+    r, w = lut.shape
+    fp, wm = masks.shape
+    b = idx.shape[0]
+    assert wm == w and r % SUBLANES == 0 and w % 128 == 0, (r, w, fp)
+    assert fp % SUBLANES == 0 and fp >= num_features
+    assert idx.shape == (b, num_features * 2 * num_chunks), idx.shape
+    bw = _vmem_block(r + fp, w, block_words)
+    kernel = functools.partial(_leafbits_kernel, num_chunks=num_chunks,
+                               num_features=num_features)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, w // bw),
+        in_specs=[
+            pl.BlockSpec((1, num_features * 2 * num_chunks),
+                         lambda bi, i: (bi, 0)),
+            pl.BlockSpec((r, bw), lambda bi, i: (0, i)),
+            pl.BlockSpec((fp, bw), lambda bi, i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bw), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.uint32),
+        interpret=use_interpret(),
+    )(idx, lut, masks)

@@ -1,0 +1,287 @@
+"""JAX-native fused execution backend for :class:`repro.pud.PudSession`.
+
+Public API
+----------
+``PudSession(backend="fused")`` routes ``query``/``predict`` jobs here
+instead of through the NumPy machine executors.  Two executors mirror
+the machine path's semantics exactly:
+
+* :class:`FusedTableExec` -- Q1-Q5 over a record-sharded table.  Every
+  feature's normal AND complement LUT planes for every record shard are
+  stacked into ONE ``[shards, rows, words]`` array at build time; a
+  query then runs as ONE jitted program: a single
+  :func:`repro.kernels.fused_query.fused_predicate_banked` grid over
+  *(shard, word block)* evaluates the whole WHERE clause (both range
+  sides, AND/OR combination, per-shard popcount) and a ``psum`` over a
+  ``shard_map`` mesh (built from :func:`repro.dist.sharding.shard_mesh`)
+  joins the shard counts -- the PR-5 merge tree's leaves become the
+  kernel's vectorized popcounts and its root join becomes the
+  collective.  No per-group Python loop, no per-wave host round trip
+  for pure-device segments.
+* :class:`FusedGbdtExec` -- GBDT inference.  The forest's threshold LUT
+  and one-hot feature masks are device-resident; one
+  :func:`~repro.kernels.fused_query.gbdt_leafbits_banked` grid over
+  *(instance, word block)* folds every feature comparison into each
+  instance's leaf-address bitmap, sharded over the mesh on the instance
+  axis.
+
+Bit-exact parity contract (tested in ``tests/test_fused_session.py``):
+bitmaps, counts and leaf addresses are exact integer/boolean math on
+device; the few FLOAT aggregates (Q4/Q5 averages, GBDT leaf sums) are
+finished HOST-side with the same NumPy expressions the machine
+executors use (:func:`repro.apps.gbdt.assemble_leaves` is shared), so
+summation order -- and therefore every result -- is identical to
+``backend="machine"``.
+
+Compile-cache invariant: feature indices and scalars are resolved to
+row-index *arrays* (host-side, memoized via
+:func:`repro.kernels.ops.resolve_indices`) and passed as traced
+operands, so ONE compiled executable per ``(plan, table shape, query
+kind)`` serves every (feature, scalar) combination.  ``trace_counts``
+exposes the per-kind trace counter the zero-retrace regression test
+asserts on.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.encoding import ChunkPlan, make_plan
+from repro.core.machine import pack_bits, unpack_bits
+from repro.dist.sharding import shard_mesh
+
+from .common import SUBLANES, round_up
+from .fused_query import fused_predicate_banked, gbdt_leafbits_banked
+from .ops import encode_lut, resolve_indices, resolve_indices_banked
+
+
+class FusedTableExec:
+    """One-jit Q1-Q5 execution over a record-sharded table.
+
+    ``table`` is duck-typed (``n_bits``, ``features``, ``num_records``
+    -- a :class:`repro.apps.predicate.Table` or equivalent).  Records
+    shard exactly like :class:`repro.pud.executors.QueryBatchExecutor`
+    (``per = ceil(n / num_shards)`` contiguous records per shard), so
+    bitmap order matches the machine path bit for bit.  Padding columns
+    encode ``B = 0``; the gt-side of every range predicate is 0 there
+    (scalars are non-negative), the AND kills the complement side, and
+    popcounts need no masking.
+    """
+
+    def __init__(self, table, num_shards: int, num_chunks: int,
+                 mesh=None) -> None:
+        self.table = table
+        self.plan: ChunkPlan = make_plan(table.n_bits, num_chunks)
+        self.num_chunks = self.plan.num_chunks
+        self.num_features = len(table.features)
+        self.num_shards = num_shards
+        self.mx = (1 << table.n_bits) - 1
+        n = table.num_records
+        self.per = math.ceil(n / num_shards)
+        self.mesh = mesh if mesh is not None else shard_mesh(num_shards)
+        # Per shard: every feature's normal LUT block, then every
+        # feature's complement block, all R_pad rows tall (encode_lut
+        # pads uniformly given a uniform shard length).
+        shards = []
+        for s in range(num_shards):
+            lo = s * self.per
+            cols = []
+            for comp in (False, True):
+                for f in table.features:
+                    v = np.zeros(self.per, np.uint32)
+                    chunk = np.asarray(f[lo:lo + self.per], np.uint64)
+                    v[:chunk.shape[0]] = chunk.astype(np.uint32)
+                    cols.append(encode_lut(jnp.asarray(v), self.plan,
+                                           complement=comp))
+            shards.append(jnp.concatenate(cols, axis=0))
+        self.lut = jnp.stack(shards)               # [S, 2*F*R_pad, W]
+        self.r_pad = int(shards[0].shape[0]) // (2 * self.num_features)
+        #: traces per query kind -- the zero-retrace test's probe.
+        self.trace_counts: dict[tuple, int] = {}
+        self._fns: dict[tuple, object] = {}
+        self._idx_cache: dict[tuple, np.ndarray] = {}
+
+    # ---------------------------- compiled fns ------------------------- #
+    def _fn(self, num_ranges: int, disjunction: bool):
+        """The compiled executable for one query kind: kernel sweep over
+        every shard + ``psum`` root join, under one ``jit``.  Cached per
+        ``(num_ranges, disjunction)``; scalars/features arrive as the
+        traced ``idx`` operand, so repeated queries of a kind re-trace
+        zero times."""
+        key = (num_ranges, disjunction)
+        fn = self._fns.get(key)
+        if fn is None:
+            c, axis = self.num_chunks, "shards"
+
+            def local(lut, idx):
+                # executes at trace time only -> counts (re)traces
+                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                bm, cnt = fused_predicate_banked(
+                    lut, idx, c, num_ranges, disjunction)
+                total = jax.lax.psum(cnt.astype(jnp.uint32).sum(), axis)
+                return bm, total
+
+            # check_rep=False: pallas_call has no replication rule; the
+            # psum output is genuinely replicated regardless.
+            fn = jax.jit(shard_map(
+                local, mesh=self.mesh,
+                in_specs=(P(axis), P()), out_specs=(P(axis), P()),
+                check_rep=False))
+            self._fns[key] = fn
+        return fn
+
+    # ---------------------------- index plumbing ----------------------- #
+    def _range_idx(self, fi: int, x0: int, x1: int) -> np.ndarray:
+        """Algorithm 1 row indices for ``x0 < f_fi < x1`` inside the
+        stacked LUT: gt-side on feature ``fi``'s normal block, lt-side
+        on its complement block with scalar ``MAX - x1`` (the NOT-free
+        rewrite: ``B < x1  <=>  MAX-x1 < MAX-B``)."""
+        key = (fi, x0, x1)
+        idx = self._idx_cache.get(key)
+        if idx is None:
+            gt_lt, gt_le = resolve_indices(self.plan, x0)
+            lt_lt, lt_le = resolve_indices(self.plan, self.mx - x1)
+            bn = np.int32(fi * self.r_pad)
+            bc = np.int32((self.num_features + fi) * self.r_pad)
+            idx = np.concatenate([gt_lt + bn, gt_le + bn,
+                                  lt_lt + bc, lt_le + bc]).astype(np.int32)
+            self._idx_cache[key] = idx
+        return idx
+
+    def _predicate(self, ranges: list[tuple[int, int, int]],
+                   disjunction: bool):
+        idx = np.concatenate([self._range_idx(*r) for r in ranges])
+        bm, total = self._fn(len(ranges), disjunction)(
+            self.lut, jnp.asarray(idx))
+        return bm, total
+
+    def _bitmap(self, bm: jnp.ndarray) -> np.ndarray:
+        """[S, W] packed words -> bool [num_records] in table order."""
+        bits = unpack_bits(np.asarray(bm), self.per)        # [S, per]
+        return bits.reshape(-1)[: self.table.num_records].astype(bool)
+
+    # ------------------------------- queries --------------------------- #
+    def run(self, queries: list[tuple]) -> list:
+        """Execute a batch of executor-format query tuples; returns one
+        result per query, bit-exact vs ``QueryBatchExecutor.run``."""
+        return [self._one(q) for q in queries]
+
+    def _one(self, q: tuple):
+        name, *p = q
+        if name == "q1":
+            bm, _ = self._predicate([tuple(p)], False)
+            return self._bitmap(bm)
+        if name == "q2":
+            fi, x0, x1, fj, y0, y1 = p
+            bm, _ = self._predicate([(fi, x0, x1), (fj, y0, y1)], False)
+            return self._bitmap(bm)
+        if name == "q3":
+            fi, x0, x1, fj, y0, y1 = p
+            _, total = self._predicate([(fi, x0, x1), (fj, y0, y1)], True)
+            return int(total)
+        if name == "q4":
+            fk, fi, x0, x1, fj, y0, y1 = p
+            bm, _ = self._predicate([(fi, x0, x1), (fj, y0, y1)], False)
+            # host-side float finish, same expression as the machine path
+            vals = self.table.features[fk][self._bitmap(bm)]
+            return float(vals.mean()) if vals.size else 0.0
+        if name == "q5":
+            fl, fk, fi, x0, x1, fj, y0, y1 = p
+            bm, _ = self._predicate([(fi, x0, x1), (fj, y0, y1)], True)
+            vals = self.table.features[fk][self._bitmap(bm)]
+            avg = int(vals.mean()) if vals.size else 0
+            hi = min(2 * avg, self.mx)
+            if avg >= hi:
+                return 0
+            # phase 2 reuses the (1, False) executable -- new scalars,
+            # zero new traces
+            _, total = self._predicate([(fl, avg, hi)], False)
+            return int(total)
+        raise ValueError(f"unknown query {name!r}")
+
+
+class FusedGbdtExec:
+    """One-jit GBDT leaf-address computation for a whole batch.
+
+    ``forest`` is duck-typed (``thresholds``, ``feature_idx``,
+    ``leaves``, ``n_bits``, ``num_features``, ``num_trees``, ``depth``).
+    The device half (comparisons, masking, OR-accumulation into the
+    leaf-address bitmap) is exact integer math in one kernel grid over
+    *(instance, word block)*, sharded over the mesh on the instance
+    axis; leaf gathering/summation reuses the machine path's
+    :func:`repro.apps.gbdt.assemble_leaves` so predictions are
+    bit-exact vs ``backend="machine"``."""
+
+    def __init__(self, forest, num_chunks: int, mesh=None) -> None:
+        self.forest = forest
+        self.plan = make_plan(forest.n_bits, num_chunks)
+        self.num_chunks = self.plan.num_chunks
+        self.n_nodes = forest.num_trees * forest.depth
+        thr = np.asarray(forest.thresholds, np.uint64).reshape(-1)
+        self.lut = encode_lut(jnp.asarray(thr.astype(np.uint32)), self.plan)
+        f = forest.num_features
+        flat_feat = np.asarray(forest.feature_idx).reshape(-1)
+        mask_bits = (flat_feat[None, :] ==
+                     np.arange(f)[:, None]).astype(np.uint8)
+        words = pack_bits(mask_bits)                     # [F, ceil(n/32)]
+        f_pad, w = round_up(f, SUBLANES), int(self.lut.shape[1])
+        masks = np.zeros((f_pad, w), np.uint32)
+        masks[:f, :words.shape[1]] = words
+        self.masks = jnp.asarray(masks)
+        self.mesh = mesh if mesh is not None else shard_mesh(
+            max(jax.device_count(), 1))
+        self.trace_counts: dict[tuple, int] = {}
+        self._fn_cached = None
+
+    def _fn(self):
+        if self._fn_cached is None:
+            c, f = self.num_chunks, self.forest.num_features
+
+            def local(lut, masks, idx):
+                self.trace_counts["gbdt"] = \
+                    self.trace_counts.get("gbdt", 0) + 1
+                return gbdt_leafbits_banked(lut, masks, idx, c, f)
+
+            axis = "shards"
+            self._fn_cached = jax.jit(shard_map(
+                local, mesh=self.mesh,
+                in_specs=(P(), P(), P(axis)), out_specs=P(axis),
+                check_rep=False))
+        return self._fn_cached
+
+    def leaf_addrs(self, X: np.ndarray) -> np.ndarray:
+        """[B, F] quantized instances -> [B, T] int32 leaf addresses
+        (exact; the whole device half of inference)."""
+        forest, plan = self.forest, self.plan
+        X = np.asarray(X)
+        b = X.shape[0]
+        d = self.mesh.shape["shards"]
+        b_pad = round_up(max(b, 1), d)
+        if b_pad != b:
+            X = np.concatenate([X, np.repeat(X[:1], b_pad - b, axis=0)])
+        cols = []
+        for f in range(forest.num_features):
+            lt, le = resolve_indices_banked(plan, X[:, f].astype(np.int64))
+            cols += [lt, le]
+        idx = np.concatenate(cols, axis=1).astype(np.int32)
+        bm = self._fn()(self.lut, self.masks, jnp.asarray(idx))
+        bits = unpack_bits(np.asarray(bm), self.n_nodes)   # [B_pad, nodes]
+        bits = bits.reshape(b_pad, forest.num_trees, forest.depth)
+        weights = 1 << np.arange(forest.depth)[::-1]
+        return (bits * weights).sum(-1).astype(np.int32)[:b]
+
+    def infer(self, X: np.ndarray) -> np.ndarray:
+        """[B, F] -> [B] float32 predictions, bit-exact vs the machine
+        executors (shared host-side leaf assembly)."""
+        from repro.apps.gbdt import assemble_leaves
+
+        X = np.asarray(X)
+        if X.shape[0] == 0:
+            return np.empty((0,), np.float32)
+        return assemble_leaves(self.forest.leaves, self.leaf_addrs(X))

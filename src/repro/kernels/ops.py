@@ -78,15 +78,27 @@ def lut_offsets(plan: ChunkPlan) -> tuple[tuple[int, ...], int, int]:
     return tuple(cp), off, off + 1
 
 
-def resolve_indices(plan: ChunkPlan, a: int) -> tuple[np.ndarray, np.ndarray]:
-    """Host-side Algorithm 1 index resolution: per-chunk ``lt``/``le`` row
-    indices with the boundary substitutions (const-0 / const-1 rows)."""
+@functools.lru_cache(maxsize=65536)
+def _resolve_scalar_cached(plan: ChunkPlan, a: int
+                           ) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Memoized core of :func:`resolve_indices`, keyed on ``(plan,
+    scalar)``: repeated jobs on a session (the common serving pattern)
+    skip the per-chunk Python loop entirely.  Returns tuples so cache
+    entries are immutable; callers get fresh arrays."""
     cp, zero_row, one_row = lut_offsets(plan)
     chunks = plan.split_scalar(a)
     lt, le = [], []
     for j, (c, k) in enumerate(zip(chunks, plan.widths)):
         lt.append(zero_row if c == (1 << k) - 1 else cp[j] + c)
         le.append(one_row if c == 0 else cp[j] + c - 1)
+    return tuple(lt), tuple(le)
+
+
+def resolve_indices(plan: ChunkPlan, a: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side Algorithm 1 index resolution: per-chunk ``lt``/``le`` row
+    indices with the boundary substitutions (const-0 / const-1 rows).
+    Memoized per ``(plan, scalar)``."""
+    lt, le = _resolve_scalar_cached(plan, int(a))
     return (np.asarray(lt, np.int32), np.asarray(le, np.int32))
 
 
@@ -116,16 +128,23 @@ def resolve_indices_banked(plan: ChunkPlan, a: np.ndarray
     """Per-bank Algorithm 1 index resolution: ``a`` is [B] int64 with
     the machine's convention that ``-1`` means the always-true
     comparison (both lookups resolve to the constant-one row).  Returns
-    ([B, C], [B, C]) int32 lt/le row indices."""
+    ([B, C], [B, C]) int32 lt/le row indices.  Fully vectorized -- no
+    per-bank Python loop -- so per-instance index plumbing stays off
+    the fused path's critical section."""
     a = np.asarray(a, np.int64)
+    if (a >= (1 << plan.n_bits)).any():
+        raise ValueError(
+            f"scalar out of range for {plan.n_bits} bits: {a.max()}")
+    cp, zero_row, one_row = lut_offsets(plan)
     lt = np.empty((a.shape[0], plan.num_chunks), np.int32)
     le = np.empty_like(lt)
-    _, _, one_row = lut_offsets(plan)
-    for b, ab in enumerate(a):
-        if ab < 0:
-            lt[b] = le[b] = one_row
-        else:
-            lt[b], le[b] = resolve_indices(plan, int(ab))
+    for j, (s, k) in enumerate(zip(plan.shifts, plan.widths)):
+        c = (a >> np.int64(s)) & np.int64((1 << k) - 1)
+        lt[:, j] = np.where(c == (1 << k) - 1, zero_row, cp[j] + c)
+        le[:, j] = np.where(c == 0, one_row, cp[j] + c - 1)
+    always = a < 0
+    lt[always] = one_row
+    le[always] = one_row
     return lt, le
 
 

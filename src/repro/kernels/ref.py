@@ -66,6 +66,54 @@ def fused_range_count_ref(lut: jnp.ndarray, lut_c: jnp.ndarray,
     return bm, cnt
 
 
+def fused_predicate_banked_ref(lut: jnp.ndarray, idx: jnp.ndarray,
+                               num_chunks: int, num_ranges: int,
+                               disjunction: bool = False
+                               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Resource-batched predicate oracle: lut [S, R, W] stacked planes,
+    idx [num_ranges * 4 * C] (per range: gt_lt, gt_le, lt_lt, lt_le,
+    already offset into the stacked row space).  Returns (bitmap
+    [S, W], per-shard popcount [S])."""
+    c = num_chunks
+
+    def one_shard(shard):
+        def rng(rix):
+            o = rix * 4 * c
+            gt = clutch_merge_ref(shard, idx[o:o + c], idx[o + c:o + 2 * c])
+            lt = clutch_merge_ref(shard, idx[o + 2 * c:o + 3 * c],
+                                  idx[o + 3 * c:o + 4 * c])
+            return gt & lt
+
+        bm = rng(0)
+        for rix in range(1, num_ranges):
+            bm = (bm | rng(rix)) if disjunction else (bm & rng(rix))
+        return bm
+
+    bm = jnp.stack([one_shard(lut[s]) for s in range(lut.shape[0])])
+    cnt = jax.lax.population_count(bm).astype(jnp.uint32).sum(axis=-1)
+    return bm, cnt
+
+
+def gbdt_leafbits_banked_ref(lut: jnp.ndarray, masks: jnp.ndarray,
+                             idx: jnp.ndarray, num_chunks: int,
+                             num_features: int) -> jnp.ndarray:
+    """Batched GBDT leaf-bitmap oracle: lut [R, W] threshold planes,
+    masks [F_pad, W] packed one-hot feature masks, idx [B, F * 2 * C]
+    per-instance (lt, le) row indices per feature.  Returns [B, W]."""
+    c = num_chunks
+
+    def one(row_idx):
+        acc = jnp.zeros(lut.shape[1], jnp.uint32)
+        for f in range(num_features):
+            o = f * 2 * c
+            cmp = clutch_merge_ref(lut, row_idx[o:o + c],
+                                   row_idx[o + c:o + 2 * c])
+            acc = acc | (cmp & masks[f])
+        return acc
+
+    return jnp.stack([one(idx[b]) for b in range(idx.shape[0])])
+
+
 def leaf_gather_ref(addrs: jnp.ndarray, leaves: jnp.ndarray) -> jnp.ndarray:
     """GBDT leaf aggregation.
 

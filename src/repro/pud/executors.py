@@ -242,6 +242,23 @@ class QueryBatchExecutor(_FederatedExecutor):
         from repro.apps.pipeline import HostTimer
         self._last_host = HostTimer()
 
+    @property
+    def num_shards(self) -> int:
+        return len(self.bounds)
+
+    def fused_config(self) -> dict:
+        """Build recipe for the JAX-native fast path
+        (:class:`repro.kernels.fused_session.FusedTableExec`): the same
+        table, shard count and chunk plan this machine executor placed,
+        so the two backends evaluate identical layouts."""
+        chunks = getattr(self.engines[0], "num_chunks", None)
+        if chunks is None:
+            raise TypeError(
+                "the fused backend supports the clutch method only "
+                "(bit-serial tables have no chunk plan)")
+        return {"table": self.table, "num_shards": len(self.bounds),
+                "num_chunks": chunks}
+
     # ------------------------------------------------------------------ #
     def run(self, queries: list[tuple]) -> list:
         """Run a batch of queries through the async pipeline; returns
@@ -472,6 +489,12 @@ class GbdtBatchExecutor(_FederatedExecutor):
         self._batch = 0
         self._last_tags: list[list[str]] = []
         self._last_host = HostTimer()
+
+    def fused_config(self) -> dict:
+        """Build recipe for the JAX-native fast path
+        (:class:`repro.kernels.fused_session.FusedGbdtExec`)."""
+        return {"forest": self.forest,
+                "num_chunks": self.engines[0].num_chunks}
 
     def infer(self, X: np.ndarray) -> np.ndarray:
         """Pipelined batch inference; functionally identical to the

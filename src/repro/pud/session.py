@@ -37,6 +37,25 @@ hosts="per-device")`` gives every device its own host (local leaves,
 shared cross-device joins) -- ``stats.host_utilization`` shows whether
 a host lane is the pipeline ceiling.
 
+Two backends, one contract
+--------------------------
+``PudSession(backend="machine")`` (default) runs jobs on the NumPy
+machine simulator and returns scheduler-derived ``stats``/``timeline``
+-- the DRAM-side cost oracle.  ``backend="fused"`` runs the SAME jobs
+through the JAX-native fast path
+(:mod:`repro.kernels.fused_session`): one jitted program per query
+kind batches the Pallas kernels across every shard of the resource and
+joins shard counts with a ``psum`` over a ``shard_map`` mesh.  Results
+are bit-exact between the backends (tested); a fused
+:class:`JobResult` carries measured ``wallclock_ns`` instead of
+``stats``/``timeline`` (``None`` -- the scheduler remains the cost
+oracle, the fused path is what you actually run).  Per-job override:
+``session.query(table, q, backend="fused")``.  Compile-cache
+invariant: fused executables are cached per ``(plan, table shape,
+query kind)`` on the session resource -- scalars and feature indices
+are traced operands, so repeated jobs re-trace ZERO times (regression-
+tested); the cache is dropped with the resource.
+
 This replaces direct construction of ``PudQueryEngine`` /
 ``ShardedQueryPipeline`` / ``GbdtPudEngine`` / ``GbdtBatchPipeline``,
 which are now internal executors behind the session (the pipeline
@@ -45,6 +64,7 @@ constructors remain one release as deprecation shims).
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
@@ -62,17 +82,26 @@ from .queries import Q1, Q2, Q3, Q4, Q5
 
 @dataclass
 class JobResult:
-    """One submitted job's outcome: the merged result, the
-    barrier-aware pipeline stats of the batch that produced it, and the
-    federated device timeline it was read off."""
+    """One submitted job's outcome: the merged result, plus the cost
+    accounting of whichever backend ran it.  Machine-backend jobs carry
+    the barrier-aware pipeline ``stats`` and the federated device
+    ``timeline`` (the DRAM-side cost oracle); fused-backend jobs carry
+    the measured ``wallclock_ns`` instead (``stats``/``timeline`` are
+    ``None``) -- ``backend`` says which."""
 
     result: Any
-    stats: Any                 # repro.apps.pipeline.PipelineStats
-    timeline: Timeline
+    stats: Any = None          # repro.apps.pipeline.PipelineStats | None
+    timeline: Timeline | None = None
+    wallclock_ns: float | None = None
+    backend: str = "machine"
 
     @property
     def makespan_ns(self) -> float:
-        return self.stats.makespan_ns
+        """Modeled makespan for machine jobs; measured wall-clock for
+        fused jobs (the only clock the fused path has)."""
+        if self.stats is not None:
+            return self.stats.makespan_ns
+        return self.wallclock_ns
 
 
 @dataclass
@@ -111,11 +140,21 @@ class PudSession:
     def __init__(self, sys_cfg=cost.DESKTOP, devices=None,
                  num_devices: int = 1, arch: PuDArch = PuDArch.MODIFIED,
                  num_rows: int = 1024, seed: int = 0,
-                 hosts: str = "shared") -> None:
+                 hosts: str = "shared", backend: str = "machine") -> None:
         if hosts not in ("shared", "per-device"):
             raise ValueError(
                 f"hosts must be 'shared' or 'per-device', got {hosts!r}")
+        if backend not in ("machine", "fused"):
+            raise ValueError(
+                f"backend must be 'machine' or 'fused', got {backend!r}")
         self.sys_cfg = sys_cfg
+        #: Default execution backend for jobs: "machine" (NumPy
+        #: simulator + scheduled cost model) or "fused" (JAX-native
+        #: one-jit path, measured wall-clock).  Overridable per job.
+        self.backend = backend
+        # Fused executors cached per resource name (compile caches live
+        # inside them); invalidated on drop/evict.
+        self._fused: dict[str, Any] = {}
         #: Fleet host model: "shared" = one host (with
         #: ``sys_cfg.host_lanes`` merge lanes) drives every device;
         #: "per-device" = each device schedules its merges on its OWN
@@ -212,12 +251,16 @@ class PudSession:
 
     def drop(self, handle: ResourceHandle) -> None:
         """Release a resource: its banks coalesce back into each
-        device's free map and the admission queue drains FIFO."""
+        device's free map (and its fused compile cache is dropped) and
+        the admission queue drains FIFO."""
         self.planner.release(handle.name)
+        self._fused.pop(handle.name, None)
 
     def evict(self, handle: ResourceHandle) -> None:
-        """Reclaim a resource's banks now; it reloads on next use."""
+        """Reclaim a resource's banks now; it reloads on next use.
+        The fused cache is reclaimed with it."""
         self.planner.evict(handle.name)
+        self._fused.pop(handle.name, None)
 
     # ------------------------------------------------------------------ #
     # Jobs
@@ -232,27 +275,65 @@ class PudSession:
                 f"resource {handle.name!r} is a {r.kind}, not a {kind}")
         return self.planner.ensure_ready(handle.name)
 
+    def _fused_exec(self, handle: ResourceHandle, ex, kind: str):
+        """The resource's cached fused executor, built from the machine
+        executor's own layout recipe (same table/forest, shard count
+        and chunk plan) so both backends evaluate identical shapes."""
+        fx = self._fused.get(handle.name)
+        if fx is None:
+            from repro.kernels.fused_session import (
+                FusedGbdtExec,
+                FusedTableExec,
+            )
+
+            cls = FusedTableExec if kind == "table" else FusedGbdtExec
+            fx = cls(**ex.fused_config())
+            self._fused[handle.name] = fx
+        return fx
+
     def query(self, table: TableHandle,
-              queries: "Q1 | Q2 | Q3 | Q4 | Q5 | Sequence") -> JobResult:
+              queries: "Q1 | Q2 | Q3 | Q4 | Q5 | Sequence",
+              backend: str | None = None) -> JobResult:
         """Run one query (or a batch -- batches pipeline back-to-back
         and overlap host merges with PuD execution) against a table.
         Returns a :class:`JobResult`; for a single query ``result`` is
         that query's value, for a batch it is the list of values, in
-        order, bit-exact against the NumPy references."""
+        order, bit-exact against the NumPy references.  ``backend``
+        overrides the session default for this job; the fused backend
+        returns measured ``wallclock_ns`` instead of scheduler
+        stats."""
         single = isinstance(queries, (Q1, Q2, Q3, Q4, Q5))
         batch = [queries] if single else list(queries)
         ex = self._executor(table, "table")
+        if (backend or self.backend) == "fused":
+            fx = self._fused_exec(table, ex, "table")
+            t0 = time.perf_counter()
+            results = fx.run([q.to_tuple() for q in batch])
+            wall = (time.perf_counter() - t0) * 1e9
+            return JobResult(result=results[0] if single else results,
+                             wallclock_ns=wall, backend="fused")
         results = ex.run([q.to_tuple() for q in batch])
         timeline = ex.schedule(self.sys_cfg)
         stats = ex.last_stats(self.sys_cfg, timeline=timeline)
         return JobResult(result=results[0] if single else results,
                          stats=stats, timeline=timeline)
 
-    def predict(self, forest: ForestHandle, X: np.ndarray) -> JobResult:
+    def predict(self, forest: ForestHandle, X: np.ndarray,
+                backend: str | None = None) -> JobResult:
         """Batched GBDT inference: instances spread over every device's
         forest replicas wave by wave; predictions come back in input
-        order with the batch's barrier-aware pipeline stats."""
+        order with the batch's barrier-aware pipeline stats (machine
+        backend) or measured ``wallclock_ns`` (fused backend --
+        bit-exact predictions, one kernel launch for the whole
+        batch)."""
         ex = self._executor(forest, "forest")
+        if (backend or self.backend) == "fused":
+            fx = self._fused_exec(forest, ex, "forest")
+            t0 = time.perf_counter()
+            preds = fx.infer(np.asarray(X))
+            wall = (time.perf_counter() - t0) * 1e9
+            return JobResult(result=preds, wallclock_ns=wall,
+                             backend="fused")
         preds = ex.infer(np.asarray(X))
         timeline = ex.schedule(self.sys_cfg)
         stats = ex.last_stats(self.sys_cfg, timeline=timeline)

@@ -156,14 +156,17 @@ class PudService:
                 results = job.result
                 # Per-request latency: wave w's completion when waves
                 # map 1:1 onto requests; a Q5 re-submission breaks the
-                # mapping, so the whole batch reports its makespan.
-                done = job.stats.wave_done_ns
+                # mapping, so the whole batch reports its makespan.  A
+                # fused-backend job has no scheduled timeline -- every
+                # member reports the batch's measured wall-clock.
+                done = job.stats.wave_done_ns \
+                    if job.stats is not None else []
                 exact = len(done) == len(reqs)
                 for i, r in enumerate(reqs):
                     by_rid[r.rid] = self._deadline_checked(PudResponse(
                         rid=r.rid, result=results[i], stats=job.stats,
                         latency_ns=done[i] if exact
-                        else job.stats.makespan_ns,
+                        else job.makespan_ns,
                         batch_size=len(reqs)), r)
             else:
                 sizes = [np.asarray(r.X).shape[0] for r in reqs]
@@ -174,7 +177,7 @@ class PudService:
                     by_rid[r.rid] = self._deadline_checked(PudResponse(
                         rid=r.rid, result=job.result[off:off + sz],
                         stats=job.stats,
-                        latency_ns=job.stats.makespan_ns,
+                        latency_ns=job.makespan_ns,
                         batch_size=len(reqs)), r)
                     off += sz
         self._pending = []

@@ -100,6 +100,88 @@ def test_fused_range_count(n_bits, chunks):
     assert int(cnt) == int(want.sum())
 
 
+# ---------------- fused_predicate_banked / gbdt_leafbits -------------- #
+
+@pytest.mark.parametrize("n_bits,chunks,shards", [(8, 2, 1), (16, 4, 3),
+                                                  (32, 8, 2)])
+@pytest.mark.parametrize("num_ranges,disjunction", [(1, False), (2, False),
+                                                    (2, True)])
+def test_fused_predicate_banked_vs_ref(n_bits, chunks, shards, num_ranges,
+                                       disjunction):
+    from repro.kernels.fused_query import fused_predicate_banked
+
+    plan = make_plan(n_bits, chunks)
+    n, feats = 900, 3
+    mx = (1 << n_bits) - 1
+    vals = RNG.integers(0, 1 << n_bits, (shards, feats, n), dtype=np.uint32)
+    # stacked layout: per shard, every feature's normal block then every
+    # feature's complement block (what FusedTableExec builds)
+    lut = jnp.stack([jnp.concatenate(
+        [ops.encode_lut(jnp.asarray(vals[s, f]), plan, complement=c)
+         for c in (False, True) for f in range(feats)], axis=0)
+        for s in range(shards)])
+    r_pad = lut.shape[1] // (2 * feats)
+    ranges = [(0, mx // 7, 5 * mx // 7), (1, mx // 3, 9 * mx // 10)]
+    parts = []
+    for fi, x0, x1 in ranges[:num_ranges]:
+        g = ops.resolve_indices(plan, x0)
+        lt = ops.resolve_indices(plan, mx - x1)
+        parts += [g[0] + fi * r_pad, g[1] + fi * r_pad,
+                  lt[0] + (feats + fi) * r_pad,
+                  lt[1] + (feats + fi) * r_pad]
+    idx = jnp.asarray(np.concatenate(parts).astype(np.int32))
+    bm, cnt = fused_predicate_banked(lut, idx, chunks, num_ranges,
+                                     disjunction)
+    rbm, rcnt = ref.fused_predicate_banked_ref(lut, idx, chunks,
+                                               num_ranges, disjunction)
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(rbm))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+    # and against plain numpy semantics
+    def rmask(s, fi, x0, x1):
+        v = vals[s, fi].astype(np.int64)
+        return (v > x0) & (v < x1)
+    for s in range(shards):
+        want = rmask(s, *ranges[0])
+        if num_ranges == 2:
+            m2 = rmask(s, *ranges[1])
+            want = want | m2 if disjunction else want & m2
+        got = unpack_bits_jnp(bm[s], n).astype(bool)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        assert int(cnt[s]) == int(want.sum())
+
+
+@pytest.mark.parametrize("n_bits,chunks", [(8, 1), (16, 2), (32, 5)])
+def test_gbdt_leafbits_banked_vs_ref(n_bits, chunks):
+    from repro.kernels.common import SUBLANES, round_up
+    from repro.kernels.fused_query import gbdt_leafbits_banked
+
+    plan = make_plan(n_bits, chunks)
+    feats, nodes, b = 5, 333, 7
+    thr = RNG.integers(0, 1 << n_bits, nodes, dtype=np.uint32)
+    feat_of = RNG.integers(0, feats, nodes)
+    lut = ops.encode_lut(jnp.asarray(thr), plan)
+    mask_bits = (feat_of[None, :] == np.arange(feats)[:, None]
+                 ).astype(np.uint8)
+    from repro.core.machine import pack_bits
+    words = pack_bits(mask_bits)
+    masks = np.zeros((round_up(feats, SUBLANES), lut.shape[1]), np.uint32)
+    masks[:feats, :words.shape[1]] = words
+    X = RNG.integers(0, 1 << n_bits, (b, feats), dtype=np.int64)
+    cols = []
+    for f in range(feats):
+        lt, le = ops.resolve_indices_banked(plan, X[:, f])
+        cols += [lt, le]
+    idx = jnp.asarray(np.concatenate(cols, axis=1).astype(np.int32))
+    got = gbdt_leafbits_banked(lut, jnp.asarray(masks), idx, chunks, feats)
+    want = ref.gbdt_leafbits_banked_ref(lut, jnp.asarray(masks), idx,
+                                        chunks, feats)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # numpy semantics: node j's bit for instance i == (X[i, feat] < thr_j)
+    bits = unpack_bits_jnp(got, nodes)
+    sem = (X[:, feat_of] < thr[None, :].astype(np.int64))
+    np.testing.assert_array_equal(np.asarray(bits).astype(bool), sem)
+
+
 # ------------------------- leaf_gather -------------------------------- #
 
 @pytest.mark.parametrize("b,t,depth", [(8, 16, 4), (100, 64, 6),
