@@ -1,0 +1,224 @@
+"""In-DRAM bulk data movement & bitwise merge: RowClone / Ambit / MRACT.
+
+Measures the PR-7 wave kinds end-to-end on REAL scheduled timelines and
+enforces three acceptance gates with a nonzero exit (CI smoke runs
+this):
+
+  * **In-DRAM compound merge wins**: the same compound-predicate batch
+    (``Q1 AND Q2 OR Q3`` shapes) with ``merge="dram"`` (term bitmaps
+    combined by Ambit AND/OR waves in-bank, ONE readout per compound)
+    must finish within the ``merge="host"`` baseline's scheduled
+    makespan (one readout per TERM plus a host combine).
+  * **Host bytes reduced**: the in-DRAM merge job must move strictly
+    fewer bytes over the pins than the host-merge baseline, and
+    RowClone defragmentation must move strictly fewer bytes (zero) than
+    the host READ/WRITE relocation baseline.
+  * **Machine-vs-fused parity**: every compound result (bitmaps and
+    counts) must be bit-exact between the machine executor and the
+    fused Pallas backend, and match the NumPy reference.
+
+Also reported (not gated): RowClone defrag makespan vs the host
+baseline, forest-replication host write rows with
+``replicate="rowclone"`` vs ``"host"``, and the clone command count
+collapse under ``multi_row_act=4`` (PULSAR-style multi-row ACT).
+
+All RNG is fixed-seed so numbers are reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from dataclasses import replace
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)                    # for benchmarks.run
+
+import numpy as np
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import PuDArch, PuDOp
+from repro.core.scheduler import ChannelScheduler
+from repro.kernels.fused_session import FusedTableExec
+from repro.pud.executors import GbdtBatchExecutor, QueryBatchExecutor
+from repro.pud.queries import Compound, Q1, Q2, Q3
+
+COLS = 4096
+
+
+def _workload(smoke: bool):
+    n = 16_000 if smoke else 128_000
+    t = P.Table.generate(n, 8, seed=7)
+    mx = 255
+    terms = (Q1(fi=0, x0=mx // 8, x1=mx // 2),
+             Q2(fi=1, x0=5, x1=220, fj=2, y0=30, y1=250),
+             Q3(fi=3, x0=0, x1=90, fj=4, y0=100, y1=250))
+    batch = [Compound(terms, ("and", "or")),
+             Compound(terms, ("or", "and"), count=True),
+             Compound(terms[:2], ("and",))]
+    return t, batch
+
+
+def _compound_job(t, batch, merge: str, sys_cfg):
+    """Run the batch through a fresh machine executor with every
+    compound forced to ``merge``; returns (results, makespan_ns,
+    host_io_bytes) from the job-scoped scheduled timeline."""
+    dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+    ex = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=COLS)
+    qs = [Compound(q.terms, q.ops, count=q.count, merge=merge)
+          for q in batch]
+    res = ex.run([q.to_tuple() for q in qs])
+    tl = ex.schedule(sys_cfg)
+    io = sum(w.io_bytes for w in tl.waves)
+    return res, tl.makespan_ns, io
+
+
+def _defrag_trial(rowclone: bool, sys_cfg):
+    """Relocation workload: three placed groups, free the first, compact
+    the rest.  Returns (banks moved, scheduled makespan of the defrag
+    streams, host READ/WRITE bytes) -- states verified bit-exact."""
+    dev = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=1,
+                    banks_per_rank=8, num_rows=1024,
+                    cols_per_bank=COLS, seed=5)
+    subs = [dev.alloc_banks(2, label=f"g{i}") for i in range(3)]
+    rng = np.random.default_rng(0)
+    for s in subs:
+        start = s.alloc(200)
+        s.host_write_rows(start, rng.integers(
+            0, 1 << 32, (s.num_banks, 200, s.num_cols // 32),
+            dtype=np.uint64).astype(np.uint32))
+    dev.free_banks(subs[0])
+    for s in subs[1:]:
+        s.trace.clear()            # isolate the defrag streams
+    before = [s.state.copy() for s in subs[1:]]
+    moved = dev.defragment(rowclone=rowclone)
+    if not all(np.array_equal(b, s.state)
+               for b, s in zip(before, subs[1:])):
+        raise SystemExit("defragmentation corrupted relocated rows")
+    tl = ChannelScheduler(sys_cfg).schedule(dev.streams())
+    io = sum(w.io_bytes for w in tl.waves)
+    return moved, tl.makespan_ns, io
+
+
+def _replication_trial(replicate: str, mra: int):
+    """Forest loaded as 4 replicas on a 2-channel device: host WRITE
+    rows and clone-wave count of the load."""
+    sys_cfg = replace(cost.DESKTOP, multi_row_act=mra)
+    dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
+    forest = G.ObliviousForest.random(num_trees=16, depth=4,
+                                      num_features=4, n_bits=8, seed=3)
+    ex = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                           groups_per_device=4, banks_per_group=2,
+                           replicate=replicate)
+    writes = sum(1 for e in ex.engines for w in e.sub.trace.entries
+                 if w.op is PuDOp.WRITE)
+    clones = sum(1 for e in ex.engines for w in e.sub.trace.entries
+                 if w.op in (PuDOp.ROWCLONE, PuDOp.MRACT))
+    rng = np.random.default_rng(1)
+    X = rng.integers(0, 256, (32, 4), dtype=np.uint64)
+    # float32 leaf sums accumulate in pipeline order -> 1e-3 like the
+    # repo's other GBDT parity checks; the device half is exact
+    if not np.allclose(ex.infer(X), G.reference_predict(forest, X),
+                       atol=1e-3):
+        raise SystemExit(
+            f"replicate={replicate!r} predictions diverged from the "
+            "NumPy reference")
+    return writes, clones
+
+
+def run(smoke: bool = False):
+    sys_cfg = cost.DESKTOP
+    t, batch = _workload(smoke)
+    rows = []
+
+    # ------------- gate (a)+(b): compound dram vs host merge ---------- #
+    res_d, span_d, io_d = _compound_job(t, batch, "dram", sys_cfg)
+    res_h, span_h, io_h = _compound_job(t, batch, "host", sys_cfg)
+    rows.append(("indram_compound_dram_makespan",
+                 round(span_d / 1e3, 2), round(io_d, 1)))
+    rows.append(("indram_compound_host_makespan",
+                 round(span_h / 1e3, 2), round(io_h, 1)))
+    rows.append(("indram_compound_speedup", 0.0,
+                 round(span_h / span_d, 3)))
+    if span_d > span_h:
+        raise SystemExit(
+            f"in-DRAM compound merge makespan {span_d:.0f}ns exceeds "
+            f"host-merge baseline {span_h:.0f}ns")
+    if io_d >= io_h:
+        raise SystemExit(
+            f"in-DRAM compound merge moved {io_d:.0f} host bytes, not "
+            f"fewer than the host-merge baseline's {io_h:.0f}")
+
+    # ------------- gate (c): machine-vs-fused bit-exact parity -------- #
+    fx = FusedTableExec(t, num_shards=2,
+                        num_chunks=P.PAPER_PREDICATE_CHUNKS[
+                            (t.n_bits, PuDArch.MODIFIED)])
+    res_f = fx.run([q.to_tuple() for q in batch])
+    exact = 0
+    for q, rm, rh, rf in zip(batch, res_d, res_h, res_f):
+        want = q.reference(t)
+        for got, which in ((rm, "machine/dram"), (rh, "machine/host"),
+                           (rf, "fused")):
+            ok = (np.array_equal(got, want) if hasattr(want, "all")
+                  else got == want)
+            if not ok:
+                raise SystemExit(
+                    f"compound {q.ops} via {which} diverged from the "
+                    "NumPy reference")
+        exact += 1
+    rows.append(("indram_compound_parity_exact", 0.0, exact))
+
+    # ------------- gate (b) cont.: RowClone defrag vs host ------------ #
+    mv_rc, span_rc, io_rc = _defrag_trial(True, sys_cfg)
+    mv_ho, span_ho, io_ho = _defrag_trial(False, sys_cfg)
+    rows.append(("indram_defrag_rowclone_makespan",
+                 round(span_rc / 1e3, 2), round(io_rc, 1)))
+    rows.append(("indram_defrag_host_makespan",
+                 round(span_ho / 1e3, 2), round(io_ho, 1)))
+    if mv_rc != mv_ho:
+        raise SystemExit("defrag trials moved different bank counts")
+    if io_rc >= io_ho:
+        raise SystemExit(
+            f"RowClone defrag moved {io_rc:.0f} host bytes, not fewer "
+            f"than the READ/WRITE baseline's {io_ho:.0f}")
+
+    # ------------- reported: replication + multi-row ACT -------------- #
+    wr_h, _ = _replication_trial("host", 1)
+    wr_rc, cl_1 = _replication_trial("rowclone", 1)
+    _, cl_4 = _replication_trial("rowclone", 4)
+    rows.append(("indram_replicate_host_write_rows", 0.0, wr_h))
+    rows.append(("indram_replicate_rowclone_write_rows", 0.0, wr_rc))
+    rows.append(("indram_replicate_clone_waves_mra1", 0.0, cl_1))
+    rows.append(("indram_replicate_clone_waves_mra4", 0.0, cl_4))
+    if wr_rc >= wr_h:
+        raise SystemExit(
+            f"RowClone replication host-wrote {wr_rc} rows, not fewer "
+            f"than the host baseline's {wr_h}")
+    if cl_4 >= cl_1:
+        raise SystemExit(
+            f"multi_row_act=4 issued {cl_4} clone waves, not fewer "
+            f"than single-row ACT's {cl_1}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI regression smoke")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    from benchmarks.run import write_json   # shared trajectory writer
+    print(f"wrote {write_json('indram_ops', rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -237,18 +237,46 @@ def fused_section(smoke: bool = False):
 
 
 def write_bench_json(rows, smoke: bool, path: str | None = None) -> str:
-    """Emit ``BENCH_kernel_wallclock.json`` at the repo root: the rows
-    plus enough metadata to interpret them run-to-run."""
+    """Append this run to ``BENCH_kernel_wallclock.json``'s
+    ``trajectory`` (same layout as ``benchmarks/run.py``): one
+    timestamped entry per run -- with its smoke/backend metadata -- so
+    the wall-clock history across commits is preserved; the latest
+    entry is mirrored at the top level."""
+    import datetime
+
     path = path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_kernel_wallclock.json")
+    trajectory = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            trajectory = prev.get("trajectory")
+            if trajectory is None:           # legacy single-run layout
+                trajectory = [{"ts": prev.get("ts"),
+                               "smoke": prev.get("smoke"),
+                               "backend": prev.get("backend"),
+                               "rows": prev.get("rows", [])}]
+        except (json.JSONDecodeError, OSError):
+            trajectory = []
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    trajectory.append(entry)
     payload = {
         "benchmark": "kernel_wallclock",
         "smoke": smoke,
-        "backend": jax.default_backend(),
+        "backend": entry["backend"],
         "columns": ["name", "us_per_call", "derived"],
-        "rows": [{"name": n, "us_per_call": us, "derived": d}
-                 for n, us, d in rows],
+        "ts": entry["ts"],
+        "rows": entry["rows"],
+        "trajectory": trajectory,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

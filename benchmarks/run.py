@@ -1,7 +1,11 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV
 # and write one ``BENCH_<name>.json`` per registered benchmark at the
 # repo root (fixed RNG seeds throughout, so every emitted number is
-# reproducible run-to-run).
+# reproducible run-to-run).  Each JSON keeps a ``trajectory`` list --
+# one timestamped entry appended per run -- so the numbers' history
+# across commits/runs is preserved instead of overwritten; the latest
+# entry is mirrored at the top level for dashboards that read one run.
+import datetime
 import json
 import os
 import sys
@@ -11,7 +15,8 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, ROOT)
 
 from benchmarks import bank_scaling, channel_scaling, host_lane_scaling, \
-    kernel_wallclock, paper_figs, roofline_report, session_scaling
+    indram_ops, kernel_wallclock, paper_figs, roofline_report, \
+    session_scaling
 
 
 def _paper_figs():
@@ -28,16 +33,39 @@ REGISTRY = {
     "session_scaling": session_scaling.run,
     "host_lane_scaling": host_lane_scaling.run,
     "roofline_report": roofline_report.run,
+    "indram_ops": indram_ops.run,
 }
 
 
 def write_json(name: str, rows) -> str:
+    """Append this run to ``BENCH_<name>.json``'s ``trajectory`` (and
+    mirror it at the top level as the latest entry).  A pre-trajectory
+    file's single run is preserved as the first trajectory entry."""
     path = os.path.join(ROOT, f"BENCH_{name}.json")
+    trajectory = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            trajectory = prev.get("trajectory")
+            if trajectory is None:           # legacy single-run layout
+                trajectory = [{"ts": prev.get("ts"),
+                               "rows": prev.get("rows", [])}]
+        except (json.JSONDecodeError, OSError):
+            trajectory = []
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    trajectory.append(entry)
     payload = {
         "benchmark": name,
         "columns": ["name", "us_per_call", "derived"],
-        "rows": [{"name": n, "us_per_call": us, "derived": d}
-                 for n, us, d in rows],
+        "ts": entry["ts"],
+        "rows": entry["rows"],
+        "trajectory": trajectory,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

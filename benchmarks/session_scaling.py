@@ -31,7 +31,6 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import warnings
 from dataclasses import replace
 
 sys.path.insert(0, os.path.join(os.path.dirname(
@@ -42,6 +41,7 @@ from repro.core import cost
 from repro.core.device import PuDDevice
 from repro.core.machine import PuDArch
 from repro.pud import PudSession, Q1, Q2, Q3, Q4, Q5
+from repro.pud.executors import QueryBatchExecutor
 
 MAX_OVERHEAD = 0.05
 COLS = 4096
@@ -79,12 +79,10 @@ def run(smoke: bool = False):
     t, batch, rng = _workload(smoke)
     rows = []
 
-    # raw-pipeline reference path (the deprecated pre-session API)
+    # raw-executor reference path (no session front end)
     dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
-                                    num_shards=2, cols_per_bank=COLS)
+    qp = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=COLS)
     for eng in qp.engines:
         eng.sub.trace.clear()
     qp.run([q.to_tuple() for q in batch])

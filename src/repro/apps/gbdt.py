@@ -30,11 +30,10 @@ instance's feature value -- and the partial leaf-address rows are merged
 host-side after the single readout, which lifts the old 65536-node
 rejection.
 
-Async host pipeline: the batch path now lives in
+Async host pipeline: the batch path lives in
 :class:`repro.pud.executors.GbdtBatchExecutor` behind
 :class:`repro.pud.PudSession` (forest replicas on every device of a
-fleet); :class:`GbdtBatchPipeline` remains one release as a deprecated
-single-device shim over it.  The executor places several engine
+fleet).  The executor places several engine
 groups on distinct device channels, splits a batch into waves, and
 double-buffers each group's leaf-bitmap row so host readout/merge of
 wave N overlaps PuD execution of wave N+1.  The recorded stream carries
@@ -53,14 +52,12 @@ are stored even on Unmodified PuD.
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.clutch import ClutchEngine, clutch_op_count
 from repro.core.machine import BankedSubarray, PuDArch, pack_bits, unpack_bits
-from repro.pud.executors import GbdtBatchExecutor
 
 # Paper §5.1 kernel chunk counts (minimum fitting a single subarray).
 PAPER_GBDT_CHUNKS = {8: 1, 16: 2, 32: 5}
@@ -168,15 +165,25 @@ class GbdtPudEngine:
 
     The leaf-bitmap accumulator is double-buffered (``acc_rows``): wave
     N's result row survives while wave N+1 computes into the other
-    buffer, which is what lets :class:`GbdtBatchPipeline` defer wave N's
+    buffer, which is what lets
+    :class:`repro.pud.executors.GbdtBatchExecutor` defer wave N's
     readout until after wave N+1 has been issued.
+
+    ``clone_source`` replicates an already-loaded engine's device state
+    (threshold LUT planes + one-hot mask rows) via in-DRAM RowClone
+    waves instead of a fresh host load -- the source must hold the same
+    forest with the same sharding, and must live on the same channel of
+    the same device (the executor picks sources accordingly).  After
+    the fleet's FIRST host load, every further replica costs zero host
+    WRITE bytes.
     """
 
     def __init__(self, forest: ObliviousForest, arch: PuDArch,
                  num_chunks: int | None = None, num_rows: int = 1024,
                  num_banks: int = 1, device=None,
                  cols_per_bank: int = 65536, channels=None,
-                 label: str = "gbdt") -> None:
+                 label: str = "gbdt",
+                 clone_source: "GbdtPudEngine | None" = None) -> None:
         if device is not None:
             if device.arch is not arch:
                 raise ValueError(
@@ -209,21 +216,35 @@ class GbdtPudEngine:
                                       num_cols=n_cols, arch=arch)
         self.label = label
         chunks = num_chunks or PAPER_GBDT_CHUNKS[forest.n_bits]
+        if clone_source is not None and (
+                clone_source.col_shards != self.col_shards
+                or clone_source.sub.num_banks != num_banks
+                or clone_source.sub.num_cols != n_cols):
+            raise ValueError("clone source has incompatible sharding")
         # Only the native `<` is used => no complement planes needed.
         thresholds = self._shard_cols(
             forest.thresholds.reshape(-1).astype(np.uint64))
         self.engine = ClutchEngine(
             self.sub, thresholds, forest.n_bits,
-            num_chunks=chunks, support_negated=False)
+            num_chunks=chunks, support_negated=False,
+            clone_from=None if clone_source is None
+            else clone_source.engine)
         self.num_chunks = self.engine.plan.num_chunks
-        # One-hot feature mask rows (paper Fig. 12 layout), written through
-        # the bulk path: one vectorized store, one WRITE entry per row.
-        flat_feat = forest.feature_idx.reshape(-1)
-        mask_bits = (flat_feat[None, :] ==
-                     np.arange(f)[:, None]).astype(np.uint8)    # [F, nodes]
+        # One-hot feature mask rows (paper Fig. 12 layout).  First load
+        # goes through the bulk host-write path (one vectorized store,
+        # one WRITE entry per row); replicas clone the source's mask
+        # rows in-DRAM instead.
         self.mask_rows = self.sub.alloc(f)
-        self.sub.host_write_rows(
-            self.mask_rows, pack_bits(self._shard_cols(mask_bits)))
+        if clone_source is not None:
+            self.sub.clone_rows_from(clone_source.sub,
+                                     clone_source.mask_rows,
+                                     self.mask_rows, f)
+        else:
+            flat_feat = forest.feature_idx.reshape(-1)
+            mask_bits = (flat_feat[None, :] ==
+                         np.arange(f)[:, None]).astype(np.uint8)  # [F, nodes]
+            self.sub.host_write_rows(
+                self.mask_rows, pack_bits(self._shard_cols(mask_bits)))
         self.acc_rows = (self.sub.alloc(1), self.sub.alloc(1))
         self.acc_row = self.acc_rows[0]
         self.ops_per_instance: int | None = None
@@ -313,7 +334,8 @@ class GbdtPudEngine:
 
     def infer(self, X: np.ndarray) -> np.ndarray:
         """Batch inference: ``wave_width`` instances per broadcast wave
-        (serial readout; see :class:`GbdtBatchPipeline` for the async
+        (serial readout; see
+        :class:`repro.pud.executors.GbdtBatchExecutor` for the async
         pipeline)."""
         X = np.asarray(X)
         if X.shape[0] == 0:
@@ -322,32 +344,6 @@ class GbdtPudEngine:
                  for j, i in enumerate(
                      range(0, X.shape[0], self.wave_width))]
         return np.concatenate(preds).astype(np.float32)
-
-
-class GbdtBatchPipeline(GbdtBatchExecutor):
-    """Deprecated single-device alias of
-    :class:`repro.pud.executors.GbdtBatchExecutor`.
-
-    Construct a :class:`repro.pud.PudSession` and use
-    ``session.load_forest`` + ``session.predict`` instead; this shim
-    (warning + delegation, one release) keeps external callers working.
-    """
-
-    def __init__(self, forest: ObliviousForest, arch: PuDArch, device,
-                 num_groups: int = 2, banks_per_group: int = 4,
-                 num_chunks: int | None = None) -> None:
-        warnings.warn(
-            "GbdtBatchPipeline is deprecated; use "
-            "repro.pud.PudSession.load_forest/predict (one-release shim)",
-            DeprecationWarning, stacklevel=2)
-        super().__init__(forest, arch, [device],
-                         groups_per_device=num_groups,
-                         banks_per_group=banks_per_group,
-                         num_chunks=num_chunks)
-
-    @property
-    def device(self):
-        return self.devices[0]
 
 
 def gbdt_ops_per_instance(forest: ObliviousForest, chunks: int,

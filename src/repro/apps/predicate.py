@@ -20,12 +20,11 @@ happens in-DRAM in every bank concurrently, and only the final bitmaps
 leave the chip, where COUNT/AVERAGE merge host-side.  This removes the
 seed's 65536-record capacity cliff.
 
-Async query pipeline: the batch/pipeline path now lives in
+Async query pipeline: the batch/pipeline path lives in
 :class:`repro.pud.executors.QueryBatchExecutor` behind
 :class:`repro.pud.PudSession` (which also federates a table across
-several devices); :class:`ShardedQueryPipeline` remains one release as
-a deprecated single-device shim over it.  The pipeline runs a batch of
-queries double-buffered: each query's WHERE bitmap is parked in one of
+several devices).  The pipeline runs a batch of queries
+double-buffered: each query's WHERE bitmap is parked in one of
 two result rows, the next query's PuD stream is issued, and only then
 is the parked row read back and merged (COUNT/AVERAGE) on the host --
 so host readout/merge of query N overlaps PuD execution of query N+1.
@@ -36,12 +35,20 @@ scan -- whose scalar exists only after phase 1's root join -- declares
 that root as an ``after_host`` barrier, so the scheduled timeline
 contains the host round trip instead of assuming the scalar was
 already available.
+
+Compound predicates (``Q1 AND Q2 OR Q3``, the ``"compound"`` submit
+kind) evaluate every term's bitmap and then combine the term bitmaps
+with Ambit AND/OR waves INSIDE the banks -- 3 waves per connective,
+zero host bytes -- so only the final parked bitmap's readout crosses
+to the host.  The host-merge baseline instead lowers each term as its
+own wave and reads every term bitmap out (one readout per term plus a
+host combine), which is exactly the traffic the in-DRAM merge
+eliminates.
 """
 
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -49,7 +56,6 @@ import numpy as np
 from repro.core.bitserial import BitSerialEngine
 from repro.core.clutch import ClutchEngine
 from repro.core.machine import BankedSubarray, PuDArch, unpack_bits
-from repro.pud.executors import QueryBatchExecutor
 
 from .pipeline import HostTimer
 
@@ -216,6 +222,40 @@ class PudQueryEngine:
         self.sub.rowcopy(row, self._save_rows[save_slot])
         return self._save_rows[save_slot]
 
+    def _term_row(self, term: tuple, save_slot: int) -> int:
+        """Evaluate ONE compound term's bitmap into a stable save row.
+        ``term`` is a query wire tuple (q1: plain range; q2/q3: two
+        ranges internally AND/OR-combined)."""
+        kind = term[0]
+        if kind == "q1":
+            return self._range(term[1], term[2], term[3], save_slot)
+        if kind in ("q2", "q3"):
+            fi, x0, x1, fj, y0, y1 = term[1:]
+            r1 = self._range(fi, x0, x1, save_slot)
+            # slot 2 is predicate scratch; _range reads it before the
+            # final save, so reusing it for the second range is safe.
+            r2 = self._range(fj, y0, y1, 2)
+            const = self.sub.ROW_ZERO if kind == "q2" else self.sub.ROW_ONE
+            row = self.sub.maj3_into_acc(r1, r2, const)
+            self.sub.rowcopy(row, self._save_rows[save_slot])
+            return self._save_rows[save_slot]
+        raise ValueError(f"unsupported compound term {kind!r}")
+
+    def _compound(self, connectives: tuple, terms: tuple) -> int:
+        """Left-associative in-DRAM combine of term bitmaps: each
+        connective is one Ambit AND/OR merge (2 staging copies + 1
+        merge wave), accumulator kept in save row 0.  Only the final
+        row ever leaves the chip."""
+        acc = self._term_row(terms[0], 0)
+        for op, term in zip(connectives, terms[1:]):
+            nxt = self._term_row(term, 1)
+            if op == "and":
+                self.sub.ambit_and(acc, nxt, self._save_rows[0])
+            else:
+                self.sub.ambit_or(acc, nxt, self._save_rows[0])
+            acc = self._save_rows[0]
+        return acc
+
     def _read(self, row: int) -> np.ndarray:
         """One broadcast row readout -> merged host bitmap [records]."""
         return self.merge_words(self.sub.host_read_row(row))
@@ -234,7 +274,10 @@ class PudQueryEngine:
         """Record (and functionally execute) one WHERE-clause bitmap
         stream, parking the result in double-buffer row ``buf`` so it
         survives the next submission.  ``kind``: ``"range"`` (x0<f<x1),
-        ``"and2"`` / ``"or2"`` (two ranges combined).  ``segment`` opens
+        ``"and2"`` / ``"or2"`` (two ranges combined), or ``"compound"``
+        (params = (connectives, term wire tuples): every term's bitmap
+        evaluated, then Ambit AND/OR merge waves combine them
+        left-associatively inside the banks).  ``segment`` opens
         a labeled trace segment for the scheduler; ``after_host`` lists
         host events (recorded merges) the segment's waves must wait for
         -- the host-barrier case where this stream's scalar comes from
@@ -255,6 +298,9 @@ class PudQueryEngine:
             r2 = self._range(fj, y0, y1, 1)
             const = self.sub.ROW_ZERO if kind == "and2" else self.sub.ROW_ONE
             row = self.sub.maj3_into_acc(r1, r2, const)
+        elif kind == "compound":
+            connectives, terms = params
+            row = self._compound(connectives, terms)
         else:
             raise ValueError(f"unknown bitmap kind {kind!r}")
         park = self._park_rows[buf]
@@ -330,32 +376,6 @@ class PudQueryEngine:
         if avg >= hi:
             return 0
         return int(self.q1(fl, avg, hi).sum())
-
-
-class ShardedQueryPipeline(QueryBatchExecutor):
-    """Deprecated single-device alias of
-    :class:`repro.pud.executors.QueryBatchExecutor`.
-
-    Construct a :class:`repro.pud.PudSession` and use
-    ``session.create_table`` + ``session.query`` instead; this shim
-    (warning + delegation, one release) keeps external callers working.
-    """
-
-    def __init__(self, table: Table, arch: PuDArch, device,
-                 num_shards: int = 2, method: str = "clutch",
-                 num_chunks: int | None = None,
-                 cols_per_bank: int = 65536) -> None:
-        warnings.warn(
-            "ShardedQueryPipeline is deprecated; use "
-            "repro.pud.PudSession.create_table/query (one-release shim)",
-            DeprecationWarning, stacklevel=2)
-        super().__init__(table, arch, [device],
-                         shards_per_device=num_shards, method=method,
-                         num_chunks=num_chunks, cols_per_bank=cols_per_bank)
-
-    @property
-    def device(self):
-        return self.devices[0]
 
 
 # ------------------------- NumPy ground truth -------------------------- #

@@ -44,7 +44,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .encoding import ChunkPlan, LutLayout, load_vector, make_plan
+from .encoding import ChunkPlan, LutLayout, clone_vector, load_vector, \
+    make_plan
 from .machine import BankedSubarray, PuDArch, RowIdx, unpack_bits
 
 OPS = ("<", "<=", ">", ">=", "==")
@@ -162,23 +163,43 @@ class ClutchEngine:
         plan: ChunkPlan | None = None,
         support_negated: bool = True,
         scratch: tuple[int, int] | None = None,
+        clone_from: "ClutchEngine | None" = None,
     ) -> None:
         """``support_negated=False`` skips the complement planes on
         Unmodified PuD (halving the row footprint) when only the native
         ``>`` / ``>=`` / ``==``-free operators are needed -- the kernel-level
-        evaluation of paper §5.1 runs in this mode."""
+        evaluation of paper §5.1 runs in this mode.
+
+        ``clone_from`` replicates an already-loaded engine's LUT planes
+        via in-DRAM RowClone waves instead of a fresh host load --
+        ``values`` must be the same vector, and the source engine's
+        group must span the same number of banks (the caller keeps both
+        on one channel).  Zero host WRITE traffic after the first
+        load."""
         self.sub = sub
         self.n_bits = n_bits
         self.n = int(np.asarray(values).shape[-1])
         if plan is None:
             plan = make_plan(n_bits, num_chunks or 1)
         self.plan = plan
-        self.layout = load_vector(sub, values, plan)
-        self.layout_c = (
-            load_vector(sub, values, plan, complement=True)
-            if sub.arch is PuDArch.UNMODIFIED and support_negated
-            else None
-        )
+        if clone_from is not None:
+            if clone_from.plan != plan:
+                raise ValueError("clone source uses a different chunk plan")
+            self.layout = clone_vector(sub, clone_from.sub,
+                                       clone_from.layout)
+            self.layout_c = (
+                clone_vector(sub, clone_from.sub, clone_from.layout_c)
+                if sub.arch is PuDArch.UNMODIFIED and support_negated
+                and clone_from.layout_c is not None
+                else None
+            )
+        else:
+            self.layout = load_vector(sub, values, plan)
+            self.layout_c = (
+                load_vector(sub, values, plan, complement=True)
+                if sub.arch is PuDArch.UNMODIFIED and support_negated
+                else None
+            )
         # Scratch rows for saving intermediate bitmaps (e.g. for ``==``);
         # engines sharing a subarray can share these (predicates are
         # sequential), which is what lets 8x 32-bit features + complements

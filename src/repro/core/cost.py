@@ -32,6 +32,15 @@ All constants are explicit dataclass fields so benchmarks can report
 sensitivity.  Energy follows the paper: each additional simultaneously
 activated row adds 22% of single-row activation energy [197]; CPU/GPU
 energy = device power x time; off-chip transfer charged per byte.
+
+The in-DRAM bulk waves (ROWCLONE/ROWINIT/MRACT relocation clones, Ambit
+AND/OR merges) are charged like any other compute wave: AAP-pair
+latency, per-rank tFAW/tRRD stagger, activation energy with the
+multi-row overhead (an MRACT's second ACT opens ``SystemConfig.
+multi_row_act`` rows at once, paying +22% per extra row) -- and ZERO
+host I/O bytes, which is exactly the saving the trace/timeline costs
+expose when defrag, replication, or compound-predicate merges move
+in-DRAM.
 """
 
 from __future__ import annotations
@@ -76,12 +85,20 @@ class DramTimings:
 
 
 # ACT commands issued per PuD primitive (for the BLP/tFAW constraint).
+# The in-DRAM bulk waves: ROWCLONE/ROWINIT are AAP pairs (RowClone FPM),
+# MRACT is an AAP pair whose second ACT opens the whole span, AND/OR are
+# control-row-init AAP + triple-row ACT.
 ACTS_PER_OP = {
     PuDOp.ROWCOPY: 2,
     PuDOp.TRA: 1,
     PuDOp.APA: 2,
     PuDOp.FRAC: 1,
     PuDOp.NOT: 2,
+    PuDOp.ROWCLONE: 2,
+    PuDOp.ROWINIT: 2,
+    PuDOp.MRACT: 2,
+    PuDOp.AND: 2,
+    PuDOp.OR: 2,
 }
 
 
@@ -102,6 +119,7 @@ class SystemConfig:
     e_act_nj: float = 2.1            # single-row activation+precharge energy
     e_io_pj_per_bit: float = 22.0    # off-chip transfer energy
     multi_act_overhead: float = 0.22 # +22%/extra row (paper, [197])
+    multi_row_act: int = 1           # PULSAR MRACT span capability (1 = off)
     timings: DramTimings = DramTimings()
 
     @property
@@ -169,6 +187,11 @@ def op_latency(op: PuDOp, t: DramTimings) -> float:
         PuDOp.APA: t.t_apa,
         PuDOp.FRAC: t.t_frac,
         PuDOp.NOT: t.t_rowcopy,
+        PuDOp.ROWCLONE: t.t_rowcopy,
+        PuDOp.ROWINIT: t.t_rowcopy,
+        PuDOp.MRACT: t.t_rowcopy,
+        PuDOp.AND: t.t_apa,
+        PuDOp.OR: t.t_apa,
     }[op]
 
 
@@ -211,22 +234,31 @@ def sequence_time_ns(op_counts: dict[str, int], sys: SystemConfig,
 
 
 #: Simultaneously opened rows in each primitive's multi-row ACT.
+#: MRACT is absent: its row count is the configured ``multi_row_act``
+#: span (``wave_energy_nj`` special-cases it).
 ROWS_PER_ACT = {
     PuDOp.ROWCOPY: 1,  # two single-row ACTs
     PuDOp.TRA: 3,      # one triple-row ACT
     PuDOp.APA: 4,      # one quad-row ACT (second ACT of the APA pair)
     PuDOp.FRAC: 1,
     PuDOp.NOT: 1,
+    PuDOp.ROWCLONE: 1,  # AAP pair of single-row ACTs
+    PuDOp.ROWINIT: 1,
+    PuDOp.AND: 3,       # triple-row ACT (second ACT of the sequence)
+    PuDOp.OR: 3,
 }
 
 
 def wave_energy_nj(op: PuDOp, banks: int, sys: SystemConfig) -> float:
     """Energy (nJ) of ONE broadcast wave of ``op`` across ``banks``
     concurrently active banks (paper model: +22% activation energy per
-    extra simultaneously opened row; extra ACTs are single-row)."""
+    extra simultaneously opened row; extra ACTs are single-row).
+    An MRACT wave's second ACT opens the configured ``multi_row_act``
+    span simultaneously, paying the per-extra-row overhead for every
+    row of the span."""
     if op in (PuDOp.READ, PuDOp.WRITE):
         return 0.0  # off-chip transfer energy is charged per byte
-    k = ROWS_PER_ACT[op]
+    k = sys.multi_row_act if op is PuDOp.MRACT else ROWS_PER_ACT[op]
     e_act = sys.e_act_nj * (1.0 + sys.multi_act_overhead * (k - 1))
     extra = ACTS_PER_OP[op] - 1
     return banks * (e_act + extra * sys.e_act_nj)

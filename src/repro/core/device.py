@@ -42,9 +42,11 @@ device above it:
     lives in each group's :class:`~repro.core.machine.BankedSubarray`
     (indexed by group, not by physical bank), so relocation preserves
     LUT/vector contents bit-exactly; the physical cost of moving a
-    group -- reading its occupied rows out over the channel and
-    rewriting them at the new banks -- is recorded as READ/WRITE
-    traffic in the group's command stream.  Runs never leave their
+    group is recorded in its command stream as RowClone relocation
+    waves (MRACT-chunked under the PULSAR ``multi_row_act``
+    capability) -- pure in-DRAM movement with zero host bytes -- or,
+    with ``rowclone=False``, as the legacy host READ/WRITE round trip
+    per occupied row (the measured baseline).  Runs never leave their
     channel, so channel footprints (and therefore which groups can
     overlap on the bus) are unchanged.
 """
@@ -100,6 +102,7 @@ class PuDDevice:
         num_rows: int = 1024,
         cols_per_bank: int = 65536,
         seed: int | None = 0,
+        multi_row_act: int = 1,
     ) -> None:
         self.arch = arch
         self.channels = channels
@@ -108,6 +111,9 @@ class PuDDevice:
         self.num_rows = num_rows
         self.cols_per_bank = cols_per_bank
         self._seed = seed
+        #: PULSAR multi-row-ACT span capability, threaded into every
+        #: allocated group's :class:`BankedSubarray` (1 = off).
+        self.multi_row_act = multi_row_act
         # Free map: sorted, non-overlapping, non-adjacent [start, length]
         # ranges (adjacent ranges are always coalesced on free).
         self._ranges: list[list[int]] = [[0, self.total_banks]]
@@ -120,7 +126,8 @@ class PuDDevice:
         return cls(arch, channels=sys_cfg.channels,
                    ranks_per_channel=sys_cfg.ranks_per_channel,
                    banks_per_rank=sys_cfg.banks_per_rank,
-                   num_rows=num_rows, cols_per_bank=sys_cfg.cols_per_bank)
+                   num_rows=num_rows, cols_per_bank=sys_cfg.cols_per_bank,
+                   multi_row_act=sys_cfg.multi_row_act)
 
     # ------------------------------------------------------------------ #
     @property
@@ -277,7 +284,8 @@ class PuDDevice:
             num_banks=n, num_rows=self.num_rows,
             num_cols=num_cols or self.cols_per_bank, arch=self.arch,
             seed=None if self._seed is None
-            else self._seed + banks[0])
+            else self._seed + banks[0],
+            multi_row_act=self.multi_row_act)
         group = BankGroup(banks=tuple(banks), sub=sub, label=label,
                           active_elems=active_elems)
         for start, length in self._runs(banks):
@@ -306,7 +314,7 @@ class PuDDevice:
     # ------------------------------------------------------------------ #
     # Defragmentation
     # ------------------------------------------------------------------ #
-    def defragment(self) -> int:
+    def defragment(self, rowclone: bool = True) -> int:
         """Compact placed groups toward the start of each channel,
         coalescing every channel's free space into one tail run.
 
@@ -316,10 +324,16 @@ class PuDDevice:
         groups it serializes with -- is unchanged.  Group *state* is
         untouched (it lives in the group's own
         :class:`~repro.core.machine.BankedSubarray`); the physical move
-        is accounted for by recording one READ + one WRITE wave per
-        occupied row in each relocated group's command stream, in a
+        is recorded in each relocated group's command stream in a
         dedicated ``defrag`` segment that subsequent (default-chained)
-        segments depend on.  Returns the number of banks moved.
+        segments depend on.  By default (``rowclone=True``) relocation
+        is pure in-DRAM movement: one RowClone wave per occupied row
+        (chunked into MRACT spans when the device has the PULSAR
+        ``multi_row_act`` capability) -- no host lane, no off-chip
+        bytes.  ``rowclone=False`` keeps the legacy host path (one READ
+        + one WRITE per occupied row over the channel), the baseline
+        the in-DRAM path is measured against.  Returns the number of
+        banks moved.
         """
         per_ch = self.banks_per_channel
         new_banks = {id(g): list(g.banks) for g in self.groups}
@@ -348,13 +362,17 @@ class PuDDevice:
         for g in self.groups:
             if id(g) in moved_groups:
                 g.banks = tuple(new_banks[id(g)])
-                # Banks cannot RowClone across banks: relocation is a
-                # host round trip over every occupied row.
                 tr = g.sub.trace
                 rows = max(1, g.sub._alloc_ptr)
                 tr.begin_segment(f"defrag:{g.label or 'group'}")
-                tr.emit_rows(PuDOp.READ, 0, rows)
-                tr.emit_rows(PuDOp.WRITE, 0, rows)
+                if rowclone:
+                    # In-DRAM relocation: one clone wave per occupied
+                    # row (MRACT-chunked), row indices unchanged.
+                    g.sub.rowclone_rows(0, 0, rows)
+                else:
+                    # Legacy host baseline: round trip every row.
+                    tr.emit_rows(PuDOp.READ, 0, rows)
+                    tr.emit_rows(PuDOp.WRITE, 0, rows)
         used = sorted(b for g in self.groups for b in g.banks)
         self._ranges = []
         prev = 0

@@ -190,6 +190,29 @@ def load_vector(
     return LutLayout(plan=plan, cp=tuple(cp), complement=complement)
 
 
+def clone_vector(sub: BankedSubarray, src_sub: BankedSubarray,
+                 src_layout: LutLayout) -> LutLayout:
+    """Replicate an already-loaded LUT into ``sub`` entirely in-DRAM.
+
+    Allocates the same per-chunk row spans :func:`load_vector` would and
+    fills them with RowClone waves from ``src_sub``'s planes
+    (:meth:`~repro.core.machine.BankedSubarray.clone_rows_from`,
+    MRACT-chunked under the PULSAR capability) -- zero host bytes after
+    the first host load.  Both groups must span the same number of
+    banks; the device layer keeps clone source and destination on one
+    channel.  Returns a layout bit-identical to the source's.
+    """
+    plan = src_layout.plan
+    cp = []
+    for k, src_start in zip(plan.widths, src_layout.cp):
+        n_planes = (1 << k) - 1
+        start = sub.alloc(n_planes)
+        cp.append(start)
+        sub.clone_rows_from(src_sub, src_start, start, n_planes)
+    return LutLayout(plan=plan, cp=tuple(cp),
+                     complement=src_layout.complement)
+
+
 def load_binary_vector(sub: BankedSubarray, values: np.ndarray,
                        n_bits: int) -> int:
     """Store plain binary bit-planes (LSB first) -- the layout used by the

@@ -27,6 +27,34 @@ Rows are stored packed, 32 columns per ``uint32`` word, mirroring the
 vertical (bit-sliced) PuD data layout: element *i* of a bank's vector
 lives in column *i* of that bank, one bit per row.
 
+In-DRAM bulk movement & bitwise merge
+-------------------------------------
+Beyond the compute primitives, the machine models the Processing-Using-
+Memory data-movement family as first-class wave kinds that never touch
+the host:
+
+* ``ROWCLONE`` / ``ROWINIT`` -- RowClone-style bulk copy of one row /
+  bulk initialization from a constant row.  Unlike the compute staging
+  ``rowcopy`` these are *relocation* waves: ``rowclone(r, r)`` still
+  emits (defragmentation re-homes a group onto different physical
+  banks at unchanged row indices).
+* ``AND`` / ``OR`` -- Ambit-style bitwise merge between reserved
+  compute rows (control row pre-cloned to ZERO/ONE, triple-row
+  activation, result to ``dst``).  :meth:`BankedSubarray.ambit_and` /
+  ``ambit_or`` stage arbitrary operand rows and fire the merge: 3
+  waves per bitmap combine, zero host bytes -- this is how compound
+  predicates merge per-range bitmaps inside the banks.
+* ``MRACT`` -- PULSAR-style simultaneous multi-row activation cloning
+  a span of up to ``multi_row_act`` consecutive rows in ONE wave
+  (``SystemConfig.multi_row_act`` is the capability flag; 1 = off).
+  :meth:`BankedSubarray.rowclone_rows` and
+  :meth:`BankedSubarray.clone_rows_from` chunk bulk clones into MRACT
+  waves automatically, collapsing defrag/replication command counts.
+
+All five are command-bus waves with activation latency/energy but zero
+host-lane occupancy and zero off-chip bytes; the scheduler and cost
+model treat them like any other compute wave.
+
 Stream semantics (recording + replay)
 -------------------------------------
 Every primitive appends one entry to the subarray's :class:`CommandTrace`.
@@ -109,6 +137,15 @@ class PuDOp(str, enum.Enum):
     NOT = "not"              # dual-contact-cell NOT (Modified only)
     READ = "read"            # row readout to host (off-chip transfer)
     WRITE = "write"          # host write of a full row (off-chip transfer)
+    # In-DRAM bulk data movement & bitwise merge (RowClone / Ambit /
+    # PULSAR).  None of these occupy the host: they are pure command-bus
+    # waves, so their cost is activation latency + energy, zero host
+    # I/O bytes.
+    ROWCLONE = "rowclone"    # bulk relocation copy, rows=(src, dst)
+    ROWINIT = "rowinit"      # bulk init from a constant row, rows=(const, dst)
+    AND = "and"              # Ambit AND merge wave, rows=(a, b, dst)
+    OR = "or"                # Ambit OR merge wave, rows=(a, b, dst)
+    MRACT = "mract"          # multi-row ACT clone, rows=(src, dst, span)
 
 
 @dataclass
@@ -266,18 +303,33 @@ class CommandTrace:
 def replay(entries, sub: "BankedSubarray") -> None:
     """Re-execute a recorded stream's waves on ``sub``.
 
-    Compute waves (RowCopy/TRA/APA/Frac/NOT) are replayed exactly --
-    including per-bank gather addressing -- so a subarray holding the
-    same pre-stream state (e.g. a snapshot taken after LUT loading)
-    reaches the same post-stream state.  READ waves re-issue the
-    readout (trace traffic) and discard the data; WRITE waves are
-    skipped, since the stream records the command, not the payload --
-    replay therefore validates the *compute* stream, the part whose
-    ordering the scheduler reasons about.
+    Compute waves (RowCopy/TRA/APA/Frac/NOT, and the in-DRAM bulk waves
+    RowClone/RowInit/MRACT/AND/OR) are replayed exactly -- including
+    per-bank gather addressing -- so a subarray holding the same
+    pre-stream state (e.g. a snapshot taken after LUT loading) reaches
+    the same post-stream state.  READ waves re-issue the readout (trace
+    traffic) and discard the data; WRITE waves are skipped, since the
+    stream records the command, not the payload -- replay therefore
+    validates the *compute* stream, the part whose ordering the
+    scheduler reasons about.  Clone waves recorded by a CROSS-group
+    :meth:`BankedSubarray.clone_rows_from` share WRITE's payload
+    caveat: replay re-issues them as intra-subarray copies with the
+    source rows assumed pre-loaded.  Replay of MRACT waves requires the
+    target to have an equal-or-larger ``multi_row_act`` capability.
     """
     for e in entries:
         if e.op is PuDOp.ROWCOPY:
             sub.rowcopy(*e.rows)
+        elif e.op is PuDOp.ROWCLONE:
+            sub.rowclone(*e.rows)
+        elif e.op is PuDOp.ROWINIT:
+            sub.rowinit(e.rows[1], ones=(e.rows[0] == sub.ROW_ONE))
+        elif e.op is PuDOp.MRACT:
+            sub.mract_clone(*e.rows)
+        elif e.op is PuDOp.AND:
+            sub.and_wave(*e.rows)
+        elif e.op is PuDOp.OR:
+            sub.or_wave(*e.rows)
         elif e.op is PuDOp.TRA:
             sub.tra()
         elif e.op is PuDOp.APA:
@@ -358,12 +410,17 @@ class BankedSubarray:
         num_cols: int = 65536,
         arch: PuDArch = PuDArch.UNMODIFIED,
         seed: int | None = 0,
+        multi_row_act: int = 1,
     ) -> None:
         if num_cols % WORD_BITS:
             raise ValueError("num_cols must be a multiple of 32")
         if num_banks < 1:
             raise ValueError("need at least one bank")
+        if multi_row_act < 1:
+            raise ValueError("multi_row_act must be >= 1")
         self.num_banks = num_banks
+        #: PULSAR capability: max rows one MRACT wave may clone (1 = off).
+        self.multi_row_act = multi_row_act
         self.num_rows = num_rows
         self.num_cols = num_cols
         self.num_words = num_cols // WORD_BITS
@@ -465,6 +522,143 @@ class BankedSubarray:
         if self._frac_row == dst:
             self._frac_row = None
         self.trace.emit(PuDOp.ROWCOPY, src, dst)
+
+    # ------------------------------------------------------------------ #
+    # In-DRAM bulk movement & bitwise merge (RowClone / Ambit / PULSAR)
+    # ------------------------------------------------------------------ #
+    def rowclone(self, src: int, dst: int) -> None:
+        """RowClone bulk relocation copy: one wave, no host traffic.
+
+        Unlike :meth:`rowcopy` (a compute staging copy that elides
+        ``src == dst``), a relocation wave is ALWAYS emitted -- a defrag
+        re-homing a group still issues the clone for every occupied row
+        even when the row index is unchanged, because the physical
+        banks differ."""
+        self.state[:, dst] = self._fetch(src)
+        if self._frac_row == dst:
+            self._frac_row = None
+        self.trace.emit(PuDOp.ROWCLONE, src, dst)
+
+    def rowinit(self, dst: int, ones: bool = False) -> None:
+        """RowClone bulk initialization of ``dst`` from a constant row."""
+        const = self.ROW_ONE if ones else self.ROW_ZERO
+        self.state[:, dst] = self.state[:, const]
+        if self._frac_row == dst:
+            self._frac_row = None
+        self.trace.emit(PuDOp.ROWINIT, const, dst)
+
+    def mract_clone(self, src_start: int, dst_start: int, span: int) -> None:
+        """PULSAR multi-row ACT: clone ``span`` consecutive rows in ONE
+        wave.  Requires the capability (``span <= multi_row_act``);
+        source and destination spans must not partially overlap
+        (``src_start == dst_start`` -- the relocation case -- is fine)."""
+        if not 1 <= span <= self.multi_row_act:
+            raise ValueError(
+                f"MRACT span {span} exceeds multi_row_act="
+                f"{self.multi_row_act}")
+        if src_start != dst_start and (
+                abs(src_start - dst_start) < span):
+            raise ValueError("MRACT source/destination spans overlap")
+        self.state[:, dst_start:dst_start + span] = \
+            self.state[:, src_start:src_start + span]
+        if self._frac_row is not None and \
+                dst_start <= self._frac_row < dst_start + span:
+            self._frac_row = None
+        self.trace.emit(PuDOp.MRACT, src_start, dst_start, span)
+
+    def rowclone_rows(self, src_start: int, dst_start: int, n: int) -> None:
+        """Bulk in-DRAM relocation of ``n`` consecutive rows.
+
+        With ``multi_row_act > 1`` the clone is chunked into
+        ``ceil(n / multi_row_act)`` MRACT waves (PULSAR collapsing the
+        command count); otherwise one ROWCLONE wave per row.  Ranges
+        must be identical or non-overlapping."""
+        mra = self.multi_row_act
+        done = 0
+        while done < n:
+            span = min(mra, n - done)
+            if span > 1:
+                self.mract_clone(src_start + done, dst_start + done, span)
+            else:
+                self.rowclone(src_start + done, dst_start + done)
+            done += span
+
+    def clone_rows_from(self, src_sub: "BankedSubarray", src_start: int,
+                        dst_start: int, n: int) -> None:
+        """In-DRAM replication: clone ``n`` rows of ``src_sub`` into this
+        group without a host round trip (the RowClone inter-subarray
+        copy; both groups must span the same number of banks and, in
+        the device model, live on the same channel -- the device layer
+        enforces placement).  The waves are recorded in THIS group's
+        trace (the destination subarray is the one activating), chunked
+        by ``multi_row_act`` exactly like :meth:`rowclone_rows`.
+
+        Replay caveat: like WRITE, a cross-group clone's payload is not
+        in the recorded stream -- replay re-issues the waves as
+        intra-subarray copies with the source state assumed pre-loaded.
+        """
+        if src_sub.num_banks != self.num_banks:
+            raise ValueError(
+                "in-DRAM clone requires matching bank counts: "
+                f"{src_sub.num_banks} != {self.num_banks}")
+        self.state[:, dst_start:dst_start + n] = \
+            src_sub.state[:, src_start:src_start + n]
+        mra = self.multi_row_act
+        done = 0
+        while done < n:
+            span = min(mra, n - done)
+            if span > 1:
+                self.trace.emit(PuDOp.MRACT, src_start + done,
+                                dst_start + done, span)
+            else:
+                self.trace.emit(PuDOp.ROWCLONE, src_start + done,
+                                dst_start + done)
+            done += span
+
+    def and_wave(self, a: RowIdx, b: RowIdx, dst: int) -> None:
+        """Ambit AND merge wave: ``dst = a & b`` in one trace entry.
+
+        Models the in-DRAM sequence (RowClone ZERO into the control
+        row, then triple-row activation over ``a, b, control`` with the
+        result landing in ``dst``); the cost model charges it 2
+        activations over 3 rows.  Callers stage operands into compute
+        rows via :meth:`ambit_and` -- this low-level wave applies to
+        whatever rows it is given."""
+        self.state[:, dst] = self._fetch(a) & self._fetch(b)
+        if self._frac_row == dst:
+            self._frac_row = None
+        self.trace.emit(PuDOp.AND, a, b, dst)
+
+    def or_wave(self, a: RowIdx, b: RowIdx, dst: int) -> None:
+        """Ambit OR merge wave: ``dst = a | b`` (control row = ONE)."""
+        self.state[:, dst] = self._fetch(a) | self._fetch(b)
+        if self._frac_row == dst:
+            self._frac_row = None
+        self.trace.emit(PuDOp.OR, a, b, dst)
+
+    def _ambit_stage(self) -> tuple[int, int]:
+        """The two compute rows Ambit merges stage their operands in."""
+        if self.arch is PuDArch.MODIFIED:
+            return self.T1, self.T2
+        return self.G[1], self.G[2]
+
+    def ambit_and(self, x: RowIdx, y: RowIdx, dst: int) -> None:
+        """Bitmap AND entirely in-DRAM: stage ``x``/``y`` into the
+        substrate's compute rows (2 RowCopies) and fire one AND merge
+        wave into ``dst`` -- 3 waves, zero host bytes, vs 4 waves for
+        the MAJ3-with-ROW_ZERO lowering."""
+        s1, s2 = self._ambit_stage()
+        self.rowcopy(x, s1)
+        self.rowcopy(y, s2)
+        self.and_wave(s1, s2, dst)
+
+    def ambit_or(self, x: RowIdx, y: RowIdx, dst: int) -> None:
+        """Bitmap OR entirely in-DRAM (control row = ONE); see
+        :meth:`ambit_and`."""
+        s1, s2 = self._ambit_stage()
+        self.rowcopy(x, s1)
+        self.rowcopy(y, s2)
+        self.or_wave(s1, s2, dst)
 
     def bulk_not(self, src: RowIdx, dst: int) -> None:
         if self.arch is not PuDArch.MODIFIED:

@@ -35,6 +35,16 @@ Bus model
   duration = max over channels of (bytes on that channel / per-channel
   bandwidth), holding the same exclusivity (a burst cannot interleave
   with a timed ACT sequence on the same channel).
+* The in-DRAM bulk waves -- ROWCLONE/ROWINIT relocation copies, MRACT
+  multi-row clones, Ambit AND/OR merges -- are scheduled exactly like
+  the compute waves: precisely-timed AAP/TRA sequences with their own
+  per-rank tRAS/tFAW accounting (via ``ACTS_PER_OP`` + op latency),
+  holding their channels exclusively for the wave.  They move ZERO
+  bytes over the pins and never occupy a host lane, which is why a
+  RowClone defrag, an in-DRAM LUT replication, or a compound-predicate
+  bank-side merge shortens the makespan relative to its host-path
+  baseline: the channel hold is shorter than the data burst and the
+  host-lane bubble disappears.
 
 Host lanes
 ----------

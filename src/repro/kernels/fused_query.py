@@ -14,6 +14,12 @@ accumulates a per-shard popcount -- the entire device half of a Q1-Q5
 query in ONE kernel launch, no per-group Python loop.  It is the
 batched engine behind :mod:`repro.kernels.fused_session`.
 
+``fused_compound_banked`` extends that to compound predicates
+(``Q1 AND Q2 OR Q3``): per-term bitmaps (each term's ranges combined
+with its internal AND/OR) folded through the connective chain in
+registers, one launch per compound -- the fused mirror of the machine
+path's in-bank Ambit AND/OR merge, bit-exact against it.
+
 ``gbdt_leafbits_banked`` is the GBDT counterpart: one grid over
 *(instance, word block)* folds every feature's per-instance threshold
 comparison (per-instance gather indices, like the banked machine's
@@ -176,6 +182,100 @@ def fused_predicate_banked(lut: jnp.ndarray, idx: jnp.ndarray,
         grid=(s, w // bw),
         in_specs=[
             pl.BlockSpec((num_ranges * 4 * num_chunks,),
+                         lambda si, i: (0,)),
+            pl.BlockSpec((1, r, bw), lambda si, i: (si, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda si, i: (si, i)),
+            pl.BlockSpec((1,), lambda si, i: (si,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, w), jnp.uint32),
+            jax.ShapeDtypeStruct((s,), jnp.uint32),
+        ],
+        interpret=use_interpret(),
+    )(idx, lut)
+
+
+def _compound_kernel(idx_ref, lut_ref, bm_ref, cnt_ref, *,
+                     num_chunks: int, term_ranges: tuple,
+                     term_disj: tuple, conn_disj: tuple):
+    """Compound-predicate generalization of :func:`_predicate_kernel`:
+    evaluate each TERM's bitmap first (its own ranges combined with its
+    own internal AND/OR), then fold the term bitmaps left-associatively
+    through the connectives -- the register-level mirror of the machine
+    path's in-bank Ambit AND/OR merge of parked term rows."""
+    c = num_chunks
+
+    def row(i):
+        return pl.load(lut_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None))
+                       )[0, 0]
+
+    def merge(off):
+        acc = row(idx_ref[off])
+        for j in range(1, c):
+            acc = maj3(acc, row(idx_ref[off + j]), row(idx_ref[off + c + j]))
+        return acc
+
+    def range_bm(rix):
+        off = rix * 4 * c
+        return merge(off) & merge(off + 2 * c)
+
+    rix = 0
+    acc = None
+    for t, (nr, disj) in enumerate(zip(term_ranges, term_disj)):
+        tb = range_bm(rix)
+        rix += 1
+        for _ in range(1, nr):
+            nxt = range_bm(rix)
+            rix += 1
+            tb = (tb | nxt) if disj else (tb & nxt)
+        if acc is None:
+            acc = tb
+        else:
+            acc = (acc | tb) if conn_disj[t - 1] else (acc & tb)
+    bm_ref[0, ...] = acc
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        cnt_ref[0] = jnp.uint32(0)
+    cnt_ref[0] += jax.lax.population_count(acc).astype(jnp.uint32).sum()
+
+
+def fused_compound_banked(lut: jnp.ndarray, idx: jnp.ndarray,
+                          num_chunks: int, term_ranges: tuple,
+                          term_disj: tuple, conn_disj: tuple,
+                          block_words: int = 1024
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-launch compound predicate (``term0 <op0> term1 ...``) over a
+    whole sharded resource.
+
+    ``lut``/``idx`` are laid out exactly as in
+    :func:`fused_predicate_banked`, with ``idx`` holding the
+    concatenated 4*C row-index blocks of EVERY range of every term, in
+    term order.  Static structure (the compile-cache key upstream):
+    ``term_ranges[t]`` ranges per term, combined with that term's
+    internal ``term_disj[t]`` (True = OR), then the term bitmaps folded
+    through ``conn_disj`` (one entry per connective, True = OR,
+    left-associative).  Returns (bitmap [S, W] uint32, per-shard
+    popcount [S] uint32) -- the whole WHERE clause and its COUNT leave
+    the kernel in one pass, matching the machine path's in-DRAM merge
+    contract of one-readout-per-compound."""
+    s, r, w = lut.shape
+    total_ranges = sum(term_ranges)
+    assert len(term_disj) == len(term_ranges)
+    assert len(conn_disj) == len(term_ranges) - 1
+    assert r % SUBLANES == 0 and w % 128 == 0, (r, w)
+    assert idx.shape == (total_ranges * 4 * num_chunks,), idx.shape
+    bw = _vmem_block(r, w, block_words)
+    kernel = functools.partial(_compound_kernel, num_chunks=num_chunks,
+                               term_ranges=tuple(term_ranges),
+                               term_disj=tuple(term_disj),
+                               conn_disj=tuple(conn_disj))
+    return pl.pallas_call(
+        kernel,
+        grid=(s, w // bw),
+        in_specs=[
+            pl.BlockSpec((total_ranges * 4 * num_chunks,),
                          lambda si, i: (0,)),
             pl.BlockSpec((1, r, bw), lambda si, i: (si, 0, i)),
         ],

@@ -17,7 +17,10 @@ the machine path's semantics exactly:
   joins the shard counts -- the PR-5 merge tree's leaves become the
   kernel's vectorized popcounts and its root join becomes the
   collective.  No per-group Python loop, no per-wave host round trip
-  for pure-device segments.
+  for pure-device segments.  Compound predicates run through
+  :func:`~repro.kernels.fused_query.fused_compound_banked` -- one
+  launch per compound, the register-level mirror of the machine path's
+  in-bank Ambit AND/OR merge (one executable per compound *shape*).
 * :class:`FusedGbdtExec` -- GBDT inference.  The forest's threshold LUT
   and one-hot feature masks are device-resident; one
   :func:`~repro.kernels.fused_query.gbdt_leafbits_banked` grid over
@@ -57,7 +60,11 @@ from repro.core.machine import pack_bits, unpack_bits
 from repro.dist.sharding import shard_mesh
 
 from .common import SUBLANES, round_up
-from .fused_query import fused_predicate_banked, gbdt_leafbits_banked
+from .fused_query import (
+    fused_compound_banked,
+    fused_predicate_banked,
+    gbdt_leafbits_banked,
+)
 from .ops import encode_lut, resolve_indices, resolve_indices_banked
 
 
@@ -136,6 +143,31 @@ class FusedTableExec:
             self._fns[key] = fn
         return fn
 
+    def _compound_fn(self, term_ranges: tuple, term_disj: tuple,
+                     conn_disj: tuple):
+        """Compiled executable for one compound SHAPE (per-term range
+        counts, per-term internal ops, connective chain) -- scalars and
+        feature indices stay traced operands, so every compound of the
+        same shape reuses one executable."""
+        key = ("compound", term_ranges, term_disj, conn_disj)
+        fn = self._fns.get(key)
+        if fn is None:
+            c, axis = self.num_chunks, "shards"
+
+            def local(lut, idx):
+                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                bm, cnt = fused_compound_banked(
+                    lut, idx, c, term_ranges, term_disj, conn_disj)
+                total = jax.lax.psum(cnt.astype(jnp.uint32).sum(), axis)
+                return bm, total
+
+            fn = jax.jit(shard_map(
+                local, mesh=self.mesh,
+                in_specs=(P(axis), P()), out_specs=(P(axis), P()),
+                check_rep=False))
+            self._fns[key] = fn
+        return fn
+
     # ---------------------------- index plumbing ----------------------- #
     def _range_idx(self, fi: int, x0: int, x1: int) -> np.ndarray:
         """Algorithm 1 row indices for ``x0 < f_fi < x1`` inside the
@@ -203,6 +235,34 @@ class FusedTableExec:
             # zero new traces
             _, total = self._predicate([(fl, avg, hi)], False)
             return int(total)
+        if name == "compound":
+            # (count, merge, ops, term tuples); `merge` picks the
+            # machine path's in-DRAM vs host combine -- the fused
+            # backend's single launch computes the identical result
+            # either way, so it is accepted and ignored here
+            count, _merge_mode, ops, terms = p
+            ranges: list[tuple[int, int, int]] = []
+            t_nr: list[int] = []
+            t_disj: list[bool] = []
+            for term in terms:
+                tk, *tp = term
+                if tk == "q1":
+                    ranges.append(tuple(tp))
+                    t_nr.append(1)
+                    t_disj.append(False)
+                elif tk in ("q2", "q3"):
+                    fi, x0, x1, fj, y0, y1 = tp
+                    ranges += [(fi, x0, x1), (fj, y0, y1)]
+                    t_nr.append(2)
+                    t_disj.append(tk == "q3")
+                else:
+                    raise ValueError(f"unsupported compound term {tk!r}")
+            conn = tuple(op == "or" for op in ops)
+            idx = np.concatenate([self._range_idx(*r) for r in ranges])
+            bm, total = self._compound_fn(
+                tuple(t_nr), tuple(t_disj), conn)(
+                self.lut, jnp.asarray(idx))
+            return int(total) if count else self._bitmap(bm)
         raise ValueError(f"unknown query {name!r}")
 
 

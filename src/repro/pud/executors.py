@@ -3,11 +3,8 @@
 Public API
 ----------
 Nothing here is public: sessions construct these executors for each
-registered resource, and the one-release deprecation shims
-(:class:`repro.apps.predicate.ShardedQueryPipeline`,
-:class:`repro.apps.gbdt.GbdtBatchPipeline`) subclass them for external
-callers migrating to the session API.  Users go through
-``PudSession.query`` / ``PudSession.predict``.
+registered resource.  Users go through ``PudSession.query`` /
+``PudSession.predict``.
 
 Both executors generalize the PR-2 async host/PuD pipelines from one
 device to a *fleet*:
@@ -23,7 +20,20 @@ device to a *fleet*:
   references.
 * :class:`GbdtBatchExecutor` -- forest replicas placed on every device
   (``groups_per_device`` channel-spread groups each); each wave of a
-  batch spreads its instances over all groups of all devices.
+  batch spreads its instances over all groups of all devices.  With
+  ``replicate="rowclone"`` (the default) only the FIRST replica on each
+  (device, channel) is loaded from the host; every further replica on
+  that channel clones its LUT planes and mask rows in-DRAM with
+  RowClone / multi-row-ACT waves -- zero host bytes per extra replica.
+  (In-DRAM clones cannot cross channels, so a channel's first replica
+  always host-loads.)
+
+Compound predicates (:class:`repro.pud.queries.Compound`) lower two
+ways: ``merge="dram"`` issues ONE wave whose term bitmaps are combined
+by Ambit AND/OR waves inside the banks (only the final bitmap readout
+-- or its popcount -- crosses to the host); ``merge="host"`` is the
+measured baseline that lowers each term as its own wave, reads every
+term bitmap out, and combines them host-side.
 
 Fleet scheduling: every job is scheduled JOINTLY across the fleet by
 one :class:`~repro.core.scheduler.ChannelScheduler` -- each device's
@@ -53,11 +63,9 @@ from dataclasses import replace
 
 import numpy as np
 
-# NOTE: anything under repro.apps (including repro.apps.pipeline, which
-# itself only needs repro.core) MUST be imported lazily inside methods:
-# importing it triggers repro.apps.__init__ -> predicate/gbdt -> their
-# deprecation shims' `from repro.pud.executors import ...` while THIS
-# module is still mid-import.
+# NOTE: repro.apps imports stay lazy (inside methods): importing this
+# module must not pull in the whole app layer -- sessions import it for
+# planning long before any engine is built.
 
 from repro.core.scheduler import (
     ChannelScheduler,
@@ -275,8 +283,8 @@ class QueryBatchExecutor(_FederatedExecutor):
         self._mark_job_start()
         results: list = [None] * len(queries)
         work_ref: list = []  # lets Q5's merge enqueue its phase-2 wave
-        work = deque(self._make_wave(qi, q, results, work_ref)
-                     for qi, q in enumerate(queries))
+        work = deque(wv for qi, q in enumerate(queries)
+                     for wv in self._make_waves(qi, q, results, work_ref))
         work_ref.append(work)
 
         engines = self.engines
@@ -395,29 +403,60 @@ class QueryBatchExecutor(_FederatedExecutor):
         return results
 
     # ------------------------------------------------------------------ #
-    def _make_wave(self, qi: int, q: tuple, results: list,
-                   work_ref: list) -> dict:
+    def _make_waves(self, qi: int, q: tuple, results: list,
+                    work_ref: list) -> list[dict]:
+        """Lower one query tuple into its pipeline wave(s).  Every query
+        is a single wave except a ``merge="host"`` compound, which runs
+        one wave PER TERM (each term's bitmap is read out and combined
+        host-side -- the baseline traffic an in-DRAM merge avoids)."""
         name, *p = q
         mx = (1 << self.table.n_bits) - 1
 
         if name == "q1":
-            return {"kind": "range", "params": tuple(p),
-                    "merge": lambda bm: results.__setitem__(qi, bm)}
+            return [{"kind": "range", "params": tuple(p),
+                     "merge": lambda bm: results.__setitem__(qi, bm)}]
         if name == "q2":
-            return {"kind": "and2", "params": tuple(p),
-                    "merge": lambda bm: results.__setitem__(qi, bm)}
+            return [{"kind": "and2", "params": tuple(p),
+                     "merge": lambda bm: results.__setitem__(qi, bm)}]
         if name == "q3":
-            return {"kind": "or2", "params": tuple(p),
-                    "merge": lambda bm: results.__setitem__(
-                        qi, int(bm.sum()))}
+            return [{"kind": "or2", "params": tuple(p),
+                     "merge": lambda bm: results.__setitem__(
+                         qi, int(bm.sum()))}]
+        if name == "compound":
+            count, mode, ops, terms = p
+
+            def finish(bm):
+                results[qi] = int(bm.sum()) if count else bm
+            if mode == "dram":
+                # one wave: term bitmaps merged by Ambit AND/OR waves
+                # in-bank; only the final parked bitmap is read out
+                return [{"kind": "compound", "params": (ops, terms),
+                         "merge": finish}]
+            # host-merge baseline: one wave (and one full-bitmap
+            # readout) per term, left-associative combine on the host
+            partial: list = [None] * len(terms)
+            waves = []
+            for ti, term in enumerate(terms):
+                kind = {"q1": "range", "q2": "and2", "q3": "or2"}[term[0]]
+
+                def mrg(bm, ti=ti):
+                    partial[ti] = bm
+                    if ti == len(terms) - 1:
+                        acc = partial[0]
+                        for op, nxt in zip(ops, partial[1:]):
+                            acc = (acc & nxt) if op == "and" else (acc | nxt)
+                        finish(acc)
+                waves.append({"kind": kind, "params": tuple(term[1:]),
+                              "merge": mrg})
+            return waves
         if name == "q4":
             fk, *rest = p
 
             def merge_q4(bm):
                 vals = self.table.features[fk][bm]
                 results[qi] = float(vals.mean()) if vals.size else 0.0
-            return {"kind": "and2", "params": tuple(rest),
-                    "merge": merge_q4}
+            return [{"kind": "and2", "params": tuple(rest),
+                     "merge": merge_q4}]
         if name == "q5":
             fl, fk, *rest = p
 
@@ -436,8 +475,8 @@ class QueryBatchExecutor(_FederatedExecutor):
                     "merge": lambda bm2: results.__setitem__(
                         qi, int(bm2.sum())),
                 })
-            return {"kind": "or2", "params": tuple(rest),
-                    "merge": merge_phase1}
+            return [{"kind": "or2", "params": tuple(rest),
+                     "merge": merge_phase1}]
         raise ValueError(f"unknown query {name!r}")
 
 
@@ -446,7 +485,10 @@ class GbdtBatchExecutor(_FederatedExecutor):
 
     Every device gets ``groups_per_device``
     :class:`~repro.apps.gbdt.GbdtPudEngine` forest replicas, placed
-    round-robin over its channels.  A batch is split into waves of
+    round-robin over its channels; with ``replicate="rowclone"`` each
+    channel's replicas after the first are cloned in-DRAM from the
+    first (RowClone/MRACT waves, zero host bytes) instead of re-loaded
+    from the host (``replicate="host"``).  A batch is split into waves of
     ``sum(group wave widths)`` instances spread over all groups of all
     devices; for each wave the executor issues every group's compute
     stream, *then* reads back and merges the previous wave's
@@ -464,25 +506,44 @@ class GbdtBatchExecutor(_FederatedExecutor):
     def __init__(self, forest, arch, devices, groups_per_device: int = 2,
                  banks_per_group: int = 4,
                  num_chunks: int | None = None, channels="auto",
-                 hosts: str = "shared", merge_tree: bool = True) -> None:
+                 hosts: str = "shared", merge_tree: bool = True,
+                 replicate: str = "rowclone") -> None:
         from repro.apps.gbdt import GbdtPudEngine
         from repro.apps.pipeline import HostTimer
 
         super().__init__(devices, hosts=hosts, merge_tree=merge_tree)
         if groups_per_device < 1:
             raise ValueError("need at least one group per device")
+        if replicate not in ("rowclone", "host"):
+            raise ValueError(
+                f"replicate must be 'rowclone' or 'host', got {replicate!r}")
         GbdtBatchExecutor._uid += 1
         self._tag = f"gbdt.p{GbdtBatchExecutor._uid}"
         self.forest = forest
         self.engines = []
+        # first replica built on each (device, channel): the in-DRAM
+        # clone source for later replicas on the same channel.  Clones
+        # never cross channels (RowClone moves data bank-internally /
+        # over a channel's shared internal bus), so clone sources are
+        # keyed per channel and each channel's first replica host-loads.
+        first_on: dict[tuple[int, object], object] = {}
         for gi in range(len(self.devices) * groups_per_device):
             dev = self.devices[gi // groups_per_device]
             ch = (gi % groups_per_device) % dev.channels \
                 if channels == "auto" else channels
+            # only single-channel placements (ints; "auto" resolves to
+            # one) have a well-defined channel to clone within -- spread
+            # or free placements fall back to host loads
+            cloneable = replicate == "rowclone" and \
+                isinstance(ch, (int, np.integer))
+            src = first_on.get((id(dev), int(ch))) if cloneable else None
             eng = GbdtPudEngine(forest, arch, num_chunks=num_chunks,
                                 num_banks=banks_per_group, device=dev,
                                 channels=ch,
-                                label=f"{self._tag}.g{gi}")
+                                label=f"{self._tag}.g{gi}",
+                                clone_source=src)
+            if cloneable:
+                first_on.setdefault((id(dev), int(ch)), eng)
             self.engines.append(eng)
             self.placements.append((dev, eng.sub))
         self.wave_width = sum(e.wave_width for e in self.engines)

@@ -14,7 +14,10 @@ leaving each caller to hand-place groups once and forever.
 * **Admission**: :meth:`admit` registers a resource (a build function
   that places bank groups when called).  If the build does not fit,
   the planner first defragments every device (free-range coalescing
-  plus :meth:`~repro.core.device.PuDDevice.defragment` relocation) and
+  plus :meth:`~repro.core.device.PuDDevice.defragment` relocation --
+  the occupied rows of each sliding group move as in-DRAM RowClone
+  copy waves, never as host READ/WRITE streams, so compaction costs
+  activations on the group's own channel and zero pin bytes) and
   retries, then evicts cold resources (least-recently-used first,
   pinned resources never) and retries, and only then *queues* the
   request -- an alloc that exceeds free capacity is a queue state, not

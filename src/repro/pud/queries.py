@@ -27,6 +27,18 @@ Semantics (bounds are exclusive, matching the paper):
              COUNT(WHERE avg < f_l < 2*avg)            -> int
   (the phase-2 scan's bounds exist only after a host round trip; the
   scheduled timeline includes that barrier)
+
+``Compound`` composes Q1/Q2/Q3 terms with explicit boolean connectives
+(``Compound((q1, q2, q3), ("and", "or"))`` is ``q1 AND q2 OR q3``,
+left-associative).  Each TERM is evaluated to its own bitmap first
+(Q2's internal AND, Q3's internal OR), then the term bitmaps are
+combined -- with ``merge="dram"`` (the default) the combination runs
+as Ambit AND/OR waves inside the banks and only the final bitmap
+readout (or popcount) crosses to the host; ``merge="host"`` is the
+measured baseline that reads every term's bitmap out and combines
+host-side.  ``count=True`` returns the row count instead of the
+bitmap.  Both merge modes -- and both backends -- are bit-exact
+against the NumPy reference.
 """
 
 from __future__ import annotations
@@ -139,4 +151,61 @@ class Q5(_QueryBase):
                             self.x1, self.fj, self.y0, self.y1)
 
 
-Query = Q1 | Q2 | Q3 | Q4 | Q5
+def _term_bitmap(table, term: "Q1 | Q2 | Q3"):
+    """NumPy ground-truth bitmap of ONE compound term.  A Q3 term is
+    its WHERE clause (range OR range) -- the COUNT applies only when
+    Q3 runs standalone."""
+    from repro.apps.predicate import reference_q1, reference_q2
+    if isinstance(term, Q1):
+        return reference_q1(table, term.fi, term.x0, term.x1)
+    if isinstance(term, Q2):
+        return reference_q2(table, term.fi, term.x0, term.x1,
+                            term.fj, term.y0, term.y1)
+    return reference_q1(table, term.fi, term.x0, term.x1) \
+        | reference_q1(table, term.fj, term.y0, term.y1)
+
+
+@dataclass(frozen=True)
+class Compound(_QueryBase):
+    """``terms[0] <ops[0]> terms[1] <ops[1]> ...``, left-associative.
+
+    ``terms`` are Q1/Q2/Q3 instances (each contributes its WHERE-clause
+    bitmap); ``ops`` are ``len(terms) - 1`` connectives from
+    ``{"and", "or"}``.  ``merge="dram"`` combines term bitmaps with
+    Ambit AND/OR waves inside the banks (only the final readout
+    crosses to the host); ``merge="host"`` reads every term bitmap out
+    and combines host-side (the baseline).  ``count=True`` returns the
+    matching-row count instead of the bitmap."""
+
+    terms: tuple
+    ops: tuple[str, ...]
+    count: bool = False
+    merge: str = "dram"
+
+    def __post_init__(self):
+        if not self.terms:
+            raise ValueError("Compound needs at least one term")
+        if any(not isinstance(t, (Q1, Q2, Q3)) for t in self.terms):
+            raise TypeError("Compound terms must be Q1/Q2/Q3 instances")
+        if len(self.ops) != len(self.terms) - 1:
+            raise ValueError(
+                f"need {len(self.terms) - 1} connectives, got "
+                f"{len(self.ops)}")
+        if any(op not in ("and", "or") for op in self.ops):
+            raise ValueError(f"connectives must be 'and'/'or': {self.ops}")
+        if self.merge not in ("dram", "host"):
+            raise ValueError(f"merge must be 'dram' or 'host': {self.merge}")
+
+    def to_tuple(self) -> tuple:
+        return ("compound", self.count, self.merge, tuple(self.ops),
+                tuple(t.to_tuple() for t in self.terms))
+
+    def reference(self, table):
+        bm = _term_bitmap(table, self.terms[0])
+        for op, term in zip(self.ops, self.terms[1:]):
+            nxt = _term_bitmap(table, term)
+            bm = (bm & nxt) if op == "and" else (bm | nxt)
+        return int(bm.sum()) if self.count else bm
+
+
+Query = Q1 | Q2 | Q3 | Q4 | Q5 | Compound

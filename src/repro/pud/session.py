@@ -56,10 +56,24 @@ query kind)`` on the session resource -- scalars and feature indices
 are traced operands, so repeated jobs re-trace ZERO times (regression-
 tested); the cache is dropped with the resource.
 
+In-DRAM data movement
+---------------------
+Bulk data movement inside a session never round-trips the host when a
+RowClone-class path exists: ``load_forest(replicate="rowclone")`` (the
+default) host-loads only the FIRST replica per (device, channel) and
+clones the remaining replicas' LUT planes and mask rows with
+RowClone / multi-row-ACT waves; planner defragmentation relocates
+evicted-and-rebuilt groups with RowClone copy waves instead of
+READ/WRITE streams; and :class:`~repro.pud.queries.Compound`
+predicates (``merge="dram"``) combine term bitmaps with Ambit AND/OR
+waves inside the banks so only the final bitmap (or its popcount)
+crosses the pins.  ``sys_cfg.multi_row_act`` > 1 lets one activation
+clone that many rows per wave (PULSAR-style), collapsing clone command
+counts.
+
 This replaces direct construction of ``PudQueryEngine`` /
-``ShardedQueryPipeline`` / ``GbdtPudEngine`` / ``GbdtBatchPipeline``,
-which are now internal executors behind the session (the pipeline
-constructors remain one release as deprecation shims).
+``GbdtPudEngine`` and the PR-4 pipeline classes, which are internal
+executors behind the session.
 """
 
 from __future__ import annotations
@@ -77,7 +91,7 @@ from repro.core.scheduler import Timeline
 
 from .executors import GbdtBatchExecutor, QueryBatchExecutor
 from .planner import Planner
-from .queries import Q1, Q2, Q3, Q4, Q5
+from .queries import Q1, Q2, Q3, Q4, Q5, Compound
 
 
 @dataclass
@@ -230,12 +244,16 @@ class PudSession:
     def load_forest(self, forest, name: str | None = None,
                     groups_per_device: int = 2, banks_per_group: int = 4,
                     num_chunks: int | None = None,
-                    channels="auto",
+                    channels="auto", replicate: str = "rowclone",
                     pinned: bool = False) -> ForestHandle:
         """Register an oblivious forest (thresholds + one-hot masks
         replicated into ``groups_per_device`` channel-spread groups on
         every device) and return its handle; placement queues when it
-        does not fit."""
+        does not fit.  ``replicate="rowclone"`` (default) host-loads
+        only each channel's first replica and clones the rest in-DRAM
+        (RowClone/MRACT waves, zero host bytes per extra replica);
+        ``"host"`` re-loads every replica over the pins (the
+        baseline)."""
         name = name or self._auto_name("forest")
 
         def build():
@@ -243,7 +261,8 @@ class PudSession:
                 forest, self.arch, self.devices,
                 groups_per_device=groups_per_device,
                 banks_per_group=banks_per_group, num_chunks=num_chunks,
-                channels=channels, hosts=self.hosts)
+                channels=channels, hosts=self.hosts,
+                replicate=replicate)
 
         self.planner.admit(name, "forest", build, pinned=pinned)
         return ForestHandle(name=name, session=self,
@@ -292,17 +311,19 @@ class PudSession:
         return fx
 
     def query(self, table: TableHandle,
-              queries: "Q1 | Q2 | Q3 | Q4 | Q5 | Sequence",
+              queries: "Q1 | Q2 | Q3 | Q4 | Q5 | Compound | Sequence",
               backend: str | None = None) -> JobResult:
         """Run one query (or a batch -- batches pipeline back-to-back
         and overlap host merges with PuD execution) against a table.
         Returns a :class:`JobResult`; for a single query ``result`` is
         that query's value, for a batch it is the list of values, in
-        order, bit-exact against the NumPy references.  ``backend``
-        overrides the session default for this job; the fused backend
-        returns measured ``wallclock_ns`` instead of scheduler
-        stats."""
-        single = isinstance(queries, (Q1, Q2, Q3, Q4, Q5))
+        order, bit-exact against the NumPy references.
+        :class:`~repro.pud.queries.Compound` queries merge their term
+        bitmaps in-DRAM by default (``merge="host"`` selects the
+        read-every-term baseline).  ``backend`` overrides the session
+        default for this job; the fused backend returns measured
+        ``wallclock_ns`` instead of scheduler stats."""
+        single = isinstance(queries, (Q1, Q2, Q3, Q4, Q5, Compound))
         batch = [queries] if single else list(queries)
         ex = self._executor(table, "table")
         if (backend or self.backend) == "fused":

@@ -2,7 +2,7 @@
 scheduled nodes (bubble insertion, cross-group merge, host-lane
 serialization, bytes-model fallback), the barrier >= barrier-free
 regression property, Q5 batch-ordering edge cases through
-``ShardedQueryPipeline.run``, trace/timeline bandwidth-accounting
+``QueryBatchExecutor.run``, trace/timeline bandwidth-accounting
 agreement, active-SIMD-width plumbing, host active/idle energy split,
 and the device allocator's free/realloc path."""
 
@@ -24,6 +24,7 @@ from repro.core.machine import (
     Segment,
 )
 from repro.core.scheduler import ChannelScheduler, GroupStream, Timeline
+from repro.pud.executors import GbdtBatchExecutor, QueryBatchExecutor
 
 
 def _stream(label, footprint, ops, cols=4096, segs=None, segments=None,
@@ -153,8 +154,8 @@ def test_barrier_schedule_never_shorter_q5_pipeline():
     device span strictly longer."""
     t = P.Table.generate(12_000, 8, seed=5)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev, num_shards=2,
-                                cols_per_bank=4096)
+    qp = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=4096)
     mx = 255
     qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
     res = qp.run([("q5", 3, 2, *qa)])
@@ -200,8 +201,9 @@ def q5_fixture():
 
 def _fresh_pipeline(t):
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    return dev, P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
-                                       num_shards=2, cols_per_bank=4096)
+    return dev, QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                                   shards_per_device=2,
+                                   cols_per_bank=4096)
 
 
 def test_q5_only_query_in_batch(q5_fixture):
@@ -405,8 +407,8 @@ def test_pipeline_stats_come_from_schedule():
     rng = np.random.default_rng(4)
     x = rng.integers(0, 256, (16, 4), dtype=np.uint64)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
-                               num_groups=2, banks_per_group=4)
+    pipe = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                             groups_per_device=2, banks_per_group=4)
     got = pipe.infer(x)
     np.testing.assert_allclose(got, G.reference_predict(forest, x),
                                atol=1e-3)

@@ -1,0 +1,445 @@
+"""In-DRAM bulk data movement & bitwise merge (PR-7 wave kinds).
+
+Covers the machine primitives (RowClone copy/init, multi-row ACT,
+Ambit AND/OR waves) bit-exactly against NumPy, their replay/cost/
+scheduler contracts (zero host bytes, energy scaling with the
+multi-row-ACT span), the three rewired host-I/O paths -- RowClone
+defragmentation, in-DRAM forest replication, and compound-predicate
+in-bank merging -- and machine-vs-fused parity on compounds."""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.apps import gbdt as G
+from repro.apps import predicate as P
+from repro.core import cost
+from repro.core.device import PuDDevice
+from repro.core.machine import BankedSubarray, PuDArch, PuDOp, replay
+from repro.core.scheduler import ChannelScheduler
+from repro.pud import PudSession
+from repro.pud.executors import GbdtBatchExecutor, QueryBatchExecutor
+from repro.pud.queries import Compound, Q1, Q2, Q3
+
+ARCHS = [PuDArch.MODIFIED, PuDArch.UNMODIFIED]
+
+
+def _sub(arch=PuDArch.MODIFIED, banks=3, rows=64, cols=64, mra=1):
+    return BankedSubarray(num_banks=banks, num_rows=rows, num_cols=cols,
+                          arch=arch, multi_row_act=mra)
+
+
+def _fill(sub, n, seed=0):
+    rng = np.random.default_rng(seed)
+    start = sub.alloc(n)
+    sub.host_write_rows(start, rng.integers(
+        0, 1 << 32, (sub.num_banks, n, sub.num_cols // 32),
+        dtype=np.uint64).astype(np.uint32))
+    return start
+
+
+# ------------------------- machine primitives ------------------------- #
+
+def test_rowclone_copies_and_always_emits():
+    sub = _sub()
+    a = _fill(sub, 2)
+    sub.trace.clear()
+    sub.rowclone(a, a + 1)
+    np.testing.assert_array_equal(sub.state[:, a], sub.state[:, a + 1])
+    # unlike rowcopy, a same-row clone still costs a wave (the trace
+    # models the command bus, not the data)
+    sub.rowclone(a, a)
+    assert [e.op for e in sub.trace.entries] == [PuDOp.ROWCLONE] * 2
+    assert sub.trace.entries[1].rows == (a, a)
+
+
+def test_rowinit_zeros_and_ones():
+    sub = _sub()
+    a = _fill(sub, 1)
+    sub.rowinit(a)
+    assert not sub.state[:, a].any()
+    sub.rowinit(a, ones=True)
+    got = np.unpackbits(sub.state[:, a].view(np.uint8))
+    assert got.all()
+    assert sub.trace.entries[-1].rows == (sub.ROW_ONE, a)
+
+
+def test_mract_clone_span_and_validation():
+    sub = _sub(mra=4)
+    src = _fill(sub, 4, seed=3)
+    dst = sub.alloc(4)
+    sub.mract_clone(src, dst, 4)
+    np.testing.assert_array_equal(sub.state[:, src:src + 4],
+                                  sub.state[:, dst:dst + 4])
+    assert sub.trace.entries[-1].op is PuDOp.MRACT
+    assert sub.trace.entries[-1].rows == (src, dst, 4)
+    with pytest.raises(ValueError, match="span"):
+        sub.mract_clone(src, dst, 5)           # beyond the capability
+    with pytest.raises(ValueError, match="overlap"):
+        sub.mract_clone(src, src + 1, 4)       # partial overlap
+    with pytest.raises(ValueError):
+        _sub(mra=0)
+
+
+def test_rowclone_rows_chunks_under_capability():
+    for mra, want_ops in [(1, [PuDOp.ROWCLONE] * 5),
+                          (4, [PuDOp.MRACT, PuDOp.ROWCLONE]),
+                          (8, [PuDOp.MRACT])]:
+        sub = _sub(rows=128, mra=mra)
+        src = _fill(sub, 5, seed=4)
+        dst = sub.alloc(5)
+        sub.trace.clear()
+        sub.rowclone_rows(src, dst, 5)
+        assert [e.op for e in sub.trace.entries] == want_ops, mra
+        np.testing.assert_array_equal(sub.state[:, src:src + 5],
+                                      sub.state[:, dst:dst + 5])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_ambit_and_or_bit_exact_no_host_io(arch):
+    sub = _sub(arch=arch, banks=2, rows=64, cols=128)
+    x, y = _fill(sub, 1, seed=5), _fill(sub, 1, seed=6)
+    dst = sub.alloc(1)
+    sub.trace.clear()
+    sub.ambit_and(x, y, dst)
+    np.testing.assert_array_equal(sub.state[:, dst],
+                                  sub.state[:, x] & sub.state[:, y])
+    sub.ambit_or(x, y, dst)
+    np.testing.assert_array_equal(sub.state[:, dst],
+                                  sub.state[:, x] | sub.state[:, y])
+    ops = [e.op for e in sub.trace.entries]
+    # 2 staging copies + 1 merge wave each; nothing crosses the pins
+    assert ops.count(PuDOp.AND) == 1 and ops.count(PuDOp.OR) == 1
+    assert len(ops) == 6
+    assert not any(o in (PuDOp.READ, PuDOp.WRITE) for o in ops)
+
+
+def test_clone_rows_from_cross_group_and_replay():
+    """Cross-group clone: destination state matches the source, waves
+    land in the DESTINATION trace, and replay is WRITE-like -- with the
+    source rows preloaded, re-issuing the recorded waves reproduces the
+    destination span."""
+    src_sub, dst_sub = _sub(mra=4), _sub(mra=4)
+    s0 = _fill(src_sub, 6, seed=7)
+    dst_sub.alloc(8)             # keep the clone span disjoint from s0
+    d0 = dst_sub.alloc(6)
+    snap = dst_sub.state.copy()
+    n_src_entries = len(src_sub.trace.entries)
+    dst_sub.clone_rows_from(src_sub, s0, d0, 6)
+    np.testing.assert_array_equal(dst_sub.state[:, d0:d0 + 6],
+                                  src_sub.state[:, s0:s0 + 6])
+    assert len(src_sub.trace.entries) == n_src_entries
+    assert any(e.op is PuDOp.MRACT for e in dst_sub.trace.entries)
+    twin = _sub(mra=4)
+    twin.state[...] = snap
+    twin.state[:, s0:s0 + 6] = src_sub.state[:, s0:s0 + 6]
+    replay(dst_sub.trace.entries, twin)
+    np.testing.assert_array_equal(twin.state[:, d0:d0 + 6],
+                                  dst_sub.state[:, d0:d0 + 6])
+
+
+def test_replay_reproduces_all_new_wave_kinds():
+    sub = _sub(mra=2)
+    a = _fill(sub, 2, seed=8)
+    b = sub.alloc(2)
+    dst = sub.alloc(1)
+    snap = sub.state.copy()
+    sub.trace.clear()
+    sub.rowclone(a, b)
+    sub.mract_clone(a, b, 2)
+    sub.rowinit(dst, ones=True)
+    sub.and_wave(a, b, dst)
+    sub.or_wave(a, b + 1, dst)
+    twin = _sub(mra=2)
+    twin.state[...] = snap
+    replay(sub.trace.entries, twin)
+    np.testing.assert_array_equal(twin.state, sub.state)
+
+
+# ----------------------- cost / scheduler contracts -------------------- #
+
+def test_clone_waves_move_zero_host_bytes():
+    sub = _sub(mra=4)
+    src = _fill(sub, 8, seed=9)
+    dst = sub.alloc(8)
+    sub.trace.clear()
+    sub.rowclone_rows(src, dst, 8)
+    kc = cost.trace_cost(sub.trace.counts(), cost.DESKTOP,
+                         banks=sub.num_banks,
+                         cols_per_bank=sub.num_cols)
+    base = cost.trace_cost({}, cost.DESKTOP, banks=sub.num_banks,
+                           cols_per_bank=sub.num_cols)
+    # pure compute: no transfer term beyond the idle-power floor
+    assert sub.trace.counts().get("read", 0) == 0
+    assert sub.trace.counts().get("write", 0) == 0
+    assert kc.time_ns > base.time_ns   # the ACTs themselves are charged
+
+
+def test_mract_energy_scales_with_span():
+    sys1 = replace(cost.DESKTOP, multi_row_act=1)
+    sys8 = replace(cost.DESKTOP, multi_row_act=8)
+    e1 = cost.wave_energy_nj(PuDOp.MRACT, 4, sys1)
+    e8 = cost.wave_energy_nj(PuDOp.MRACT, 4, sys8)
+    assert e8 > e1                     # +22%/extra simultaneous row
+    # ...but 1 MRACT@8 costs less than 8 single-row clones
+    assert e8 < 8 * cost.wave_energy_nj(PuDOp.ROWCLONE, 4, sys8)
+
+
+def test_scheduler_prices_clone_waves_off_the_host_lane():
+    """A pure clone stream schedules with zero host bytes and no host
+    spans -- the point of the RowClone lowering."""
+    from repro.core.scheduler import GroupStream
+    sub = _sub(mra=1)
+    src = _fill(sub, 4, seed=10)
+    dst = sub.alloc(4)
+    sub.trace.clear()
+    sub.rowclone_rows(src, dst, 4)
+    stream = GroupStream.from_trace("clone", sub.trace,
+                                    {0: {0: sub.num_banks}}, sub.num_cols)
+    tl = ChannelScheduler(cost.DESKTOP).schedule([stream])
+    assert all(w.io_bytes == 0.0 for w in tl.waves)
+    assert not tl.host_spans
+    assert tl.makespan_ns > 0
+
+
+# --------------------- RowClone defragmentation ------------------------ #
+
+def _defrag_device(rowclone):
+    # row-buffer-width rows (4096 cols): the regime where streaming a
+    # row over the pins costs more than re-activating it in place
+    dev = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=1,
+                    banks_per_rank=8, num_rows=512, cols_per_bank=4096,
+                    seed=11)
+    subs = [dev.alloc_banks(2, label=f"g{i}") for i in range(3)]
+    rng = np.random.default_rng(12)
+    for s in subs:
+        start = s.alloc(100)
+        s.host_write_rows(start, rng.integers(
+            0, 1 << 32, (s.num_banks, 100, s.num_cols // 32),
+            dtype=np.uint64).astype(np.uint32))
+    dev.free_banks(subs[0])
+    for s in subs[1:]:
+        s.trace.clear()
+    before = [s.state.copy() for s in subs[1:]]
+    moved = dev.defragment(rowclone=rowclone)
+    return dev, subs[1:], before, moved
+
+
+def test_defrag_rowclone_strictly_beats_host_relocation():
+    """The PR-7 acceptance property: RowClone defrag relocates the same
+    banks bit-exactly with a strictly lower scheduled makespan AND
+    strictly fewer host I/O bytes than the READ/WRITE baseline."""
+    results = {}
+    for rowclone in (True, False):
+        dev, subs, before, moved = _defrag_device(rowclone)
+        for b, s in zip(before, subs):
+            np.testing.assert_array_equal(b, s.state)
+        tl = ChannelScheduler(cost.DESKTOP).schedule(dev.streams())
+        io = sum(w.io_bytes for w in tl.waves)
+        results[rowclone] = (moved, tl.makespan_ns, io)
+    assert results[True][0] == results[False][0] > 0
+    assert results[True][1] < results[False][1]
+    assert results[True][2] < results[False][2]
+    assert results[True][2] == 0.0     # nothing crosses the pins
+    dev, subs, _, _ = _defrag_device(True)
+    ops = [e.op for s in subs for e in s.trace.entries]
+    assert all(o not in (PuDOp.READ, PuDOp.WRITE) for o in ops)
+    assert any(o in (PuDOp.ROWCLONE, PuDOp.MRACT) for o in ops)
+
+
+def test_planner_defrag_uses_rowclone_by_default():
+    """The session planner's compaction path inherits the device
+    default: an evict-free-readmit cycle that defragments never emits
+    host READ/WRITE relocation streams."""
+    t = P.Table.generate(4_000, 8, seed=13)
+    s = PudSession(num_devices=1)
+    h1 = s.create_table(t, name="a", cols_per_bank=4096)
+    h2 = s.create_table(t, name="b", cols_per_bank=4096)
+    s.executor(h1), s.executor(h2)
+    for eng in s.executor(h2).engines:
+        eng.sub.trace.clear()
+    s.drop(h1)
+    moved = sum(d.defragment() for d in s.devices)
+    if moved:
+        ops = [e.op for eng in s.executor(h2).engines
+               for e in eng.sub.trace.entries]
+        assert all(o not in (PuDOp.READ, PuDOp.WRITE) for o in ops)
+
+
+# ----------------------- in-DRAM forest replication -------------------- #
+
+def test_forest_replication_rowclone_halves_host_writes():
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=14)
+    dev_h = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    dev_rc = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    ex_h = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev_h],
+                             groups_per_device=4, banks_per_group=2,
+                             replicate="host")
+    ex_rc = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev_rc],
+                              groups_per_device=4, banks_per_group=2,
+                              replicate="rowclone")
+
+    def writes(ex):
+        return sum(1 for e in ex.engines for w in e.sub.trace.entries
+                   if w.op is PuDOp.WRITE)
+
+    def clones(ex):
+        return sum(1 for e in ex.engines for w in e.sub.trace.entries
+                   if w.op in (PuDOp.ROWCLONE, PuDOp.MRACT))
+
+    # 2 channels x 2 replicas each: exactly half the replicas clone
+    assert writes(ex_rc) == writes(ex_h) // 2
+    assert clones(ex_rc) > 0 and clones(ex_h) == 0
+    # cloned replicas hold bit-identical LUT planes -> identical
+    # predictions wave-for-wave
+    rng = np.random.default_rng(15)
+    X = rng.integers(0, 256, (24, 3), dtype=np.uint64)
+    np.testing.assert_array_equal(ex_rc.infer(X), ex_h.infer(X))
+
+
+def test_forest_replication_mract_collapses_clone_count():
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=14)
+
+    def clone_waves(mra):
+        dev = PuDDevice.from_system(
+            replace(cost.DESKTOP, multi_row_act=mra), PuDArch.MODIFIED)
+        ex = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                               groups_per_device=4, banks_per_group=2)
+        return sum(1 for e in ex.engines for w in e.sub.trace.entries
+                   if w.op in (PuDOp.ROWCLONE, PuDOp.MRACT))
+
+    assert clone_waves(4) < clone_waves(1)
+
+
+def test_replication_never_crosses_channels():
+    """Each (device, channel)'s first replica host-loads: a 2-channel
+    device with 2 groups/device has no same-channel pair, so rowclone
+    replication degrades to host loading (clones cannot cross
+    channels)."""
+    forest = G.ObliviousForest.random(num_trees=8, depth=3,
+                                      num_features=3, n_bits=8, seed=16)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    assert dev.channels == 2
+    ex = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                           groups_per_device=2, banks_per_group=2,
+                           replicate="rowclone")
+    assert not any(w.op in (PuDOp.ROWCLONE, PuDOp.MRACT)
+                   for e in ex.engines for w in e.sub.trace.entries)
+
+
+# ------------------------- compound predicates ------------------------- #
+
+def _compound_cases():
+    mx = 255
+    t1 = Q1(fi=0, x0=mx // 8, x1=mx // 2)
+    t2 = Q2(fi=1, x0=5, x1=220, fj=2, y0=30, y1=250)
+    t3 = Q3(fi=3, x0=0, x1=90, fj=4, y0=100, y1=250)
+    return [
+        Compound((t1,), ()),
+        Compound((t1, t2), ("and",)),
+        Compound((t1, t3), ("or",), count=True),
+        Compound((t1, t2, t3), ("and", "or")),
+        Compound((t3, t2, t1), ("or", "and"), count=True),
+    ]
+
+
+def test_compound_validation():
+    t1 = Q1(fi=0, x0=1, x1=9)
+    with pytest.raises(ValueError, match="at least one term"):
+        Compound((), ())
+    with pytest.raises(ValueError, match="connectives"):
+        Compound((t1, t1), ())
+    with pytest.raises(ValueError, match="'and'/'or'"):
+        Compound((t1, t1), ("xor",))
+    with pytest.raises(TypeError, match="Q1/Q2/Q3"):
+        Compound((t1, "q9"), ("and",))
+    with pytest.raises(ValueError, match="merge"):
+        Compound((t1,), (), merge="chip")
+
+
+@pytest.mark.parametrize("merge", ["dram", "host"])
+def test_compound_machine_matches_reference(merge):
+    t = P.Table.generate(6_000, 8, seed=17)
+    dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+    ex = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=4096)
+    qs = [Compound(q.terms, q.ops, count=q.count, merge=merge)
+          for q in _compound_cases()]
+    res = ex.run([q.to_tuple() for q in qs])
+    for q, got in zip(qs, res):
+        assert q.check(t, got), (merge, q.ops)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_compound_both_arches_single_engine(arch):
+    """The in-bank Ambit merge path (staging rows differ per arch) is
+    bit-exact on Modified (T1/T2) and Unmodified (APA group) PuD."""
+    t = P.Table.generate(3_000, 8, seed=18)
+    eng = P.PudQueryEngine(t, arch, cols_per_bank=4096)
+    q = _compound_cases()[3]
+    park = eng.submit("compound",
+                      (tuple(q.ops),
+                       tuple(term.to_tuple() for term in q.terms)), 0)
+    got = eng.merge_words(eng.sub.host_read_row(park))
+    np.testing.assert_array_equal(got, q.reference(t))
+
+
+def test_compound_dram_merge_reads_once_per_query():
+    """merge="dram" parks ONE bitmap per compound; merge="host" reads
+    one per term -- the readout (and host byte) gap is the point."""
+    t = P.Table.generate(4_000, 8, seed=19)
+    q = _compound_cases()[3]          # 3 terms
+
+    def reads(merge):
+        dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
+        ex = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                                shards_per_device=2, cols_per_bank=4096)
+        for e in ex.engines:
+            e.sub.trace.clear()
+        ex.run([Compound(q.terms, q.ops, merge=merge).to_tuple()])
+        return sum(1 for e in ex.engines for w in e.sub.trace.entries
+                   if w.op is PuDOp.READ)
+
+    assert reads("dram") == reads("host") // 3
+
+
+def test_compound_session_job_and_stats():
+    t = P.Table.generate(5_000, 8, seed=20)
+    s = PudSession(num_devices=2)
+    h = s.create_table(t, cols_per_bank=4096)
+    q = _compound_cases()[4]
+    job = s.query(h, q)
+    assert q.check(t, job.result)
+    assert job.stats.makespan_ns > 0
+    batch = [_compound_cases()[1], Q1(fi=0, x0=3, x1=200),
+             _compound_cases()[2]]
+    res = s.query(h, batch).result
+    for qq, r in zip(batch, res):
+        assert qq.check(t, r)
+
+
+def test_compound_fused_parity_bit_exact():
+    """Gate (c): identical lowering -- machine executor and fused
+    backend agree bit-for-bit on every compound (bitmaps and counts),
+    and one executable serves every compound of the same shape."""
+    t = P.Table.generate(6_000, 8, seed=21)
+    s = PudSession(num_devices=1)
+    h = s.create_table(t, cols_per_bank=4096)
+    for q in _compound_cases():
+        rm = s.query(h, q).result
+        rf = s.query(h, q, backend="fused").result
+        if isinstance(rm, np.ndarray):
+            np.testing.assert_array_equal(rm, rf)
+        else:
+            assert rm == rf
+        assert q.check(t, rf)
+    # zero-retrace invariant extends to compound shapes
+    fx = s._fused[h.name]
+    q = _compound_cases()[3]
+    before = dict(fx.trace_counts)
+    s.query(h, Compound(q.terms, q.ops, count=True), backend="fused")
+    s.query(h, q, backend="fused")
+    assert fx.trace_counts == before   # same shape -> cached executable

@@ -114,9 +114,13 @@ def test_defragment_compacts_and_records_relocation_cost():
     assert dev.groups[0].banks == (0, 1)
     assert dev.groups[1].banks == (2, 3)
     assert d is not None
-    reads = sum(1 for e in b.trace.entries if e.op is PuDOp.READ)
-    writes = sum(1 for e in b.trace.entries if e.op is PuDOp.WRITE)
-    assert reads >= 1 and writes >= 1       # host round trip recorded
+    # relocation is in-DRAM by default: RowClone/MRACT waves, no host
+    # round trip over the pins
+    clones = sum(1 for e in b.trace.entries
+                 if e.op in (PuDOp.ROWCLONE, PuDOp.MRACT))
+    hostio = sum(1 for e in b.trace.entries
+                 if e.op in (PuDOp.READ, PuDOp.WRITE))
+    assert clones >= 1 and hostio == 0
     assert any(s.label.startswith("defrag:") for s in b.trace.segments)
 
 
@@ -376,29 +380,29 @@ def test_job_timelines_are_job_scoped_not_cumulative():
 
 
 # --------------------------------------------------------------------- #
-# Deprecation shims
+# Direct executor construction (the PR-4 deprecation shims are gone)
 # --------------------------------------------------------------------- #
 
-def test_sharded_query_pipeline_shim_warns_and_delegates():
+def test_pipeline_shims_removed():
+    assert not hasattr(P, "ShardedQueryPipeline")
+    assert not hasattr(G, "GbdtBatchPipeline")
+
+
+def test_query_executor_direct_construction():
     t = table(1, seed=7)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    with pytest.warns(DeprecationWarning, match="PudSession"):
-        qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev,
-                                    num_shards=2, cols_per_bank=4096)
-    assert isinstance(qp, QueryBatchExecutor)
-    assert qp.device is dev
+    qp = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2, cols_per_bank=4096)
     res = qp.run([("q1", 0, 10, 200)])
     assert (res[0] == P.reference_q1(t, 0, 10, 200)).all()
 
 
-def test_gbdt_batch_pipeline_shim_warns_and_delegates():
+def test_gbdt_executor_direct_construction():
     forest = G.ObliviousForest.random(num_trees=8, depth=3,
                                       num_features=3, n_bits=8, seed=2)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    with pytest.warns(DeprecationWarning, match="PudSession"):
-        pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
-                                   num_groups=2, banks_per_group=2)
-    assert isinstance(pipe, GbdtBatchExecutor)
+    pipe = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                             groups_per_device=2, banks_per_group=2)
     rng = np.random.default_rng(4)
     X = rng.integers(0, 256, (5, 3), dtype=np.uint64)
     np.testing.assert_allclose(pipe.infer(X),

@@ -21,6 +21,7 @@ from repro.core.machine import (
     replay,
 )
 from repro.core.scheduler import ChannelScheduler, GroupStream
+from repro.pud.executors import GbdtBatchExecutor, QueryBatchExecutor
 
 SEGS = (Segment(0, "", ()),)
 
@@ -186,8 +187,8 @@ def test_channel_scaling_throughput_acceptance():
         sys_cfg = replace(cost.DESKTOP, channels=ch,
                           bandwidth_gbps=21.3 * ch)
         dev = PuDDevice.from_system(sys_cfg, PuDArch.MODIFIED)
-        pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
-                                   num_groups=4, banks_per_group=2)
+        pipe = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                                 groups_per_device=4, banks_per_group=2)
         x = rng.integers(0, 256, (2 * pipe.wave_width, 3), dtype=np.uint64)
         for e in pipe.engines:
             e.sub.trace.clear()
@@ -247,8 +248,8 @@ def test_gbdt_pipeline_matches_reference_64_instances():
     rng = np.random.default_rng(13)
     x = rng.integers(0, 256, (64, 5), dtype=np.uint64)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
-                               num_groups=2, banks_per_group=8)
+    pipe = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                             groups_per_device=2, banks_per_group=8)
     got = pipe.infer(x)
     np.testing.assert_allclose(got, G.reference_predict(forest, x),
                                atol=1e-3)
@@ -263,8 +264,8 @@ def test_gbdt_pipeline_ragged_tail():
     rng = np.random.default_rng(3)
     x = rng.integers(0, 256, (19, 4), dtype=np.uint64)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    pipe = G.GbdtBatchPipeline(forest, PuDArch.MODIFIED, dev,
-                               num_groups=3, banks_per_group=3)
+    pipe = GbdtBatchExecutor(forest, PuDArch.MODIFIED, [dev],
+                             groups_per_device=3, banks_per_group=3)
     np.testing.assert_allclose(pipe.infer(x),
                                G.reference_predict(forest, x), atol=1e-3)
 
@@ -290,7 +291,8 @@ def test_query_pipeline_matches_references_1m_records():
     pipeline equal the NumPy references."""
     t = P.Table.generate(1_000_000, 8, seed=11)
     dev = PuDDevice.from_system(cost.DESKTOP, PuDArch.MODIFIED)
-    qp = P.ShardedQueryPipeline(t, PuDArch.MODIFIED, dev, num_shards=2)
+    qp = QueryBatchExecutor(t, PuDArch.MODIFIED, [dev],
+                            shards_per_device=2)
     mx = 255
     qa = (0, mx // 8, mx // 2, 1, mx // 4, 3 * mx // 4)
     res = qp.run([
