@@ -12,13 +12,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.apps import gbdt as G
 from repro.apps import predicate as P
 from repro.core import cost
-from repro.core.bitserial import bitserial_op_count, paper_bitserial_op_count
 from repro.core.clutch import clutch_op_count
 from repro.core.encoding import make_plan, min_chunks_for_budget
-from repro.core.machine import PuDArch, PuDOp
+from repro.core.machine import PuDArch
 
 M, U = PuDArch.MODIFIED, PuDArch.UNMODIFIED
 PRECISIONS = (8, 16, 32)
@@ -114,8 +112,6 @@ def _gbdt_cost(n_feat, trees, depth, n_bits, arch, method, sysconf,
         n_bits, 1016 - n_feat - 2).num_chunks if method == "clutch" else 0
     if method == "clutch":
         per_maj = 3 if arch is M else 4
-        ops_feat = clutch_op_count(chunks, arch) + 2 * per_maj + 1
-        counts_one = {"rowcopy": 1}
         # build the op histogram for one instance
         per = cost._pud_counts("clutch", n_bits, chunks, arch)
         hist = {k: v * n_feat for k, v in per.items()}
@@ -326,10 +322,8 @@ def fig22_footprint_tradeoff():
     rows = []
     sysconf = cost.DESKTOP
     records = TABLE_SIZES["medium"] / 8
-    cpu = _query_cpu(32, sysconf, records)
     for chunks in (5, 6, 8, 10, 12, 16):
         plan = make_plan(32, chunks)
-        c = _query_cost(32, M, "clutch", sysconf, records)
         # footprint relative to binary: rows/32 per element
         rel = plan.rows_required / 32
         per = cost._pud_counts("clutch", 32, chunks, M)

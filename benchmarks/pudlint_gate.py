@@ -1,0 +1,110 @@
+"""Run one benchmark under the pudlint sweep and gate CI on the result.
+
+Usage::
+
+    python benchmarks/pudlint_gate.py <bench> [--smoke]
+    python benchmarks/pudlint_gate.py --self-test
+
+Every :class:`~repro.core.machine.BankedSubarray` the benchmark builds
+registers itself in ``machine._LINT_REGISTRY``; after the benchmark
+finishes, each recorded trace is statically verified and the combined
+report is written to ``PUDLINT_<bench>.json`` next to the
+``BENCH_*.json`` trajectory artifacts.  Error-severity diagnostics exit
+nonzero so the CI benchmark-smoke job fails loudly instead of shipping
+a trajectory measured off an invalid command stream.
+
+``--self-test`` runs the seeded-mutation harness
+(:mod:`repro.analysis.mutations`) instead of a benchmark, proving on
+the CI runner that the analyzer still detects every violation class.
+"""
+
+import importlib
+import inspect
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.analysis import mutations, pudlint  # noqa: E402
+from repro.core import machine  # noqa: E402
+
+import run as bench_run  # noqa: E402
+
+
+def _write_report(name: str, report: pudlint.LintReport,
+                  extra: dict | None = None) -> str:
+    payload = report.to_json()
+    payload["bench"] = name
+    payload.update(extra or {})
+    path = f"PUDLINT_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
+
+
+def self_test() -> int:
+    summary = mutations.self_test()
+    report = pudlint.LintReport([])
+    path = _write_report("self_test", report, {"seeded": summary})
+    print(f"pudlint self-test: {summary['classes']} violation classes, "
+          f"{summary['distinct_codes']} distinct codes detected -> {path}")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if argv and argv[0] == "--self-test":
+        return self_test()
+    if not argv or argv[0] not in bench_run.REGISTRY:
+        known = ", ".join(sorted(bench_run.REGISTRY))
+        print(f"usage: pudlint_gate.py <bench> [--smoke] | --self-test\n"
+              f"benches: {known}", file=sys.stderr)
+        return 2
+
+    name = argv[0]
+    smoke = "--smoke" in argv[1:]
+    collector = pudlint.TraceCollector()
+    machine._LINT_REGISTRY = collector
+
+    # Drive the benchmark exactly as CI used to: through its own
+    # main() and CLI flags (some benchmarks pick a different smoke
+    # workload there than run(smoke=True) would), falling back to the
+    # registry callable for modules without one.
+    mod = importlib.import_module(f"benchmarks.{name}")
+    entry = getattr(mod, "main", None)
+    saved_argv, gate_exit = sys.argv, 0
+    try:
+        if entry is not None:
+            sys.argv = [f"benchmarks/{name}.py"] + (["--smoke"] if smoke
+                                                    else [])
+            entry()
+        else:
+            fn = bench_run.REGISTRY[name]
+            kwargs = ({"smoke": True} if smoke and "smoke" in
+                      inspect.signature(fn).parameters else {})
+            fn(**kwargs)
+    except SystemExit as e:      # benchmark's own acceptance gate
+        if isinstance(e.code, str):      # SystemExit("message")
+            print(f"{name}: {e.code}", file=sys.stderr)
+            gate_exit = 1
+        else:
+            gate_exit = int(e.code or 0)
+    finally:
+        sys.argv = saved_argv
+
+    report = collector.drain()
+    n_subs = collector.count
+    path = _write_report(name, report, {"subarrays": n_subs,
+                                        "smoke": smoke})
+    status = "clean" if not report.errors else (
+        f"{len(report.errors)} error(s)")
+    print(f"pudlint[{name}]: {n_subs} subarray trace(s), {status} -> {path}")
+    if report.errors:
+        print(report.summary(), file=sys.stderr)
+        return 1
+    return gate_exit
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,41 @@
+"""Static analysis of PuD command streams and scheduled timelines.
+
+``pudlint`` verifies recorded :class:`~repro.core.machine.CommandTrace`
+streams and scheduled :class:`~repro.core.scheduler.Timeline`\\ s
+*without executing them*: per-bank row-state dataflow (PL1xx),
+inter-segment hazard/race detection (PL2xx), and protocol/capability
+conformance on placed waves (PL3xx).  ``mutations`` is the seeded-fault
+harness proving the analyzer is non-vacuous.
+"""
+
+from .pudlint import (
+    CODES,
+    Diagnostic,
+    LintReport,
+    PudLintError,
+    TraceCollector,
+    clone_confinement_diags,
+    enforce,
+    lint_device,
+    lint_stream,
+    lint_streams,
+    lint_subarray,
+    lint_timeline,
+    wave_accesses,
+)
+
+__all__ = [
+    "CODES",
+    "Diagnostic",
+    "LintReport",
+    "PudLintError",
+    "TraceCollector",
+    "clone_confinement_diags",
+    "enforce",
+    "lint_device",
+    "lint_stream",
+    "lint_streams",
+    "lint_subarray",
+    "lint_timeline",
+    "wave_accesses",
+]

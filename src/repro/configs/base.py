@@ -14,7 +14,7 @@ compact for the 512-device dry-run.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 BLOCK_KINDS = ("attn", "local", "global", "mamba", "rwkv")
 

@@ -25,7 +25,6 @@ Op counts (measured from the trace; validated in tests):
 
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 import numpy as np
 

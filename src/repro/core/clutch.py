@@ -211,7 +211,10 @@ class ClutchEngine:
     # -------------------------------------------------------------- #
     def _run_lt(self, a: int | np.ndarray, complement: bool) -> int:
         layout = self.layout_c if complement else self.layout
-        assert layout is not None
+        if layout is None:
+            raise RuntimeError(
+                "negated predicate needs the complement layout: construct "
+                "the engine with support_negated=True (Unmodified PuD)")
         return compare_lt(self.sub, layout, a)
 
     def predicate(self, op: str, x: int | np.ndarray,
@@ -311,7 +314,9 @@ class TypedClutchEngine(ClutchEngine):
         if dtype == "signed":
             values = encode_signed(values, n_bits)
         elif dtype == "float32":
-            assert n_bits == 32
+            if n_bits != 32:
+                raise ValueError(
+                    f"float32 encoding is 32-bit only, got n_bits={n_bits}")
             values = encode_float32(values)
         elif dtype != "unsigned":
             raise ValueError(dtype)

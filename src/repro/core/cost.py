@@ -46,7 +46,7 @@ in-DRAM.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 from .machine import PuDArch, PuDOp
 

@@ -408,7 +408,8 @@ class PuDDevice:
         return [
             GroupStream.from_trace(self._group_label(i, g), g.sub.trace,
                                    self.footprint(g), g.sub.num_cols,
-                                   active_elems=g.active_elems)
+                                   active_elems=g.active_elems,
+                                   machine=g.sub)
             for i, g in enumerate(self.groups)
         ]
 

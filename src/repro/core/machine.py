@@ -107,6 +107,33 @@ timeline.
 ``Subarray`` remains as the single-bank special case (banks == 1) with
 the seed's 2-D ``rows`` view, so single-vector algorithms and tests are
 unchanged.
+
+Invariants (statically checked by ``repro.analysis`` pudlint)
+-------------------------------------------------------------
+A recorded stream is *well-formed* when it satisfies the rules below;
+:mod:`repro.analysis.pudlint` verifies them without executing the
+stream (sessions enable this via ``PudSession(verify=...)``, and the
+test suite lints every trace it records).  Diagnostic codes in
+parentheses:
+
+* DRAM content is undefined at power-up (randomized here), so a
+  compute wave may only read rows some earlier wave wrote (``PL101``;
+  host READs and the ROWCLONE/ROWINIT/MRACT relocation family are
+  exempt -- bulk moves relocate whatever a row holds, and cross-group
+  clones carry the *source* group's payload).
+* ``ROW_ZERO`` / ``ROW_ONE`` are never written (``PL102``); row
+  operands stay inside ``[0, num_rows)`` (``PL103``); ``FRAC``
+  targets only the fixed activation group (``PL103``).
+* Every ``APA`` is armed by a preceding ``FRAC`` whose neutral row was
+  not overwritten in between (``PL104``); TRA/NOT waves appear only on
+  Modified PuD, APA/FRAC only on Unmodified (``PL105``).
+* A compute result parked in a data row should be read before being
+  overwritten (``PL106``, warning); an Ambit AND/OR operand staged in
+  the shared compute rows (T1/T2, G1/G2) is consumed by the merge and
+  must be re-staged before the next merge reads it (``PL107``).
+* An ``MRACT`` span never exceeds the subarray's ``multi_row_act``
+  capability (``PL301``), and cross-group clones only move rows
+  between groups on the same channels (``PL302``).
 """
 
 from __future__ import annotations
@@ -122,6 +149,13 @@ WORD_BITS = 32
 
 #: Row address operand: a broadcast row index, or per-bank indices [banks].
 RowIdx = Union[int, np.ndarray]
+
+#: When a test harness sets this to a set-like object (e.g. a
+#: ``weakref.WeakSet``), every :class:`BankedSubarray` registers itself
+#: here at construction so the harness can lint every trace the test
+#: recorded (the repo's conftest does this for tier-1).  ``None`` (the
+#: default) disables registration entirely.
+_LINT_REGISTRY: "set | None" = None
 
 
 class PuDArch(str, enum.Enum):
@@ -153,6 +187,11 @@ class TraceEntry:
     op: PuDOp
     rows: tuple  # ints (broadcast) and/or [banks] int arrays (per-bank)
     seg: int = 0  # segment id (dependency tag; see CommandTrace)
+    #: Source subarray of a CROSS-group clone wave
+    #: (:meth:`BankedSubarray.clone_rows_from`); ``None`` for every
+    #: intra-group wave.  Lets the static verifier check clone channel
+    #: confinement (``PL302``) without re-deriving placement.
+    xsrc: "BankedSubarray | None" = None
 
 
 @dataclass(frozen=True)
@@ -220,6 +259,11 @@ class CommandTrace:
     segments: list[Segment] = field(
         default_factory=lambda: [Segment(0, "", ())])
     host_events: list[HostEvent] = field(default_factory=list)
+    #: True while the stream covers the subarray's whole life from
+    #: reset -- uninit-read analysis (pudlint ``PL101``) is only sound
+    #: then.  :meth:`clear` drops recorded history while the subarray
+    #: keeps its state, so it flips this off.
+    from_reset: bool = True
     _cur_seg: int = 0
 
     def begin_segment(self, label: str = "",
@@ -298,9 +342,13 @@ class CommandTrace:
         self.segments[:] = [Segment(0, "", ())]
         self.host_events.clear()
         self._cur_seg = 0
+        # rows now hold state the cleared stream loaded: the remaining
+        # recording no longer starts at subarray reset
+        self.from_reset = False
 
 
-def replay(entries, sub: "BankedSubarray") -> None:
+def replay(entries, sub: "BankedSubarray",
+           reads: "list[np.ndarray] | None" = None) -> None:
     """Re-execute a recorded stream's waves on ``sub``.
 
     Compute waves (RowCopy/TRA/APA/Frac/NOT, and the in-DRAM bulk waves
@@ -316,7 +364,16 @@ def replay(entries, sub: "BankedSubarray") -> None:
     caveat: replay re-issues them as intra-subarray copies with the
     source rows assumed pre-loaded.  Replay of MRACT waves requires the
     target to have an equal-or-larger ``multi_row_act`` capability.
+
+    ``reads`` (optional list) collects every READ wave's data in issue
+    order -- the stream's *observable output*, which is how the
+    mutation tests decide whether two streams are behaviorally
+    equivalent (equal final state AND equal readouts).
     """
+    # Replay targets hold pre-loaded state (snapshot or twin); the
+    # trace they re-record is mid-life, so pudlint must not treat reads
+    # of host-loaded rows as undefined power-up content (PL101).
+    sub.trace.from_reset = False
     for e in entries:
         if e.op is PuDOp.ROWCOPY:
             sub.rowcopy(*e.rows)
@@ -339,7 +396,9 @@ def replay(entries, sub: "BankedSubarray") -> None:
         elif e.op is PuDOp.NOT:
             sub.bulk_not(*e.rows)
         elif e.op is PuDOp.READ:
-            sub.host_read_row(e.rows[0])
+            data = sub.host_read_row(e.rows[0])
+            if reads is not None:
+                reads.append(data)
         elif e.op is PuDOp.WRITE:
             pass  # payload not recorded; state assumed pre-loaded
         else:  # pragma: no cover - enum is closed
@@ -447,6 +506,8 @@ class BankedSubarray:
             self.G = (num_rows - 3, num_rows - 4, num_rows - 5, num_rows - 6)
         self._frac_row: int | None = None
         self._alloc_ptr = 0  # bump allocator for data/LUT rows
+        if _LINT_REGISTRY is not None:
+            _LINT_REGISTRY.add(self)
 
     # ------------------------------------------------------------------ #
     # Row addressing
@@ -608,11 +669,13 @@ class BankedSubarray:
         while done < n:
             span = min(mra, n - done)
             if span > 1:
-                self.trace.emit(PuDOp.MRACT, src_start + done,
-                                dst_start + done, span)
+                self.trace.entries.append(TraceEntry(
+                    PuDOp.MRACT, (src_start + done, dst_start + done, span),
+                    self.trace.current_segment, xsrc=src_sub))
             else:
-                self.trace.emit(PuDOp.ROWCLONE, src_start + done,
-                                dst_start + done)
+                self.trace.entries.append(TraceEntry(
+                    PuDOp.ROWCLONE, (src_start + done, dst_start + done),
+                    self.trace.current_segment, xsrc=src_sub))
             done += span
 
     def and_wave(self, a: RowIdx, b: RowIdx, dst: int) -> None:

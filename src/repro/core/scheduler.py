@@ -107,6 +107,29 @@ favor of host nodes (they hold no channel), then host I/O (drain
 results early so the host pipeline can start merging), and then
 least-recently-served group, which interleaves co-resident groups
 instead of running one to completion.
+
+Invariants (statically checked by ``repro.analysis`` pudlint)
+-------------------------------------------------------------
+:mod:`repro.analysis.pudlint` verifies recorded streams and scheduled
+timelines against this model without executing them
+(:meth:`Timeline.verify`, ``PudSession(verify=...)``).  The rules a
+stream/timeline must satisfy, with their diagnostic codes:
+
+* Two waves touching overlapping rows in different segments must have
+  an ordering path of ``after`` / ``after_host`` edges between their
+  segments -- otherwise the earliest-start policy may legally reorder
+  them (``PL201`` RAW / ``PL202`` WAR / ``PL203`` WAW).
+* A host event consuming readout bytes must reach a READ wave through
+  its dependency closure (``PL204``); dependency references must
+  resolve (``PL205``) and the graph must be acyclic (``PL206`` -- the
+  scheduler raises :class:`DependencyCycleError`).
+* On the scheduled timeline: waves hold their channels exclusively
+  (``PL303``); a wave's duration covers its tFAW/tRRD ACT stagger plus
+  op latency (``PL304``); a wave starts only after its segment and
+  host-barrier dependencies completed (``PL305``); in-DRAM waves move
+  zero pin bytes (``PL306``); MRACT spans respect
+  ``SystemConfig.multi_row_act`` (``PL301``); the timeline's waves
+  match the recorded streams (``PL307``).
 """
 
 from __future__ import annotations
@@ -134,6 +157,14 @@ class GroupStream:
     domain the stream's host events run on (per-device hosts give each
     device's streams its own domain; the default puts everything on
     domain 0 -- one shared host).
+
+    ``rows`` / ``num_rows`` / ``arch`` / ``multi_row_act`` /
+    ``from_reset`` are machine metadata used by the static verifier
+    (:mod:`repro.analysis.pudlint`): the per-wave row operands, the
+    recording subarray's geometry and capability, and whether the
+    stream starts from subarray reset (a trimmed mid-life job stream
+    does not, so uninit-read analysis is skipped on it).  They default
+    to "unknown" and never affect scheduling.
     """
 
     label: str
@@ -145,6 +176,11 @@ class GroupStream:
     host_events: tuple[HostEvent, ...] = ()
     active_elems: int | None = None
     host: int = 0                     # host domain (see module docstring)
+    rows: tuple = ()                  # row operands per wave (lint meta)
+    num_rows: int | None = None       # recording subarray's row count
+    arch: object | None = None        # PuDArch of the recording subarray
+    multi_row_act: int | None = None  # PULSAR capability at record time
+    from_reset: bool = True           # stream starts at subarray reset?
 
     @property
     def banks(self) -> int:
@@ -164,7 +200,21 @@ class GroupStream:
     @staticmethod
     def from_trace(label: str, trace: CommandTrace, footprint: Footprint,
                    cols_per_bank: int,
-                   active_elems: int | None = None) -> "GroupStream":
+                   active_elems: int | None = None,
+                   machine=None) -> "GroupStream":
+        """``machine`` (the recording
+        :class:`~repro.core.machine.BankedSubarray`) attaches the lint
+        metadata -- row operands, geometry, arch, PULSAR capability,
+        and the trace's from-reset flag."""
+        meta: dict = {}
+        if machine is not None:
+            meta = dict(
+                rows=tuple(e.rows for e in trace.entries),
+                num_rows=machine.num_rows,
+                arch=machine.arch,
+                multi_row_act=machine.multi_row_act,
+                from_reset=getattr(trace, "from_reset", True),
+            )
         return GroupStream(
             label=label, footprint=footprint, cols_per_bank=cols_per_bank,
             ops=tuple(e.op for e in trace.entries),
@@ -172,6 +222,7 @@ class GroupStream:
             segments=tuple(trace.segments),
             host_events=tuple(trace.host_events),
             active_elems=active_elems,
+            **meta,
         )
 
 
@@ -186,6 +237,7 @@ class ScheduledWave:
     channels: tuple[int, ...]
     banks: int
     io_bytes: float = 0.0            # nonzero only for READ/WRITE waves
+    rows: tuple = ()                 # recorded row operands (lint meta)
 
     @property
     def duration_ns(self) -> float:
@@ -316,6 +368,20 @@ class Timeline:
         is the whole host workload)."""
         return max(max(self.group_busy_ns.values(), default=0.0),
                    max(self.host_lane_busy_ns.values(), default=0.0))
+
+    def verify(self, sys_cfg=None, streams=None, mode: str = "strict"):
+        """Run the :mod:`repro.analysis.pudlint` static verifier over
+        this timeline (protocol/capability conformance; plus the
+        row-dataflow and hazard passes when the scheduled ``streams``
+        are supplied).  ``mode``: ``"strict"`` raises
+        :class:`repro.analysis.PudLintError` on any error-severity
+        diagnostic, ``"warn"`` warns, ``"off"`` only collects.
+        Returns the :class:`repro.analysis.LintReport`."""
+        from repro.analysis import pudlint
+
+        report = pudlint.lint_timeline(self, sys_cfg=sys_cfg,
+                                       streams=streams)
+        return pudlint.enforce(report, mode, where="Timeline.verify")
 
 
 def lane_busy_from_spans(spans) -> dict[tuple[int, int], float]:
@@ -465,6 +531,14 @@ def federate_timelines(timelines: list[Timeline],
                     channel_busy_ns=channel_busy, group_busy_ns=group_busy,
                     group_span_ns=group_span, group_elems=group_elems,
                     host_spans=host_spans)
+
+
+class DependencyCycleError(RuntimeError):
+    """The segment / host-event dependency graph of the scheduled
+    streams contains a cycle (or an unresolvable reference), so no
+    ready wave or host node exists and scheduling cannot make progress.
+    ``repro.analysis`` pudlint reports the same condition statically as
+    ``PL206`` (cycle) / ``PL205`` (dangling reference)."""
 
 
 class ChannelScheduler:
@@ -683,8 +757,12 @@ class ChannelScheduler:
                     cand = (start, not is_io, group_last_served[gi], gi, sid)
                     if best is None or cand < best[0]:
                         best = (cand, "wave", gi, sid, (w, op), start)
-            assert best is not None, \
-                "dependency cycle in stream segments / host events"
+            if best is None:
+                raise DependencyCycleError(
+                    "no ready wave or host node: dependency cycle (or "
+                    "unresolvable reference) in stream segments / host "
+                    "events -- run repro.analysis.pudlint.lint_streams "
+                    "on the streams for the offending edge")
             if best[1] == "host":
                 _, _, key, _, _, (start, end, node_lanes) = best
                 dom = nodes[key]["dom"]
@@ -704,7 +782,8 @@ class ChannelScheduler:
                 group=s.label, op=op, seg=sid,
                 seg_label=s.segments[sid].label,
                 start_ns=start, end_ns=end, channels=s.channels,
-                banks=s.banks, io_bytes=self.io_bytes(op, s)))
+                banks=s.banks, io_bytes=self.io_bytes(op, s),
+                rows=s.rows[w] if w < len(s.rows) else ()))
             for c in s.channels:
                 channel_free[c] = end
             queues[gi][sid].pop(0)

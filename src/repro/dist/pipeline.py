@@ -14,7 +14,6 @@ per-stage grad accumulation.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import SUBLANES, maj3, round_up, use_interpret
+from .common import SUBLANES, maj3, use_interpret
 
 
 def _kernel(lt_idx_ref, le_idx_ref, lut_ref, out_ref, *, num_chunks: int):

@@ -18,7 +18,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 WORD_BITS = 32
 LANES = 128

@@ -25,9 +25,9 @@ from .common import use_interpret
 def _kernel(addr_ref, leaves_ref, out_ref, *, block_trees: int):
     addrs = addr_ref[...]                              # [BB, BT] int32
     leaves = leaves_ref[...]                           # [BT, L] f32
-    l = leaves.shape[-1]
+    nl = leaves.shape[-1]
     onehot = (addrs[..., None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (1, 1, l), 2)
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, nl), 2)
               ).astype(jnp.float32)                    # [BB, BT, L]
     # contract (BT, L) against leaves -> [BB]; einsum lowers to MXU dots
     partial = jnp.einsum("btl,tl->b", onehot, leaves,
@@ -44,7 +44,7 @@ def leaf_gather(addrs: jnp.ndarray, leaves: jnp.ndarray,
     """addrs: [B, T] int32; leaves: [T, L] float32 (L = 2^depth).
     Returns [B] float32 predictions.  B, T padded by ops.py."""
     b, t = addrs.shape
-    l = leaves.shape[1]
+    nl = leaves.shape[1]
     bb, bt = min(block_batch, b), min(block_trees, t)
     assert b % bb == 0 and t % bt == 0
     kernel = functools.partial(_kernel, block_trees=bt)
@@ -53,7 +53,7 @@ def leaf_gather(addrs: jnp.ndarray, leaves: jnp.ndarray,
         grid=(b // bb, t // bt),
         in_specs=[
             pl.BlockSpec((bb, bt), lambda i, j: (i, j)),
-            pl.BlockSpec((bt, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, nl), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bb,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),

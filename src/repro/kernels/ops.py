@@ -16,7 +16,6 @@ import numpy as np
 
 from repro.core.encoding import ChunkPlan
 
-from . import ref
 from .bitserial_cmp import bitserial_cmp
 from .clutch_merge import clutch_merge, clutch_merge_banked
 from .common import (

@@ -252,7 +252,6 @@ def components(cfg: ModelConfig, shape: ShapeConfig, mesh, micro: int,
                          fit(P(dp, None, None), (b, 1, 1), mesh))
     emb_sh = shardings(mesh, L.embed_specs(cfg), params_sds["embed"])
     fn_sh = shardings(mesh, L.rmsnorm_specs(cfg), params_sds["final_norm"])
-    positions = jax.ShapeDtypeStruct((0,), jnp.int32)  # placeholder
 
     if shape.kind == "train":
         mb = b // micro

@@ -12,13 +12,10 @@ production mesh (requires real accelerators -- on this container use
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
-import jax
 
 from repro.configs import SHAPES, get_config
-from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.train import optimizer as O
 from repro.train.loop import TrainConfig, run_training

@@ -11,7 +11,6 @@ Public surface (all pure functions of (cfg, params, ...)):
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -247,10 +246,9 @@ def forward_logits(cfg: ModelConfig, params: Params, batch: Params
     else:
         x = L.embed(cfg, params["embed"], batch["tokens"])
     positions = jnp.arange(x.shape[1])
-    enc_out = None
     if cfg.enc_dec:
         enc_x = _encode(cfg, params, batch["enc_embeds"].astype(x.dtype))
-        enc_out = None  # cross K/V are computed per block inside scan
+        # cross K/V are computed per block inside scan
         # Project cross K/V once per block (stacked) and feed via scan xs.
         cross = _cross_kv(cfg, params, enc_x)
 

@@ -152,7 +152,14 @@ class _FederatedExecutor:
                     replace(h, after_host=tuple(
                         x for x in h.after_host if x in kept))
                     for h in tr.host_events[h0:]),
-                active_elems=group.active_elems)
+                active_elems=group.active_elems,
+                # lint metadata: a trimmed mid-life stream is not
+                # from-reset (its rows were loaded by earlier waves)
+                rows=tuple(e.rows for e in tr.entries[e0:]),
+                num_rows=sub.num_rows,
+                arch=sub.arch,
+                multi_row_act=sub.multi_row_act,
+                from_reset=(e0 == 0 and h0 == 0 and tr.from_reset))
             di = i // per_dev
             out.append(rekey_stream(
                 stream, di, stride,

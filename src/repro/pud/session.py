@@ -149,18 +149,39 @@ class ForestHandle(ResourceHandle):
 
 class PudSession:
     """A session over a fleet of PuD devices: declarative resources,
-    planned placement, federated query/inference jobs."""
+    planned placement, federated query/inference jobs.
+
+    ``verify`` runs the :mod:`repro.analysis` static verifier (pudlint)
+    over every machine-backend job's streams and scheduled timeline:
+    ``"strict"`` raises :class:`repro.analysis.PudLintError` on any
+    error-severity diagnostic, ``"warn"`` emits a warning, ``"off"``
+    skips linting.  ``None`` takes the class default
+    (:data:`DEFAULT_VERIFY`, normally ``"off"``; the test suite flips
+    it to ``"strict"``)."""
+
+    #: Session-wide default for the ``verify`` knob (``None`` in a
+    #: constructor call resolves to this).  Process-wide override
+    #: point: the repo's conftest sets it to ``"strict"`` so every
+    #: tier-1 job is linted.
+    DEFAULT_VERIFY: str = "off"
 
     def __init__(self, sys_cfg=cost.DESKTOP, devices=None,
                  num_devices: int = 1, arch: PuDArch = PuDArch.MODIFIED,
                  num_rows: int = 1024, seed: int = 0,
-                 hosts: str = "shared", backend: str = "machine") -> None:
+                 hosts: str = "shared", backend: str = "machine",
+                 verify: str | None = None) -> None:
         if hosts not in ("shared", "per-device"):
             raise ValueError(
                 f"hosts must be 'shared' or 'per-device', got {hosts!r}")
         if backend not in ("machine", "fused"):
             raise ValueError(
                 f"backend must be 'machine' or 'fused', got {backend!r}")
+        if verify is None:
+            verify = self.DEFAULT_VERIFY
+        if verify not in ("strict", "warn", "off"):
+            raise ValueError(
+                f"verify must be 'strict', 'warn' or 'off', got {verify!r}")
+        self.verify = verify
         self.sys_cfg = sys_cfg
         #: Default execution backend for jobs: "machine" (NumPy
         #: simulator + scheduled cost model) or "fused" (JAX-native
@@ -310,6 +331,21 @@ class PudSession:
             self._fused[handle.name] = fx
         return fx
 
+    def _lint_job(self, ex, timeline: Timeline) -> None:
+        """Run pudlint over a machine job's trimmed streams + scheduled
+        timeline (plus each device's clone-confinement rule), applying
+        the session's ``verify`` mode."""
+        if self.verify == "off":
+            return
+        from repro.analysis import pudlint
+
+        report = pudlint.lint_timeline(
+            timeline, sys_cfg=self.sys_cfg, streams=ex._job_streams())
+        for dev in dict.fromkeys(d for d, _ in ex.placements):
+            report.diagnostics.extend(
+                pudlint.clone_confinement_diags(dev))
+        pudlint.enforce(report, self.verify, where="PudSession job")
+
     def query(self, table: TableHandle,
               queries: "Q1 | Q2 | Q3 | Q4 | Q5 | Compound | Sequence",
               backend: str | None = None) -> JobResult:
@@ -335,6 +371,7 @@ class PudSession:
                              wallclock_ns=wall, backend="fused")
         results = ex.run([q.to_tuple() for q in batch])
         timeline = ex.schedule(self.sys_cfg)
+        self._lint_job(ex, timeline)
         stats = ex.last_stats(self.sys_cfg, timeline=timeline)
         return JobResult(result=results[0] if single else results,
                          stats=stats, timeline=timeline)
@@ -357,6 +394,7 @@ class PudSession:
                              backend="fused")
         preds = ex.infer(np.asarray(X))
         timeline = ex.schedule(self.sys_cfg)
+        self._lint_job(ex, timeline)
         stats = ex.last_stats(self.sys_cfg, timeline=timeline)
         return JobResult(result=preds, stats=stats, timeline=timeline)
 

@@ -137,7 +137,7 @@ class CheckpointManager:
             if verify:
                 crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
                 if crc != meta["crc32"]:
-                    raise IOError(f"checksum mismatch for {key} in {path}")
+                    raise OSError(f"checksum mismatch for {key} in {path}")
             if shard is not None:
                 arr = jax.device_put(arr, shard)
             out.append(arr)

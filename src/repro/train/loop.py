@@ -10,13 +10,9 @@ device topology beyond shardings.
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 import time
-from typing import Any
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM

@@ -9,7 +9,6 @@ FLOPs for the trip count).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -16,3 +16,44 @@ except ImportError:
 
     sys.modules.setdefault("hypothesis", _hf)
     sys.modules.setdefault("hypothesis.strategies", _hf.strategies)
+
+import pytest
+
+from repro.analysis import pudlint
+from repro.core import machine
+from repro.pud.session import PudSession
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "pudlint_skip: opt this test out of the autouse pudlint sweep "
+        "(for tests that intentionally record invalid traces)")
+
+
+@pytest.fixture(autouse=True)
+def _pudlint_every_trace(request):
+    """Statically lint every command trace the test records.
+
+    Every BankedSubarray built during the test registers itself in
+    ``machine._LINT_REGISTRY``; at teardown each live subarray's trace
+    is run through pudlint and error-severity diagnostics fail the
+    test.  Sessions constructed without an explicit ``verify=`` run
+    strict during tests.  Opt out with ``@pytest.mark.pudlint_skip``.
+    """
+    if request.node.get_closest_marker("pudlint_skip"):
+        yield
+        return
+    collector = pudlint.TraceCollector()
+    machine._LINT_REGISTRY = collector
+    old_default = PudSession.DEFAULT_VERIFY
+    PudSession.DEFAULT_VERIFY = "strict"
+    try:
+        yield
+        report = collector.drain()
+        if report.errors:
+            pytest.fail("pudlint found errors in recorded traces:\n"
+                        + report.summary(limit=12), pytrace=False)
+    finally:
+        machine._LINT_REGISTRY = None
+        PudSession.DEFAULT_VERIFY = old_default

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, cells
+from repro.configs import ARCHS, cells
 from repro.models import layers as L
 from repro.models import lm as M
 

@@ -6,15 +6,13 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitserial import BitSerialEngine, bitserial_op_count
-from repro.core.clutch import ClutchEngine, clutch_op_count, compare_lt
+from repro.core.clutch import ClutchEngine, clutch_op_count
 from repro.core.encoding import (
-    ChunkPlan,
-    load_vector,
     make_plan,
     min_chunks_for_budget,
     temporal_encode_planes,
 )
-from repro.core.machine import PuDArch, PuDOp, Subarray, pack_bits, unpack_bits
+from repro.core.machine import PuDArch, Subarray, pack_bits, unpack_bits
 
 ARCHS = [PuDArch.MODIFIED, PuDArch.UNMODIFIED]
 OPS = ["<", "<=", ">", ">=", "=="]
@@ -186,7 +184,7 @@ def test_complement_doubles_budget_on_unmodified():
         sub = Subarray(num_rows=2048, num_cols=2048,
                        arch=PuDArch.UNMODIFIED)
         before = sub.rows_free
-        eng = ClutchEngine(sub, vals, 16, num_chunks=4, support_negated=neg)
+        ClutchEngine(sub, vals, 16, num_chunks=4, support_negated=neg)
         alloc[neg] = before - sub.rows_free - 2   # minus scratch rows
     assert alloc[True] == 2 * alloc[False]
 

@@ -29,6 +29,8 @@ def test_multi_row_activation_energy_premium():
     e4 = cost.sequence_energy_nj({"apa": 1}, cost.DESKTOP)
     # TRA opens 3 rows in one ACT: 1 + .22*2 = 1.44 single-ACT units;
     # RowCopy is two single-row ACTs = 2 units (plus idle-host overhead 0)
+    assert e1 / cost.DESKTOP.total_banks == pytest.approx(
+        cost.DESKTOP.e_act_nj * 2, rel=1e-6)
     assert e3 / cost.DESKTOP.total_banks == pytest.approx(
         cost.DESKTOP.e_act_nj * 1.44, rel=1e-6)
     assert e4 > e3

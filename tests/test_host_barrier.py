@@ -17,13 +17,12 @@ from repro.apps import predicate as P
 from repro.core import cost
 from repro.core.device import PuDDevice
 from repro.core.machine import (
-    BankedSubarray,
     HostEvent,
     PuDArch,
     PuDOp,
     Segment,
 )
-from repro.core.scheduler import ChannelScheduler, GroupStream, Timeline
+from repro.core.scheduler import ChannelScheduler, GroupStream
 from repro.pud.executors import GbdtBatchExecutor, QueryBatchExecutor
 
 

@@ -22,7 +22,7 @@ from repro.core.scheduler import (
     ChannelScheduler,
     GroupStream,
 )
-from repro.pud import PudSession, Q1, Q2, Q3, Q4, Q5
+from repro.pud import PudSession, Q1, Q3, Q5
 from repro.pud.executors import QueryBatchExecutor
 from repro.serve.pud_service import PudRequest, PudService
 
@@ -179,7 +179,7 @@ def test_gbdt_merge_tree_leaf_gathers_spread():
         (root,) = [h2 for h2 in tl.host_spans
                    if h2.label == f"{wave}:h"]
         assert len(leaves) == 2
-        assert root.start_ns >= max(l.end_ns for l in leaves) - 1e-9
+        assert root.start_ns >= max(leaf.end_ns for leaf in leaves) - 1e-9
     assert job.stats.host_lane_busy_ns
     assert 0.0 < job.stats.host_utilization <= 1.0
 

@@ -11,7 +11,6 @@ from repro.core.encoding import make_plan
 from repro.kernels import ops, ref
 from repro.kernels.common import (
     float_to_monotonic_u32,
-    pack_bits_jnp,
     unpack_bits_jnp,
 )
 

@@ -1,0 +1,237 @@
+"""pudlint: static trace verifier and row-hazard analyzer.
+
+Acceptance (ISSUE 8):
+
+* the mutation self-test seeds >= 8 distinct violation classes into
+  known-good streams/timelines and pudlint flags each with its
+  expected diagnostic code;
+* every unmutated baseline lints clean (non-vacuity has a control);
+* ``PudSession(verify="strict")`` raises :class:`PudLintError` on a
+  corrupted job and passes untouched jobs (checked implicitly by the
+  autouse conftest fixture across the whole tier-1 suite);
+* hypothesis property: a random single-edit mutation of a valid trace
+  is either behavior-preserving under ``replay()`` or flagged.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import mutations as M
+from repro.analysis import pudlint
+from repro.core.machine import BankedSubarray, PuDArch, PuDOp, replay
+
+pytestmark = pytest.mark.pudlint_skip  # these tests record bad traces
+
+VIOLATIONS = list(M.seeded_violations())
+
+
+# --------------------------------------------------------------------- #
+# Non-vacuity: baselines clean, every seeded class caught
+# --------------------------------------------------------------------- #
+
+def test_baselines_lint_clean():
+    for name, report in M.baseline_reports().items():
+        assert report.ok, f"{name}: {report.summary()}"
+
+
+@pytest.mark.parametrize("name,code,report", VIOLATIONS,
+                         ids=[v[0] for v in VIOLATIONS])
+def test_seeded_violation_detected(name, code, report):
+    assert code in report.codes(), (
+        f"{name}: expected {code}, got {sorted(report.codes())} "
+        f"-- {report.summary()}")
+
+
+def test_enough_distinct_violation_classes():
+    codes = {code for _, code, _ in VIOLATIONS}
+    assert len(VIOLATIONS) >= 8
+    assert len(codes) >= 8            # ISSUE floor: >=8 distinct codes
+
+
+def test_self_test_summary():
+    s = M.self_test()
+    assert s["classes"] == len(VIOLATIONS)
+    assert s["distinct_codes"] >= 8
+
+
+# --------------------------------------------------------------------- #
+# Diagnostics & report plumbing
+# --------------------------------------------------------------------- #
+
+def test_diagnostic_formatting_and_json():
+    report = pudlint.lint_stream(M.mut_row_oob(M.stream_of(M.record_good())))
+    d = next(iter(report.diagnostics))
+    assert d.code in pudlint.CODES
+    assert d.code in str(d)
+    js = report.to_json()
+    assert js["errors"] == len(report.errors)
+    assert all("code" in row for row in js["diagnostics"])
+
+
+def test_enforce_modes():
+    report = pudlint.lint_stream(M.mut_row_oob(M.stream_of(M.record_good())))
+    with pytest.raises(pudlint.PudLintError):
+        pudlint.enforce(report, "strict")
+    with pytest.warns(UserWarning):
+        pudlint.enforce(report, "warn")
+    pudlint.enforce(report, "off")
+    with pytest.raises(ValueError):
+        pudlint.enforce(report, "loud")
+
+
+def test_timeline_verify_method():
+    from repro.core.scheduler import ChannelScheduler
+    streams = [M.stream_of(M.record_good(), "g0"),
+               M.stream_of(M.record_plain(), "g1")]
+    tl = ChannelScheduler(M.SYS_CFG).schedule(streams)
+    assert tl.verify(sys_cfg=M.SYS_CFG, streams=streams).ok
+    bad = M.mut_clone_io(tl, streams)
+    with pytest.raises(pudlint.PudLintError):
+        bad.verify(sys_cfg=M.SYS_CFG, streams=streams)
+
+
+def test_session_strict_flags_corrupt_job(monkeypatch):
+    """A session job whose scheduled timeline is tampered with must
+    raise under verify='strict' and pass under verify='off'."""
+    from repro.apps import predicate as P
+    from repro.core import cost
+    from repro.core.device import PuDDevice
+    from repro.pud import Q1, PudSession
+
+    def run(verify):
+        dev = PuDDevice(PuDArch.MODIFIED, channels=1, ranks_per_channel=1,
+                        banks_per_rank=8, num_rows=1024, cols_per_bank=4096)
+        s = PudSession(sys_cfg=cost.DESKTOP, devices=[dev], verify=verify)
+        h = s.create_table(P.Table.generate(4096, 8, seed=0),
+                           cols_per_bank=4096)
+        return s.query(h, Q1(fi=0, x0=10, x1=120))
+
+    assert run("strict").result is not None     # clean job passes strict
+
+    real_lint = pudlint.lint_timeline
+
+    def corrupt_lint(timeline, sys_cfg=None, streams=None):
+        k = next(i for i, w in enumerate(timeline.waves)
+                 if w.io_bytes == 0.0)
+        timeline.waves[k] = dataclasses.replace(
+            timeline.waves[k], end_ns=timeline.waves[k].start_ns)
+        return real_lint(timeline, sys_cfg=sys_cfg, streams=streams)
+
+    monkeypatch.setattr(pudlint, "lint_timeline", corrupt_lint)
+    with pytest.raises(pudlint.PudLintError):
+        run("strict")
+    run("off")                                  # off never raises
+
+
+# --------------------------------------------------------------------- #
+# Property: single-edit mutations are behavior-preserving or flagged
+# --------------------------------------------------------------------- #
+
+def _fresh_pair(seed):
+    """Two identically-seeded subarrays: one records, one replays."""
+    kw = dict(num_banks=2, num_rows=64, num_cols=64,
+              arch=PuDArch.UNMODIFIED, seed=seed)
+    return BankedSubarray(**kw), BankedSubarray(**kw)
+
+
+def _record_linear(sub, rng):
+    """A short random-but-valid straight-line program on rows 0..5.
+    Returns the state snapshot after the host loads (WRITE payloads are
+    not recorded in traces, so replay needs the pre-compute state)."""
+    data = rng.integers(0, 2**32, size=(3, sub.num_words), dtype=np.uint32)
+    sub.alloc(6)
+    sub.host_write_rows(0, data)
+    snapshot = sub.state.copy()
+    sub.maj3_into_acc(0, 1, 2)
+    sub.rowcopy(sub.G[0], 3)
+    sub.ambit_or(0, 1, 4)
+    sub.host_read_row(3)
+    sub.host_read_row(4)
+    return snapshot
+
+
+def _replay_observables(template, snapshot, entries):
+    sub = BankedSubarray(num_banks=template.num_banks,
+                         num_rows=template.num_rows,
+                         num_cols=template.num_cols,
+                         arch=template.arch)
+    sub.state[:] = snapshot
+    reads = []
+    replay(entries, sub, reads=reads)
+    return [np.asarray(r).copy() for r in reads]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), data=st.data())
+def test_single_edit_mutation_preserving_or_flagged(seed, data):
+    rng = np.random.default_rng(seed)
+    rec, _ = _fresh_pair(seed)
+    snapshot = _record_linear(rec, rng)
+    entries = list(rec.trace.entries)
+    stream = M.stream_of(rec)
+    assert pudlint.lint_stream(stream).ok
+
+    kind = data.draw(st.sampled_from(
+        ["retarget-read", "copy-to-clone", "oversize-noop"]))
+    w = None
+    if kind == "retarget-read":
+        # Point a compute read at a never-written row: never preserving
+        # (power-up content is randomized), so pudlint MUST flag it.
+        w = next(i for i, e in enumerate(entries)
+                 if e.op is PuDOp.ROWCOPY)
+        e = entries[w]
+        entries[w] = dataclasses.replace(e, rows=(30, e.rows[1]))
+        mutated = M._set_rows(stream, w, (30, stream.rows[w][1]))
+    elif kind == "copy-to-clone":
+        # ROWCOPY -> ROWCLONE is behavior-preserving (same data
+        # movement, different transport): replay must agree and a
+        # strict analyzer may not call it an *error*-free pass falsely.
+        w = next(i for i, e in enumerate(entries)
+                 if e.op is PuDOp.ROWCOPY)
+        e = entries[w]
+        entries[w] = dataclasses.replace(e, op=PuDOp.ROWCLONE)
+        ops = stream.ops[:w] + (PuDOp.ROWCLONE,) + stream.ops[w + 1:]
+        mutated = dataclasses.replace(stream, ops=ops)
+    else:
+        # Duplicate a host READ: pure observation, preserving for the
+        # final state; the extra readout row is identical data.
+        w = next(i for i, e in enumerate(entries)
+                 if e.op is PuDOp.READ)
+        entries.insert(w, entries[w])
+        mutated = M._insert_wave(stream, w, PuDOp.READ,
+                                 stream.rows[w], stream.segs[w])
+
+    report = pudlint.lint_stream(mutated)
+    base_reads = _replay_observables(rec, snapshot, rec.trace.entries)
+    try:
+        mut_reads = _replay_observables(rec, snapshot, entries)
+    except Exception:
+        assert not report.ok, (
+            f"{kind}: replay rejects the mutant but pudlint passed it")
+        return
+    # The mutant may *add* observations (duplicated READ) but every
+    # original observation must still appear, in order.
+    it = iter(mut_reads)
+    preserved = all(any(np.array_equal(b, m) for m in it)
+                    for b in base_reads)
+    assert preserved or not report.ok, (
+        f"{kind} at wave {w}: mutation changes replay observables "
+        f"yet pudlint found nothing")
+
+
+def test_replay_collects_reads():
+    rec, fresh = _fresh_pair(11)
+    rec.alloc(2)
+    rec.host_write_row(0, np.arange(rec.num_words, dtype=np.uint32))
+    fresh.state[:] = rec.state        # WRITE payloads are not replayed
+    rec.rowcopy(0, 1)
+    rec.host_read_row(1)
+    reads = []
+    replay(rec.trace.entries, fresh, reads=reads)
+    assert len(reads) == 1
+    assert np.array_equal(np.asarray(reads[0])[0],
+                          np.arange(rec.num_words, dtype=np.uint32))

@@ -163,10 +163,10 @@ def test_device_cost_summary_scheduled_between_bounds():
 def test_channel_aware_placement():
     dev = PuDDevice(PuDArch.MODIFIED, channels=2, ranks_per_channel=1,
                     banks_per_rank=8)
-    s0 = dev.alloc_banks(4, num_cols=4096, label="a", channels=1)
+    dev.alloc_banks(4, num_cols=4096, label="a", channels=1)
     g0 = dev.groups[0]
     assert set(dev.footprint(g0)) == {1}
-    sp = dev.alloc_banks(8, num_cols=4096, label="b", channels="spread")
+    dev.alloc_banks(8, num_cols=4096, label="b", channels="spread")
     fp = dev.footprint(dev.groups[1])
     assert {c: sum(r.values()) for c, r in fp.items()} == {0: 4, 1: 4}
     with pytest.raises(MemoryError):

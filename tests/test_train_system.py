@@ -1,8 +1,6 @@
 """System behaviour: training loop convergence, checkpoint/restart
 equivalence, corruption detection, straggler watchdog, serving."""
 
-import dataclasses
-import json
 import os
 
 import jax
@@ -16,7 +14,6 @@ from repro.launch.mesh import make_host_mesh
 from repro.train import optimizer as O
 from repro.train.checkpoint import CheckpointManager
 from repro.train.loop import TrainConfig, run_training
-from repro.train.straggler import StragglerWatchdog
 
 
 def small_cfg():
@@ -68,7 +65,7 @@ def test_checkpoint_corruption_detected(tmp_path):
     arr = np.load(path / fn)
     arr[0] += 1
     np.save(path / fn, arr)
-    with pytest.raises(IOError, match="checksum"):
+    with pytest.raises(OSError, match="checksum"):
         cm.restore(5, tree)
 
 
