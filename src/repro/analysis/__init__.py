@@ -3,8 +3,10 @@
 ``pudlint`` verifies recorded :class:`~repro.core.machine.CommandTrace`
 streams and scheduled :class:`~repro.core.scheduler.Timeline`\\ s
 *without executing them*: per-bank row-state dataflow (PL1xx),
-inter-segment hazard/race detection (PL2xx), and protocol/capability
-conformance on placed waves (PL3xx).  ``mutations`` is the seeded-fault
+inter-segment hazard/race detection (PL2xx), protocol/capability
+conformance on placed waves (PL3xx), and serving-layer admission
+conformance (PL4xx -- dispatched requests whose admitted deadline
+precedes their predicted start).  ``mutations`` is the seeded-fault
 harness proving the analyzer is non-vacuous.
 """
 
@@ -21,6 +23,7 @@ from .pudlint import (
     lint_streams,
     lint_subarray,
     lint_timeline,
+    serving_admission_diags,
     wave_accesses,
 )
 
@@ -37,5 +40,6 @@ __all__ = [
     "lint_streams",
     "lint_subarray",
     "lint_timeline",
+    "serving_admission_diags",
     "wave_accesses",
 ]

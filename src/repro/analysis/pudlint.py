@@ -121,6 +121,7 @@ CODES: dict[str, tuple[str, str]] = {
     "PL305": ("error", "dep-time"),
     "PL306": ("error", "clone-io"),
     "PL307": ("error", "op-mismatch"),
+    "PL401": ("error", "deadline-precedes-start"),
 }
 
 #: Relocation clone family: reads are bulk moves of whatever the row
@@ -672,6 +673,36 @@ def lint_device(device) -> LintReport:
     return report
 
 
+# --------------------------------------------------------------------- #
+# Pass 4: serving-layer admission conformance
+# --------------------------------------------------------------------- #
+def serving_admission_diags(records) -> list[Diagnostic]:
+    """``PL401``: a dispatched request whose admitted absolute deadline
+    already precedes its predicted batch start -- the serving loop
+    committed work that cannot possibly meet its SLO and should have
+    shed it at admission instead.
+
+    ``records`` are dicts the serving loop emits per *dispatched*
+    request: ``{"rid", "start_ns"`` (predicted batch start on the
+    simulated clock), ``"deadline_ns"`` (absolute; ``None`` = no SLO),
+    optionally ``"cls"}``.  Requests without a deadline never
+    diagnose."""
+    out: list[Diagnostic] = []
+    for rec in records:
+        deadline = rec.get("deadline_ns")
+        start = rec.get("start_ns", 0.0)
+        if deadline is None or deadline >= start - _EPS:
+            continue
+        cls = rec.get("cls")
+        who = f"request {rec.get('rid')}" + (f" [{cls}]" if cls else "")
+        out.append(Diagnostic(
+            "PL401", "error",
+            f"{who}: absolute deadline {deadline:.0f}ns precedes its "
+            f"predicted batch start {start:.0f}ns -- admission should "
+            "have shed this request, not scheduled it", group="serving"))
+    return out
+
+
 class TraceCollector:
     """Drop-in sink for ``repro.core.machine._LINT_REGISTRY``.
 
@@ -687,7 +718,13 @@ class TraceCollector:
     def __init__(self) -> None:
         self._finalizers: list = []
         self._reports: list[LintReport] = []
+        self._serving: list[dict] = []
         self.count = 0
+
+    def add_serving(self, record: dict) -> None:
+        """Record one dispatched serving request (see
+        :func:`serving_admission_diags`); linted at :meth:`drain`."""
+        self._serving.append(dict(record))
 
     def add(self, sub) -> None:
         self.count += 1
@@ -713,6 +750,8 @@ class TraceCollector:
         for r in self._reports:
             report.extend(r)
         self._reports.clear()
+        report.diagnostics.extend(serving_admission_diags(self._serving))
+        self._serving.clear()
         return report
 
 

@@ -595,6 +595,29 @@ class ChannelScheduler:
         return bytes_in / self.sys.host_mem_gbps
 
     # ------------------------------------------------------------------ #
+    def predict_makespan(self, streams: list[GroupStream],
+                         by_segment: bool = False):
+        """Admission-time makespan prediction for the serving layer.
+
+        Prediction and scheduling are the SAME deterministic
+        computation -- this entry point exists so serving code
+        (deadline-aware batch formation in
+        :mod:`repro.serve.batcher`, config evaluation in
+        :mod:`repro.serve.autoscaler`) can ask "how long would these
+        streams take under this ``SystemConfig``" without executing a
+        single wave, and so a committed batch's timeline always
+        matches its admission-time prediction exactly.
+
+        Returns the predicted makespan in ns; with ``by_segment`` it
+        returns ``(makespan_ns, spans)`` where ``spans`` maps ``(group
+        label, segment label)`` to ``(start, end)`` -- the per-request
+        completion times a batcher attributes deadline budgets
+        against."""
+        timeline = self.schedule(streams)
+        if by_segment:
+            return timeline.makespan_ns, timeline.segment_spans()
+        return timeline.makespan_ns
+
     def schedule(self, streams: list[GroupStream]) -> Timeline:
         channel_free: dict[int, float] = {}
         scheduled: list[ScheduledWave] = []

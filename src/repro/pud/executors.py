@@ -254,6 +254,12 @@ class QueryBatchExecutor(_FederatedExecutor):
             self.placements.append((dev, eng.sub))
         self._batch = 0
         self._last_tags: list[list[str]] = []
+        #: query index owning each pipeline wave of the LAST batch
+        #: (parallel to ``last_stats().wave_done_ns``): a Q5 owns both
+        #: its phase-1 wave and its host-barrier phase-2 wave, which is
+        #: how the serving layer attributes per-request latency inside
+        #: a batch whose waves do not map 1:1 onto requests.
+        self.last_wave_owners: list[int] = []
         from repro.apps.pipeline import HostTimer
         self._last_host = HostTimer()
 
@@ -286,6 +292,7 @@ class QueryBatchExecutor(_FederatedExecutor):
         self._batch += 1
         base = f"{self._tag}.b{self._batch}"
         self._last_tags = []
+        self.last_wave_owners = []
         self._last_host = HostTimer()
         self._mark_job_start()
         results: list = [None] * len(queries)
@@ -323,6 +330,7 @@ class QueryBatchExecutor(_FederatedExecutor):
             if self.merge_tree:
                 tags += [f"{tag}:h.s{s}" for s in range(len(engines))]
             self._last_tags.append(tags)
+            self.last_wave_owners.append(wave["qi"])
             return (wave, w, buf, c_segs)
 
         def collect(item) -> None:
@@ -415,7 +423,17 @@ class QueryBatchExecutor(_FederatedExecutor):
         """Lower one query tuple into its pipeline wave(s).  Every query
         is a single wave except a ``merge="host"`` compound, which runs
         one wave PER TERM (each term's bitmap is read out and combined
-        host-side -- the baseline traffic an in-DRAM merge avoids)."""
+        host-side -- the baseline traffic an in-DRAM merge avoids).
+        Each wave carries its owning query index (``"qi"``) so
+        :attr:`last_wave_owners` can attribute scheduled completion
+        times back to individual requests."""
+        waves = self._lower(qi, q, results, work_ref)
+        for wv in waves:
+            wv["qi"] = qi
+        return waves
+
+    def _lower(self, qi: int, q: tuple, results: list,
+               work_ref: list) -> list[dict]:
         name, *p = q
         mx = (1 << self.table.n_bits) - 1
 
@@ -478,7 +496,7 @@ class QueryBatchExecutor(_FederatedExecutor):
                 # its segments will declare this merge via after_host
                 work_ref[0].appendleft({
                     "kind": "range", "params": (fl, avg, hi),
-                    "barrier": True,
+                    "barrier": True, "qi": qi,
                     "merge": lambda bm2: results.__setitem__(
                         qi, int(bm2.sum())),
                 })

@@ -144,6 +144,17 @@ class Planner:
     def queued_names(self) -> list[str]:
         return [r.name for r in self.queue]
 
+    def cold_resources(self, min_idle: int = 1) -> list[str]:
+        """Names of ready, unpinned resources whose ``last_used`` tick
+        is at least ``min_idle`` touches behind the planner clock --
+        the serving autoscaler's eviction candidates, coldest first.
+        (``last_used`` advances on every :meth:`touch`, so idleness is
+        measured in fleet activity, not wall time.)"""
+        cold = [r for r in self.resources.values()
+                if r.state == "ready" and not r.pinned
+                and self._tick - r.last_used >= min_idle]
+        return [r.name for r in sorted(cold, key=lambda r: r.last_used)]
+
     def stats(self) -> dict:
         """Fleet-level placement counters for dashboards/tests."""
         return {

@@ -303,6 +303,32 @@ class PudSession:
         self._fused.pop(handle.name, None)
 
     # ------------------------------------------------------------------ #
+    # Serving hooks (autoscaler knobs)
+    # ------------------------------------------------------------------ #
+    def set_host_lanes(self, k: int) -> None:
+        """Re-provision the session's host merge lanes (the autoscaler's
+        grow/shrink knob).  Takes effect on the next scheduled job --
+        recorded streams are lane-agnostic, lanes are assigned at
+        schedule time."""
+        from dataclasses import replace
+
+        if k < 1:
+            raise ValueError(f"host_lanes must be >= 1, got {k}")
+        self.sys_cfg = replace(self.sys_cfg, host_lanes=k)
+
+    def set_hosts(self, mode: str) -> None:
+        """Switch the fleet host model (``"shared"`` / ``"per-device"``)
+        for subsequent jobs.  Ready executors are re-pointed in place;
+        queued/evicted resources pick the mode up on rebuild."""
+        if mode not in ("shared", "per-device"):
+            raise ValueError(
+                f"hosts must be 'shared' or 'per-device', got {mode!r}")
+        self.hosts = mode
+        for r in self.planner.resources.values():
+            if r.executor is not None:
+                r.executor.hosts = mode
+
+    # ------------------------------------------------------------------ #
     # Jobs
     # ------------------------------------------------------------------ #
     def _executor(self, handle: ResourceHandle, kind: str):

@@ -4,8 +4,42 @@
   Clutch threshold sampler (JAX).
 * :mod:`repro.serve.pud_service` -- the request/response front end over
   :class:`repro.pud.PudSession`: batched PuD query/inference requests
-  with per-request results and barrier-aware stats (NumPy only).
+  with per-request results, wave-accurate latency attribution, and
+  barrier-aware stats (NumPy only).
+
+Serving model
+-------------
+The PuD serving stack turns the scheduler's nanosecond-accurate
+makespans into application-level serving metrics (p50/p99 latency,
+goodput under offered load) on ONE simulated clock:
+
+* :mod:`repro.serve.arrivals` -- open-loop arrival generation: Poisson,
+  bursty on/off, and replayable JSON-lines traces, each arrival a
+  :class:`~repro.serve.pud_service.PudRequest` with an absolute
+  timestamp, a priority class, and a relative ``deadline_ns`` SLO.
+* :mod:`repro.serve.admission` -- weighted per-class priority with a
+  starvation bound, shedding overload with explicit 429-style
+  ``PudResponse.error`` instead of silent drops.
+* :mod:`repro.serve.batcher` -- deadline-aware batch formation: the
+  machine simulator doubles as the cost oracle, so a candidate batch
+  is probe-executed (free on the simulated clock), members whose
+  predicted completion blows their remaining budget split into a
+  trailing batch, and survivors commit leaner.
+* :mod:`repro.serve.loop` -- the event loop binding the above:
+  ingest -> admit -> form -> execute -> scale; queueing delay eats
+  deadline budget, service time feeds back into queueing, saturation
+  emerges.
+* :mod:`repro.serve.autoscaler` -- rolling host-utilization bands
+  trigger re-evaluation; the last job's recorded streams re-schedule
+  under every ``(host_lanes, hosts)`` candidate and the argmin config
+  applies through the session hooks (never slower than the best
+  static config on the probe job, by construction).
+
+``benchmarks/serving_load.py`` sweeps offered load over this stack and
+emits the goodput-vs-load curve (``BENCH_serving_load.json``);
+``repro.analysis`` audits every dispatched schedule (PL4xx: a
+committed request whose deadline precedes its predicted start).
 
 Submodules are imported explicitly (``engine`` pulls in JAX; the PuD
-service does not).
+serving stack does not).
 """

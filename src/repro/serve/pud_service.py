@@ -20,18 +20,29 @@ preserved within a group) and runs each group as ONE session job --
 query requests become one pipelined query batch, predict requests
 concatenate their instances into one inference batch -- so co-resident
 requests share waves exactly the way the async pipeline overlaps them.
-Each :class:`PudResponse` carries its own result plus per-request
-stats: the shared barrier-aware :class:`~repro.apps.pipeline.\
-PipelineStats` of its batch, and a ``latency_ns`` that is the
-request's own wave-completion time when the batch contains no
-host-barrier re-submission (Q5 inserts an extra dependent wave, whose
-re-ordered tags make per-wave attribution ambiguous -- those batches
-report the batch makespan for every member).
+
+Latency attribution: every :class:`PudResponse` carries a
+``latency_ns`` that is the request's OWN completion time inside its
+batch, never a whole-batch fallback:
+
+* machine-backend queries read the executor's per-wave ownership map
+  (``QueryBatchExecutor.last_wave_owners``): a request's latency is
+  the completion time of the last pipeline wave it owns, which makes
+  host-barrier (Q5) members -- whose phase-2 wave is re-submitted
+  mid-pipeline -- attributable wave-accurately too;
+* machine-backend predicts locate the wave that completes a request's
+  instance span (instances ``[off, off+B)`` finish with wave
+  ``(off+B-1) // wave_width``);
+* fused-backend jobs have no scheduled timeline, only the batch's
+  measured ``wallclock_ns`` -- queries amortize it evenly across the
+  batch, predicts proportionally to instance count, so attributed
+  fused latencies always SUM to the measured batch wall-clock.
 
 Deadlines: a request may carry ``deadline_ns``; at flush its scheduled
 latency is checked against it and an expired request fails alone
-(``ok=False``) -- serving hardening's first slice, the batch is never
-poisoned by one late member.
+(``ok=False``) -- the batch is never poisoned by one late member.
+:class:`repro.serve.batcher.DeadlineBatcher` builds on this to split
+batches *before* a member expires.
 """
 
 from __future__ import annotations
@@ -41,7 +52,7 @@ from typing import Any
 
 import numpy as np
 
-from repro.pud.queries import Q1, Q2, Q3, Q4, Q5
+from repro.pud.queries import Q1, Q2, Q3, Q4, Q5, Compound
 from repro.pud.session import (
     ForestHandle,
     PudSession,
@@ -73,7 +84,7 @@ class PudRequest:
             raise ValueError(
                 "a PudRequest carries either `query` or `X`, not both")
         if self.query is not None and not isinstance(
-                self.query, (Q1, Q2, Q3, Q4, Q5)):
+                self.query, (Q1, Q2, Q3, Q4, Q5, Compound)):
             raise TypeError(f"unknown query type {type(self.query)}")
 
     @property
@@ -89,7 +100,8 @@ class PudResponse:
     it rode in (``batch_size`` peers), and its latency attribution.
     ``ok`` is ``False`` for a request that missed its ``deadline_ns``
     (the batch still executed; the result is withheld and ``error``
-    says by how much the deadline was missed)."""
+    says by how much the deadline was missed) or that admission shed
+    before execution (``error`` then carries a 429-style reason)."""
 
     rid: int
     result: Any
@@ -103,23 +115,32 @@ class PudResponse:
 @dataclass
 class PudService:
     """Batched serving loop over one session (single-threaded: requests
-    accumulate via :meth:`submit` and execute on :meth:`flush`)."""
+    accumulate via :meth:`submit` and execute on :meth:`flush`).
+
+    Pending requests are keyed by rid in arrival order: ``submit`` is
+    O(1), and a rid becomes reusable the moment it leaves the queue --
+    ``submit`` after ``cancel`` of the same rid is always accepted, and
+    a flush retires exactly the rids it executed, so a request
+    submitted while a flush retry is being arranged is never lost."""
 
     session: PudSession
-    _pending: list[PudRequest] = field(default_factory=list)
+    _pending: dict[int, PudRequest] = field(default_factory=dict)
+    #: JobResult of the most recent :meth:`_run_batch` execution --
+    #: introspection for the serving loop / autoscaler, which need the
+    #: job's scheduled Timeline (host utilization, channel busy).
+    last_job: Any = field(default=None, repr=False)
 
     def submit(self, request: PudRequest) -> None:
-        if any(r.rid == request.rid for r in self._pending):
+        if request.rid in self._pending:
             raise ValueError(
                 f"duplicate request id {request.rid} already pending")
-        self._pending.append(request)
+        self._pending[request.rid] = request
 
     def cancel(self, rid: int) -> bool:
         """Remove a pending request (e.g. one that made :meth:`flush`
-        fail); returns whether it was found."""
-        before = len(self._pending)
-        self._pending = [r for r in self._pending if r.rid != rid]
-        return len(self._pending) < before
+        fail); returns whether it was found.  The rid is immediately
+        reusable by a fresh :meth:`submit`."""
+        return self._pending.pop(rid, None) is not None
 
     @property
     def queue_depth(self) -> int:
@@ -134,12 +155,11 @@ class PudService:
         already executed are re-run on the retry.
 
         Requests carrying a ``deadline_ns`` are checked against their
-        scheduled latency in the batch's barrier-aware timeline (the
-        job makespan when per-wave attribution is ambiguous): an
-        expired request fails individually (``ok=False``, result
-        withheld) WITHOUT poisoning the batch -- its peers' responses
-        are exactly what they would have been."""
-        pending = self._pending
+        attributed scheduled latency: an expired request fails
+        individually (``ok=False``, result withheld) WITHOUT poisoning
+        the batch -- its peers' responses are exactly what they would
+        have been."""
+        pending = list(self._pending.values())
         groups: dict[tuple[str, str], list[PudRequest]] = {}
         for req in pending:
             kind = "query" if req.query is not None else "predict"
@@ -149,39 +169,87 @@ class PudService:
         handles = {key: self._handle(*key) for key in groups}
         by_rid: dict[int, PudResponse] = {}
         for (name, kind), reqs in groups.items():
-            handle = handles[(name, kind)]
-            if kind == "query":
-                job = self.session.query(handle,
-                                         [r.query for r in reqs])
-                results = job.result
-                # Per-request latency: wave w's completion when waves
-                # map 1:1 onto requests; a Q5 re-submission breaks the
-                # mapping, so the whole batch reports its makespan.  A
-                # fused-backend job has no scheduled timeline -- every
-                # member reports the batch's measured wall-clock.
-                done = job.stats.wave_done_ns \
-                    if job.stats is not None else []
-                exact = len(done) == len(reqs)
-                for i, r in enumerate(reqs):
-                    by_rid[r.rid] = self._deadline_checked(PudResponse(
-                        rid=r.rid, result=results[i], stats=job.stats,
-                        latency_ns=done[i] if exact
-                        else job.makespan_ns,
-                        batch_size=len(reqs)), r)
-            else:
-                sizes = [np.asarray(r.X).shape[0] for r in reqs]
-                X = np.concatenate([np.asarray(r.X) for r in reqs])
-                job = self.session.predict(handle, X)
-                off = 0
-                for r, sz in zip(reqs, sizes):
-                    by_rid[r.rid] = self._deadline_checked(PudResponse(
-                        rid=r.rid, result=job.result[off:off + sz],
-                        stats=job.stats,
-                        latency_ns=job.makespan_ns,
-                        batch_size=len(reqs)), r)
-                    off += sz
-        self._pending = []
+            for req, resp in zip(
+                    reqs, self._run_batch(handles[(name, kind)],
+                                          kind, reqs)):
+                by_rid[req.rid] = self._deadline_checked(resp, req)
+        # retire exactly the rids this flush executed: a submit that
+        # raced in after the snapshot stays pending for the next flush
+        for req in pending:
+            self._pending.pop(req.rid, None)
         return [by_rid[r.rid] for r in pending]
+
+    # ------------------------------------------------------------------ #
+    # Batch execution + attribution (shared with serve.batcher)
+    # ------------------------------------------------------------------ #
+    def _run_batch(self, handle: ResourceHandle, kind: str,
+                   reqs: list[PudRequest]) -> list[PudResponse]:
+        """Run one per-resource group as a single session job and
+        return per-request responses with attributed latencies, in
+        ``reqs`` order.  Deadline enforcement is the caller's."""
+        if kind == "query":
+            job = self.session.query(handle, [r.query for r in reqs])
+            self.last_job = job
+            lats = self._query_latencies(handle, job, len(reqs))
+            return [PudResponse(rid=r.rid, result=job.result[i],
+                                stats=job.stats, latency_ns=lats[i],
+                                batch_size=len(reqs))
+                    for i, r in enumerate(reqs)]
+        sizes = [int(np.asarray(r.X).shape[0]) for r in reqs]
+        X = np.concatenate([np.asarray(r.X) for r in reqs])
+        job = self.session.predict(handle, X)
+        self.last_job = job
+        lats = self._predict_latencies(handle, job, sizes)
+        out: list[PudResponse] = []
+        off = 0
+        for r, sz, lat in zip(reqs, sizes, lats):
+            out.append(PudResponse(
+                rid=r.rid, result=job.result[off:off + sz],
+                stats=job.stats, latency_ns=lat,
+                batch_size=len(reqs)))
+            off += sz
+        return out
+
+    def _query_latencies(self, handle: ResourceHandle, job,
+                         n: int) -> list[float]:
+        """Per-request completion times for a query batch: the last
+        owned wave's ``wave_done_ns`` (machine), or an even share of
+        the measured batch wall-clock (fused -- shares sum to the
+        batch total)."""
+        if job.stats is None:
+            return [job.wallclock_ns / n] * n
+        done = job.stats.wave_done_ns
+        owners = getattr(self.session.executor(handle),
+                         "last_wave_owners", [])
+        if len(owners) != len(done):
+            # ownership map out of step with the timeline (foreign
+            # executor): fall back to the batch makespan for everyone
+            return [float(job.makespan_ns)] * n
+        lats = [0.0] * n
+        for w, qi in enumerate(owners):
+            lats[qi] = max(lats[qi], float(done[w]))
+        return lats
+
+    def _predict_latencies(self, handle: ResourceHandle, job,
+                           sizes: list[int]) -> list[float]:
+        """Per-request completion times for a concatenated inference
+        batch: the wave that finishes the request's instance span
+        (machine), or the batch wall-clock split proportionally to
+        instance counts (fused -- shares sum to the batch total)."""
+        total = sum(sizes) or 1
+        if job.stats is None:
+            return [job.wallclock_ns * sz / total for sz in sizes]
+        done = job.stats.wave_done_ns
+        width = getattr(self.session.executor(handle), "wave_width", 0)
+        if not done or width <= 0:
+            return [float(job.makespan_ns)] * len(sizes)
+        lats: list[float] = []
+        off = 0
+        for sz in sizes:
+            last_wave = (off + max(sz, 1) - 1) // width
+            lats.append(float(done[min(last_wave, len(done) - 1)]))
+            off += sz
+        return lats
 
     @staticmethod
     def _deadline_checked(resp: PudResponse,

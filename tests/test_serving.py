@@ -1,0 +1,519 @@
+"""Serving-layer tests: arrivals, admission, deadline-aware batching,
+the simulated-clock loop, the autoscaler, latency attribution, and the
+PL4xx serving pudlint pass."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import pudlint
+from repro.apps.gbdt import ObliviousForest
+from repro.apps.predicate import Table
+from repro.pud.queries import Q1, Q3, Q5, Compound
+from repro.pud.session import PudSession
+from repro.serve.admission import AdmissionController
+from repro.serve.arrivals import (
+    Arrival,
+    ClassSpec,
+    WorkloadMix,
+    bursty_arrivals,
+    load_trace,
+    poisson_arrivals,
+    query_from_tuple,
+    save_trace,
+)
+from repro.serve.autoscaler import UtilizationAutoscaler
+from repro.serve.batcher import DeadlineBatcher
+from repro.serve.loop import ServingLoop
+from repro.serve.pud_service import PudRequest, PudService
+
+N_BITS = 8
+COLS = 4096
+
+
+def _data(n=256, f=8, seed=0):
+    return np.random.default_rng(seed).integers(0, 2 ** N_BITS, (n, f))
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One session + table + forest shared by the read-only tests."""
+    sess = PudSession(num_devices=2, verify="off")
+    sess.create_table(_data(), name="events", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    forest = ObliviousForest.random(num_trees=4, depth=3,
+                                    num_features=8, n_bits=N_BITS, seed=0)
+    sess.load_forest(forest, name="rank")
+    return PudService(sess)
+
+
+# --------------------------------------------------------------------- #
+# Satellite: duplicate-rid race + queue_depth accounting
+# --------------------------------------------------------------------- #
+def test_submit_after_cancel_reuses_rid(served):
+    svc = served
+    svc.submit(PudRequest(rid=7, resource="events", query=Q1(0, 10, 200)))
+    assert svc.queue_depth == 1
+    assert svc.cancel(7)
+    assert svc.queue_depth == 0
+    # the rid is free again immediately
+    svc.submit(PudRequest(rid=7, resource="events", query=Q1(1, 10, 200)))
+    with pytest.raises(ValueError, match="duplicate request id 7"):
+        svc.submit(PudRequest(rid=7, resource="events",
+                              query=Q1(2, 10, 200)))
+    assert svc.queue_depth == 1
+    rs = svc.flush()
+    assert [r.rid for r in rs] == [7] and rs[0].ok
+    assert svc.queue_depth == 0
+    # and free again after the flush retired it
+    svc.submit(PudRequest(rid=7, resource="events", query=Q1(0, 10, 200)))
+    assert svc.cancel(7) and not svc.cancel(7)
+
+
+def test_interleaved_submit_cancel_flush_accounting(served):
+    svc = served
+    for rid in range(4):
+        svc.submit(PudRequest(rid=rid, resource="events",
+                              query=Q1(rid % 8, 10, 200)))
+    assert svc.queue_depth == 4
+    svc.cancel(1)
+    svc.cancel(3)
+    svc.submit(PudRequest(rid=1, resource="events", query=Q1(5, 20, 210)))
+    assert svc.queue_depth == 3
+    rs = svc.flush()
+    assert [r.rid for r in rs] == [0, 2, 1]     # arrival order kept
+    assert all(r.ok and r.batch_size == 3 for r in rs)
+    assert svc.queue_depth == 0
+
+
+def test_failed_flush_keeps_queue_for_retry(served):
+    svc = served
+    svc.submit(PudRequest(rid=1, resource="events", query=Q1(0, 10, 200)))
+    svc.submit(PudRequest(rid=2, resource="nope", query=Q1(0, 10, 200)))
+    with pytest.raises(KeyError):
+        svc.flush()
+    assert svc.queue_depth == 2
+    assert svc.cancel(2)
+    rs = svc.flush()
+    assert [r.rid for r in rs] == [1] and rs[0].ok
+
+
+# --------------------------------------------------------------------- #
+# Satellite: latency attribution
+# --------------------------------------------------------------------- #
+def test_machine_attribution_is_wave_accurate_with_q5(served):
+    """A host-barrier (Q5) batch attributes per-request completion
+    times instead of falling back to the batch makespan."""
+    svc = served
+    svc.submit(PudRequest(rid=1, resource="events", query=Q1(0, 10, 200)))
+    svc.submit(PudRequest(
+        rid=2, resource="events", query=Q5(1, 2, 3, 10, 200, 4, 20, 220)))
+    svc.submit(PudRequest(rid=3, resource="events", query=Q3(
+        1, 5, 100, 2, 50, 150)))
+    rs = svc.flush()
+    mk = rs[0].stats.makespan_ns
+    # the early Q1 completes long before the Q5's phase-2 barrier wave
+    assert 0 < rs[0].latency_ns < rs[1].latency_ns
+    assert all(r.latency_ns <= mk + 1e-6 for r in rs)
+    # attribution did not perturb results
+    tab = Table(N_BITS, [np.ascontiguousarray(_data()[:, f],
+                                              dtype=np.uint64)
+                         for f in range(8)])
+    assert Q5(1, 2, 3, 10, 200, 4, 20, 220).check(tab, rs[1].result)
+
+
+def test_machine_predict_attribution_tracks_instance_span(served):
+    svc = served
+    rng = np.random.default_rng(1)
+    svc.submit(PudRequest(rid=1, resource="rank",
+                          X=rng.integers(0, 256, (4, 8))))
+    svc.submit(PudRequest(rid=2, resource="rank",
+                          X=rng.integers(0, 256, (40, 8))))
+    rs = svc.flush()
+    # the small request rides the first inference wave; the big one
+    # spans several more and must finish strictly later
+    assert 0 < rs[0].latency_ns < rs[1].latency_ns
+    assert len(rs[0].result) == 4 and len(rs[1].result) == 40
+
+
+def test_fused_attribution_sums_to_batch_wallclock():
+    sess = PudSession(num_devices=1, backend="fused", verify="off")
+    sess.create_table(_data(), name="events", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    svc = PudService(sess)
+    for rid in range(3):
+        svc.submit(PudRequest(rid=rid, resource="events",
+                              query=Q1(rid, 10, 200)))
+    rs = svc.flush()
+    total = sum(r.latency_ns for r in rs)
+    assert total == pytest.approx(svc.last_job.wallclock_ns, rel=1e-9)
+
+    forest = ObliviousForest.random(num_trees=4, depth=3,
+                                    num_features=8, n_bits=N_BITS, seed=0)
+    sess.load_forest(forest, name="rank")
+    rng = np.random.default_rng(2)
+    svc.submit(PudRequest(rid=1, resource="rank",
+                          X=rng.integers(0, 256, (10, 8))))
+    svc.submit(PudRequest(rid=2, resource="rank",
+                          X=rng.integers(0, 256, (30, 8))))
+    rp = svc.flush()
+    assert sum(r.latency_ns for r in rp) == pytest.approx(
+        svc.last_job.wallclock_ns, rel=1e-9)
+    # proportional to instance counts
+    assert rp[1].latency_ns == pytest.approx(3 * rp[0].latency_ns)
+
+
+# --------------------------------------------------------------------- #
+# Satellite: deadline-aware splitting
+# --------------------------------------------------------------------- #
+def _pressed_batch():
+    """A Q5 whose host barrier delays batch-mates: a tight-deadline Q1
+    and a ``merge="dram"`` Compound that only survive a split."""
+    return [
+        PudRequest(rid=1, resource="events",
+                   query=Q5(1, 2, 3, 10, 200, 4, 20, 220)),
+        PudRequest(rid=2, resource="events", query=Q1(0, 10, 200),
+                   deadline_ns=2_000.0),
+        PudRequest(rid=3, resource="events",
+                   query=Compound((Q1(0, 10, 200),
+                                   Q3(1, 5, 100, 2, 50, 150)),
+                                  ("and",), count=True, merge="dram"),
+                   deadline_ns=12_000.0),
+    ]
+
+
+def test_split_saves_survivors_q5_and_dram_compound(served):
+    svc = served
+    th = svc._handle("events", "query")
+    base = DeadlineBatcher(svc, enabled=False)
+    out0 = base.dispatch(th, "query", _pressed_batch())
+    # split-free: both deadline-bearing members blow their budget
+    assert [r.ok for r in out0.responses] == [True, False, False]
+    assert all("deadline exceeded" in r.error
+               for r in out0.responses if not r.ok)
+
+    split = DeadlineBatcher(svc, enabled=True)
+    out1 = split.dispatch(th, "query", _pressed_batch())
+    assert [r.ok for r in out1.responses] == [True, True, True]
+    assert out1.splits >= 1
+    # survivors meet their deadlines with room, results intact
+    assert out1.responses[1].latency_ns <= 2_000.0
+    assert out1.responses[2].latency_ns <= 12_000.0
+    tab = Table(N_BITS, [np.ascontiguousarray(_data()[:, f],
+                                              dtype=np.uint64)
+                         for f in range(8)])
+    assert _pressed_batch()[2].query.check(tab, out1.responses[2].result)
+
+
+def test_split_offsets_keep_attribution_serial(served):
+    """Committed sub-batches stack serially: the deferred member's
+    latency includes the lean batch's makespan ahead of it."""
+    svc = served
+    th = svc._handle("events", "query")
+    out = DeadlineBatcher(svc, enabled=True).dispatch(
+        th, "query", _pressed_batch())
+    q5 = out.responses[0]
+    lean_span = max(out.responses[1].latency_ns,
+                    out.responses[2].latency_ns)
+    assert q5.latency_ns > lean_span
+    assert out.makespan_ns >= q5.latency_ns
+
+
+# --------------------------------------------------------------------- #
+# Admission: weights, starvation bound, 429 shed
+# --------------------------------------------------------------------- #
+def _arrival(rid, cls, t=0.0, deadline=None):
+    return Arrival(arrive_ns=t, cls=cls, request=PudRequest(
+        rid=rid, resource="events", query=Q1(0, 10, 200),
+        deadline_ns=deadline))
+
+
+def test_admission_weighted_shares_and_fifo_within_class():
+    adm = AdmissionController(
+        (ClassSpec("hot", weight=3.0), ClassSpec("cold", weight=1.0)),
+        capacity=64, starvation_bound=100)
+    for i in range(8):
+        adm.offer(_arrival(i, "hot", t=i))
+        adm.offer(_arrival(100 + i, "cold", t=i))
+    taken = adm.take(8)
+    hot = [a.rid for a in taken if a.cls == "hot"]
+    cold = [a.rid for a in taken if a.cls == "cold"]
+    # 3:1 weights -> 6 hot, 2 cold out of 8; FIFO inside each class
+    assert len(hot) == 6 and len(cold) == 2
+    assert hot == sorted(hot) and cold == sorted(cold)
+
+
+def test_admission_starvation_bound():
+    adm = AdmissionController(
+        (ClassSpec("hot", weight=100.0), ClassSpec("cold", weight=1.0)),
+        capacity=64, starvation_bound=3)
+    for i in range(10):
+        adm.offer(_arrival(i, "hot", t=i))
+    adm.offer(_arrival(99, "cold", t=0.5))
+    taken = adm.take(6)
+    # despite the 100:1 weight, cold's head is served within the bound
+    cold_pos = [k for k, a in enumerate(taken) if a.cls == "cold"]
+    assert cold_pos and cold_pos[0] <= 3
+
+
+def test_admission_sheds_with_explicit_429():
+    adm = AdmissionController((ClassSpec("only"),), capacity=2)
+    assert adm.offer(_arrival(1, "only")) is None
+    assert adm.offer(_arrival(2, "only")) is None
+    shed = adm.offer(_arrival(3, "only"))
+    assert shed is not None and not shed.ok and shed.rid == 3
+    assert shed.error.startswith("429 ")
+    assert adm.depth == 2 and adm.shed == 1 and adm.admitted == 2
+    taken = adm.take(10)
+    assert [a.rid for a in taken] == [1, 2] and adm.depth == 0
+
+
+# --------------------------------------------------------------------- #
+# Arrivals: determinism, trace round trip
+# --------------------------------------------------------------------- #
+def _mix():
+    return WorkloadMix(
+        table="events", forest="rank", predict_frac=0.25,
+        predict_batch=4,
+        classes=(ClassSpec("interactive", weight=4.0, share=0.5,
+                           deadline_ns=2e6),
+                 ClassSpec("batch", weight=1.0, share=0.5)))
+
+
+def test_poisson_arrivals_are_seed_deterministic():
+    a = poisson_arrivals(_mix(), rate_rps=10_000, n=16, seed=42)
+    b = poisson_arrivals(_mix(), rate_rps=10_000, n=16, seed=42)
+    assert [x.arrive_ns for x in a] == [x.arrive_ns for x in b]
+    assert [x.request.query for x in a] == [x.request.query for x in b]
+    assert all(x.arrive_ns < y.arrive_ns for x, y in zip(a, a[1:]))
+    c = poisson_arrivals(_mix(), rate_rps=10_000, n=16, seed=43)
+    assert [x.arrive_ns for x in a] != [x.arrive_ns for x in c]
+
+
+def test_bursty_arrivals_cluster():
+    arr = bursty_arrivals(_mix(), rate_rps=10_000, n=32, seed=7,
+                          on_ns=1e6, off_ns=1e6, burst_factor=4.0)
+    assert len(arr) == 32
+    gaps = np.diff([a.arrive_ns for a in arr])
+    # on/off structure: some gaps far above the in-burst mean
+    assert gaps.max() > 4 * np.median(gaps)
+
+
+def test_trace_round_trip(tmp_path):
+    arr = poisson_arrivals(_mix(), rate_rps=10_000, n=12, seed=3)
+    path = tmp_path / "trace.jsonl"
+    save_trace(str(path), arr)
+    back = load_trace(str(path))
+    assert [a.rid for a in back] == [a.rid for a in arr]
+    for x, y in zip(arr, back):
+        assert y.arrive_ns == pytest.approx(x.arrive_ns)
+        assert y.cls == x.cls
+        assert y.request.query == x.request.query
+        if x.request.X is not None:
+            assert (np.asarray(y.request.X)
+                    == np.asarray(x.request.X)).all()
+
+
+def test_query_from_tuple_round_trips_every_kind():
+    qs = [Q1(0, 1, 2), Q3(0, 1, 2, 3, 4, 5),
+          Q5(0, 1, 2, 3, 4, 5, 6, 7),
+          Compound((Q1(0, 1, 2), Q3(1, 2, 3, 4, 5, 6)), ("or",),
+                   count=True, merge="dram")]
+    for q in qs:
+        assert query_from_tuple(q.to_tuple()) == q
+
+
+# --------------------------------------------------------------------- #
+# The loop: end-to-end serving on the simulated clock
+# --------------------------------------------------------------------- #
+def test_serving_loop_end_to_end(served):
+    mix = _mix()
+    arr = poisson_arrivals(mix, rate_rps=20_000, n=20, seed=1)
+    adm = AdmissionController(mix.classes, capacity=16,
+                              starvation_bound=4)
+    loop = ServingLoop(served, adm, DeadlineBatcher(served), max_batch=6)
+    rep = loop.run(arr)
+    assert rep.offered == 20
+    assert rep.completed + sum(1 for r in rep.records if not r.ok) == 20
+    assert rep.duration_ns >= max(a.arrive_ns for a in arr)
+    if rep.completed >= 2:
+        assert rep.p99_ns >= rep.p50_ns > 0
+    # every non-ok record carries an explicit error
+    assert all(r.error for r in rep.records if not r.ok)
+    # ok records were executed and finished after arriving
+    for r in rep.records:
+        if r.ok:
+            assert r.finish_ns > r.arrive_ns >= 0
+
+
+def test_serving_loop_sheds_expired_and_overflow_explicitly(served):
+    # capacity 2 with a tight SLO at a flood: sheds must say why
+    classes = (ClassSpec("tight", deadline_ns=1.0),)
+    mix = WorkloadMix(table="events", kinds=("q5",), classes=classes)
+    arr = poisson_arrivals(mix, rate_rps=1_000_000, n=8, seed=5)
+    adm = AdmissionController(classes, capacity=2)
+    loop = ServingLoop(served, adm, DeadlineBatcher(served), max_batch=2)
+    rep = loop.run(arr)
+    assert rep.offered == 8
+    shed = [r for r in rep.records if r.start_ns is None]
+    assert shed, "flood at capacity 2 must shed"
+    assert all(r.error.startswith("429 ") for r in shed)
+
+
+def test_serving_loop_retires_traces_after_dispatch(served):
+    """Every dispatch ends with ``clear_traces`` on its resource: a
+    long-running loop must not grow subarray command history without
+    bound (and accumulated cross-job row reuse would read as hazards
+    to whole-trace lints)."""
+    mix = _mix()
+    arr = poisson_arrivals(mix, rate_rps=20_000, n=10, seed=11)
+    adm = AdmissionController(mix.classes, capacity=16)
+    rep = ServingLoop(served, adm, DeadlineBatcher(served)).run(arr)
+    assert any(r.start_ns is not None for r in rep.records)
+    for name in ("events", "rank"):
+        ex = served.session.planner.ensure_ready(name)
+        assert all(len(eng.sub.trace.entries) == 0 for eng in ex.engines)
+
+
+def test_serving_loop_audits_dispatches_for_pl401(served):
+    """Dispatched requests reach the pudlint collector; a correct loop
+    never dispatches a deadline that precedes its start, so the
+    serving pass stays clean (the conftest drain would fail this test
+    otherwise)."""
+    from repro.core import machine
+
+    collector = machine._LINT_REGISTRY
+    assert collector is not None  # installed by the autouse fixture
+    before = len(collector._serving)
+    mix = _mix()
+    arr = poisson_arrivals(mix, rate_rps=20_000, n=6, seed=9)
+    adm = AdmissionController(mix.classes, capacity=16)
+    ServingLoop(served, adm, DeadlineBatcher(served)).run(arr)
+    audited = collector._serving[before:]
+    assert audited, "dispatches must be audited"
+    assert not pudlint.serving_admission_diags(audited)
+
+
+def test_serving_admission_diags_flags_preceding_deadline():
+    recs = [
+        {"rid": 1, "cls": "hot", "start_ns": 100.0, "deadline_ns": 40.0},
+        {"rid": 2, "cls": "hot", "start_ns": 100.0, "deadline_ns": 200.0},
+        {"rid": 3, "start_ns": 100.0, "deadline_ns": None},
+    ]
+    diags = pudlint.serving_admission_diags(recs)
+    assert len(diags) == 1
+    d = diags[0]
+    assert d.code == "PL401" and d.severity == "error"
+    assert "request 1" in d.message and "[hot]" in d.message
+    assert pudlint.CODES["PL401"] == ("error", "deadline-precedes-start")
+
+
+def test_trace_collector_drains_serving_records():
+    collector = pudlint.TraceCollector()
+    collector.add_serving(
+        {"rid": 9, "start_ns": 50.0, "deadline_ns": 10.0})
+    report = collector.drain()
+    assert [d.code for d in report.errors] == ["PL401"]
+    assert collector.drain().ok  # drained records do not re-report
+
+
+# --------------------------------------------------------------------- #
+# Autoscaler + session hooks + planner cold_resources
+# --------------------------------------------------------------------- #
+def test_session_scaling_hooks():
+    sess = PudSession(num_devices=2, verify="off")
+    sess.create_table(_data(), name="events", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    ex = sess.planner.ensure_ready("events")
+    sess.set_host_lanes(4)
+    assert sess.sys_cfg.host_lanes == 4
+    sess.set_hosts("per-device")
+    assert sess.hosts == "per-device" and ex.hosts == "per-device"
+    with pytest.raises(ValueError):
+        sess.set_host_lanes(0)
+    with pytest.raises(ValueError):
+        sess.set_hosts("nope")
+
+
+def test_planner_cold_resources():
+    sess = PudSession(num_devices=1, verify="off")
+    sess.create_table(_data(128), name="a", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    sess.create_table(_data(128), name="b", n_bits=N_BITS,
+                      cols_per_bank=COLS, pinned=True)
+    sess.create_table(_data(128), name="c", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    for _ in range(4):
+        sess.planner.touch("c")
+    cold = sess.planner.cold_resources(min_idle=2)
+    assert "a" in cold and "b" not in cold and "c" not in cold
+    # coldest first
+    assert cold[0] == "a"
+
+
+def test_autoscaler_never_slower_than_best_static(served):
+    svc = served
+    sess = svc.session
+    orig_cfg, orig_hosts = sess.sys_cfg, sess.hosts
+    try:
+        scaler = UtilizationAutoscaler(
+            sess, lane_options=(1, 2, 4), window=1,
+            lo_util=0.0, hi_util=0.0)   # every observation triggers
+        th = svc._handle("events", "query")
+        svc.submit(PudRequest(rid=1, resource="events",
+                              query=Q1(0, 10, 200)))
+        svc.submit(PudRequest(rid=2, resource="events",
+                              query=Q3(1, 5, 100, 2, 50, 150)))
+        svc.flush()
+        ex = sess.executor(th)
+        decision = scaler.observe(ex, svc.last_job.timeline)
+        assert decision is not None
+        # argmin guarantee: the chosen config IS the best static one
+        assert decision.predicted_ns <= decision.static_best_ns
+        assert decision.predicted_ns <= decision.baseline_ns + 1e-6
+        # the session adopted the decision
+        assert sess.sys_cfg.host_lanes == decision.host_lanes
+        assert sess.hosts == decision.hosts
+        # and the next scheduled job really achieves the prediction
+        tl = ex.schedule(sess.sys_cfg)
+        assert tl.makespan_ns == pytest.approx(decision.predicted_ns)
+    finally:
+        sess.sys_cfg = orig_cfg
+        sess.set_hosts(orig_hosts)
+
+
+def test_autoscaler_window_and_band_gate_reevaluation(served):
+    sess = served.session
+    scaler = UtilizationAutoscaler(sess, window=3, lo_util=0.0,
+                                   hi_util=1.0)  # band covers all
+    th = served._handle("events", "query")
+    served.submit(PudRequest(rid=1, resource="events",
+                             query=Q1(0, 10, 200)))
+    served.flush()
+    ex = sess.executor(th)
+    tl = served.last_job.timeline
+    assert scaler.observe(ex, tl) is None      # window filling
+    assert scaler.observe(ex, tl) is None
+    assert scaler.observe(ex, tl) is None      # full, but in-band
+    assert scaler.observe(ex, None) is None    # fused jobs: no signal
+    assert scaler.decisions == []
+
+
+def test_autoscaler_evicts_cold_resources():
+    sess = PudSession(num_devices=1, verify="off")
+    sess.create_table(_data(128), name="hot", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    sess.create_table(_data(128), name="cold", n_bits=N_BITS,
+                      cols_per_bank=COLS)
+    svc = PudService(sess)
+    scaler = UtilizationAutoscaler(sess, lane_options=(1, 2), window=1,
+                                   lo_util=0.0, hi_util=0.0,
+                                   evict_idle=2)
+    th = svc._handle("hot", "query")
+    for rid in range(3):
+        svc.submit(PudRequest(rid=rid, resource="hot",
+                              query=Q1(0, 10, 200)))
+        svc.flush()
+    decision = scaler.observe(sess.executor(th), svc.last_job.timeline)
+    assert decision is not None and "cold" in decision.evicted
+    assert sess.planner.resources["cold"].state == "evicted"
+    assert sess.planner.resources["hot"].state == "ready"
