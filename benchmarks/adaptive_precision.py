@@ -1,0 +1,228 @@
+"""Adaptive per-column representation vs the fixed uniform default.
+
+Workload: a skewed-width table -- five columns declared at 16 bits
+whose observed ranges actually span 4/6/8/12/16 bits (real tables are
+like this: enum codes and small counters share a schema with wide IDs)
+-- queried with a Q1-Q5 + Compound mix on both PuD architectures, plus
+a GBDT forest whose thresholds use only 9 of their declared 16 bits.
+The same data is loaded twice per architecture: once ``fixed`` (the
+paper's uniform chunking) and once ``representation="auto"`` (the
+:func:`~repro.pud.planner.choose_representation` optimizer).  Machine
+jobs run under ``verify="strict"``, so every schedule this benchmark
+reports is also pudlint-verified (PL501 representation pass included).
+
+Reported per architecture: scheduled makespan of the query batch and
+the GBDT batch under both representations, the LUT-row footprints, and
+the fused backend's measured wall-clock on the adaptive table.
+
+Acceptance gates, enforced with a nonzero exit (CI smoke runs this
+under ``pudlint_gate.py``):
+
+  * auto is never slower than the fixed default on the scheduled
+    makespan (5% tolerance for measured host-merge samples inside
+    makespans), for both the query table and the forest;
+  * auto's LUT footprint never exceeds the fixed default's, and on
+    this skewed workload it strictly shrinks;
+  * results are bit-exact across representations AND backends:
+    fixed == auto on the machine path, and machine == fused on the
+    adaptive plans (queries and GBDT predictions);
+  * the fused compile cache holds: re-running the same batch on the
+    same per-column plan tuple traces nothing new.
+
+All RNG is fixed-seed; makespans are modeled by the channel scheduler,
+so rows are reproducible up to measured host-merge samples.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.apps import predicate as P
+from repro.apps.gbdt import ObliviousForest
+from repro.core.machine import PuDArch
+from repro.pud import PudSession, Q1, Q2, Q3, Q4, Q5
+from repro.pud.queries import Compound
+
+WIDTHS = (4, 6, 8, 12, 16)       # observed bit widths, declared 16
+MAKESPAN_SLACK = 1.05            # host-merge samples jitter makespans
+
+
+def _table(smoke: bool) -> P.Table:
+    rng = np.random.default_rng(31)
+    n = 2_048 if smoke else 16_384
+    return P.Table(n_bits=16, features=[
+        rng.integers(0, 1 << w, n).astype(np.uint64) for w in WIDTHS])
+
+
+def _forest(smoke: bool) -> ObliviousForest:
+    rng = np.random.default_rng(32)
+    trees, depth, n_feat = (6, 3, len(WIDTHS)) if smoke else \
+        (16, 4, len(WIDTHS))
+    return ObliviousForest(
+        rng.integers(0, n_feat, size=(trees, depth)).astype(np.int32),
+        rng.integers(0, 400, size=(trees, depth)).astype(np.uint64),
+        rng.normal(size=(trees, 1 << depth)).astype(np.float32),
+        16, n_feat)
+
+
+def _batch() -> list:
+    # scalars sit inside each column's observed range so bitmaps are
+    # non-trivial under both representations
+    return [
+        Q1(fi=0, x0=2, x1=13),
+        Q2(fi=1, x0=4, x1=50, fj=4, y0=1000, y1=60000),
+        Q3(fi=2, x0=10, x1=200, fj=3, y0=100, y1=3500),
+        Q4(fk=4, fi=0, x0=1, x1=12, fj=2, y0=5, y1=220),
+        Q5(fl=3, fk=2, fi=1, x0=2, x1=40, fj=4, y0=0, y1=40000),
+        Compound(terms=(Q1(fi=0, x0=1, x1=14),
+                        Q3(fi=2, x0=5, x1=180, fj=3, y0=0, y1=3000)),
+                 ops=("and",), count=True),
+    ]
+
+
+def run(smoke: bool = False):
+    rows = []
+    table = _table(smoke)
+    forest = _forest(smoke)
+    batch = _batch()
+    X = np.random.default_rng(33).integers(
+        0, 1 << 16, size=(16 if smoke else 64, len(WIDTHS))
+    ).astype(np.uint64)
+
+    for arch in (PuDArch.MODIFIED, PuDArch.UNMODIFIED):
+        tag = arch.value
+        s = PudSession(num_devices=2, arch=arch, verify="strict")
+        t_fix = s.create_table(table, name="fix")
+        t_auto = s.create_table(table, name="auto",
+                                representation="auto")
+        rep = t_auto.representation
+        fixed_rows, auto_rows = rep["fixed_lut_rows"], rep["lut_rows"]
+        rows.append((f"{tag}_lut_rows_fixed", 0.0, fixed_rows))
+        rows.append((f"{tag}_lut_rows_auto", 0.0, auto_rows))
+        if auto_rows >= fixed_rows:
+            raise SystemExit(
+                f"adaptive footprint did not shrink on {tag}: auto uses "
+                f"{auto_rows} LUT rows vs fixed {fixed_rows} -- with "
+                "4/6/8/12-bit columns the optimizer must narrow")
+
+        r_fix = s.query(t_fix, batch)
+        r_auto = s.query(t_auto, batch)
+        m_fix, m_auto = r_fix.makespan_ns, r_auto.makespan_ns
+        rows.append((f"{tag}_query_fixed", round(m_fix / 1e3, 2),
+                     round(m_fix / m_auto, 3)))
+        rows.append((f"{tag}_query_auto", round(m_auto / 1e3, 2),
+                     round(m_fix / m_auto, 3)))
+        if m_auto > m_fix * MAKESPAN_SLACK:
+            raise SystemExit(
+                f"auto slower than fixed on {tag}: {m_auto:.0f}ns vs "
+                f"{m_fix:.0f}ns scheduled makespan -- the optimizer "
+                "must never lose to its own default candidate")
+        for a, b in zip(r_fix.result, r_auto.result):
+            if not np.array_equal(a, b):
+                raise SystemExit(
+                    f"fixed/auto results diverge on {tag} -- adaptive "
+                    "representation changed query semantics")
+
+        r_fused = s.query(t_auto, batch, backend="fused")
+        rows.append((f"{tag}_query_fused_wallclock",
+                     round(r_fused.wallclock_ns / 1e3, 2), len(batch)))
+        for a, b in zip(r_auto.result, r_fused.result):
+            if not np.array_equal(a, b):
+                raise SystemExit(
+                    f"machine/fused diverge on {tag} heterogeneous "
+                    "plans -- ragged LUT stacking broke bit-exactness")
+        fx = s._fused[t_auto.name]
+        before = dict(fx.trace_counts)
+        s.query(t_auto, batch, backend="fused")
+        if dict(fx.trace_counts) != before:
+            raise SystemExit(
+                f"fused compile cache missed on {tag}: re-running the "
+                "same batch on the same plan tuple traced new shapes")
+
+        f_fix = s.load_forest(forest, name="ffix")
+        f_auto = s.load_forest(forest, name="fauto",
+                               representation="auto")
+        p_fix = s.predict(f_fix, X)
+        p_auto = s.predict(f_auto, X)
+        mg_fix, mg_auto = p_fix.makespan_ns, p_auto.makespan_ns
+        rows.append((f"{tag}_gbdt_fixed", round(mg_fix / 1e3, 2),
+                     round(mg_fix / mg_auto, 3)))
+        rows.append((f"{tag}_gbdt_auto", round(mg_auto / 1e3, 2),
+                     round(mg_fix / mg_auto, 3)))
+        if mg_auto > mg_fix * MAKESPAN_SLACK:
+            raise SystemExit(
+                f"auto GBDT slower than fixed on {tag}: {mg_auto:.0f}ns "
+                f"vs {mg_fix:.0f}ns")
+        if not np.array_equal(p_fix.result, p_auto.result):
+            raise SystemExit(
+                f"fixed/auto GBDT predictions diverge on {tag}")
+        p_fused = s.predict(f_auto, X, backend="fused")
+        if not np.array_equal(p_auto.result, p_fused.result):
+            raise SystemExit(
+                f"machine/fused GBDT predictions diverge on {tag} under "
+                "the adaptive threshold plan")
+    return rows
+
+
+def write_bench_json(rows, smoke: bool, path: str | None = None) -> str:
+    """Append this run to ``BENCH_adaptive_precision.json``'s
+    ``trajectory`` (same layout as ``benchmarks/run.py``); the latest
+    entry is mirrored at the top level."""
+    import datetime as _dt
+
+    path = path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_adaptive_precision.json")
+    trajectory = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            trajectory = prev.get("trajectory") or []
+        except (json.JSONDecodeError, OSError):
+            trajectory = []
+    entry = {
+        "ts": _dt.datetime.now(_dt.timezone.utc).isoformat(
+            timespec="seconds"),
+        "smoke": smoke,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    trajectory.append(entry)
+    payload = {
+        "benchmark": "adaptive_precision",
+        "smoke": smoke,
+        "columns": ["name", "us_per_call", "derived"],
+        "ts": entry["ts"],
+        "rows": entry["rows"],
+        "trajectory": trajectory,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI regression smoke (all "
+                         "acceptance gates still enforced)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+    print(f"wrote {write_bench_json(rows, args.smoke)}")
+
+
+if __name__ == "__main__":
+    main()

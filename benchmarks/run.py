@@ -14,9 +14,9 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, ROOT)
 
-from benchmarks import bank_scaling, channel_scaling, host_lane_scaling, \
-    indram_ops, kernel_wallclock, paper_figs, roofline_report, \
-    serving_load, session_scaling
+from benchmarks import adaptive_precision, bank_scaling, channel_scaling, \
+    host_lane_scaling, indram_ops, kernel_wallclock, paper_figs, \
+    roofline_report, serving_load, session_scaling
 
 
 def _paper_figs():
@@ -35,6 +35,7 @@ REGISTRY = {
     "roofline_report": roofline_report.run,
     "indram_ops": indram_ops.run,
     "serving_load": serving_load.run,
+    "adaptive_precision": adaptive_precision.run,
 }
 
 

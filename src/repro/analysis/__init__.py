@@ -4,9 +4,11 @@
 streams and scheduled :class:`~repro.core.scheduler.Timeline`\\ s
 *without executing them*: per-bank row-state dataflow (PL1xx),
 inter-segment hazard/race detection (PL2xx), protocol/capability
-conformance on placed waves (PL3xx), and serving-layer admission
+conformance on placed waves (PL3xx), serving-layer admission
 conformance (PL4xx -- dispatched requests whose admitted deadline
-precedes their predicted start).  ``mutations`` is the seeded-fault
+precedes their predicted start), and adaptive-representation
+conformance (PL5xx -- encoded LUT layouts versus the session's
+declared per-column plans).  ``mutations`` is the seeded-fault
 harness proving the analyzer is non-vacuous.
 """
 
@@ -23,6 +25,7 @@ from .pudlint import (
     lint_streams,
     lint_subarray,
     lint_timeline,
+    representation_diags,
     serving_admission_diags,
     wave_accesses,
 )
@@ -40,6 +43,7 @@ __all__ = [
     "lint_streams",
     "lint_subarray",
     "lint_timeline",
+    "representation_diags",
     "serving_admission_diags",
     "wave_accesses",
 ]

@@ -17,8 +17,11 @@ Mutations edit the recorded artifacts, never the machine: stream
 mutations are tuple surgery on :class:`~repro.core.scheduler.\
 GroupStream` copies, timeline mutations are
 :func:`dataclasses.replace` surgery on
-:class:`~repro.core.scheduler.ScheduledWave` placements, and the one
-device-level mutation records a genuinely-invalid cross-channel clone.
+:class:`~repro.core.scheduler.ScheduledWave` placements, the
+device-level mutation records a genuinely-invalid cross-channel clone,
+and the representation-level mutation declares a
+:class:`~repro.core.encoding.ColumnPlan` the encoded LUT planes never
+saw (the stale state a skipped ``recode_column`` rebuild leaves).
 """
 
 from __future__ import annotations
@@ -31,7 +34,12 @@ from repro.core import cost
 from repro.core.machine import BankedSubarray, PuDArch, PuDOp
 from repro.core.scheduler import ChannelScheduler, GroupStream, Timeline
 
-from .pudlint import LintReport, lint_stream, lint_timeline
+from .pudlint import (
+    LintReport,
+    lint_stream,
+    lint_timeline,
+    representation_diags,
+)
 
 #: System config every seeded schedule uses: DESKTOP with the PULSAR
 #: capability the good trace's MRACT wave needs.
@@ -366,6 +374,34 @@ def cross_channel_clone_report() -> LintReport:
 
 
 # --------------------------------------------------------------------- #
+# Representation-level seeded violation (PL501)
+# --------------------------------------------------------------------- #
+def _representation_engine():
+    """A small encoded column plus the :class:`ColumnPlan` it was
+    actually encoded under."""
+    from repro.core.clutch import ClutchEngine
+    from repro.core.encoding import ColumnPlan
+
+    sub = BankedSubarray(num_banks=1, num_rows=128, num_cols=64,
+                         arch=PuDArch.UNMODIFIED, seed=11)
+    plan = ColumnPlan(n_bits=8, num_chunks=2)
+    eng = ClutchEngine(sub, np.arange(16, dtype=np.uint64), 8, plan=plan)
+    return eng, plan
+
+
+def stale_recode_report() -> LintReport:
+    """Encode a column under one plan, then declare a DIFFERENT one for
+    it -- the state a ``recode_column`` leaves behind when its
+    evict/reload rebuild is skipped: the banks still hold the old LUT
+    planes while the session plans against the new representation."""
+    from repro.core.encoding import ColumnPlan
+
+    eng, _ = _representation_engine()
+    declared = ColumnPlan(n_bits=4, num_chunks=2)  # the recode never landed
+    return LintReport(representation_diags([eng], [declared], group="g0"))
+
+
+# --------------------------------------------------------------------- #
 # The harness
 # --------------------------------------------------------------------- #
 def seeded_violations():
@@ -386,6 +422,7 @@ def seeded_violations():
                                streams=streams)
         yield name, code, report
     yield "clone-across-channels", "PL302", cross_channel_clone_report()
+    yield "stale-recode-planes", "PL501", stale_recode_report()
 
 
 def baseline_reports():
@@ -400,6 +437,9 @@ def baseline_reports():
     tl = ChannelScheduler(SYS_CFG).schedule([good, plain])
     out["scheduled_timeline"] = lint_timeline(
         tl, sys_cfg=SYS_CFG, streams=[good, plain])
+    eng, plan = _representation_engine()
+    out["representation_match"] = LintReport(
+        representation_diags([eng], [plan], group="g0"))
     return out
 
 

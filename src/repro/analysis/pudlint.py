@@ -79,6 +79,16 @@ Pass 3 -- protocol / capability conformance of a scheduled
 * ``PL307`` op-mismatch: the timeline's waves for a (group, segment)
   disagree with the recorded stream (scheduler / stream skew).
 
+Pass 5 -- representation conformance of adaptive per-column plans:
+
+* ``PL501`` representation-mismatch: an engine's encoded LUT layout
+  (chunk widths, plane count, complement planes) disagrees with the
+  :class:`~repro.core.encoding.ColumnPlan` the session declares for
+  that column -- the signature of a ``recode_column`` whose rebuild
+  was skipped, leaving stale planes in the banks.  Checked by
+  :func:`representation_diags`, which sessions run on every verified
+  job over a plan-bearing resource.
+
 Entry points: :func:`lint_stream` / :func:`lint_streams` (passes 1-2),
 :func:`lint_timeline` (pass 3, plus 1-2 when streams are supplied),
 :func:`lint_subarray` and :func:`lint_device` (machine-level
@@ -122,6 +132,7 @@ CODES: dict[str, tuple[str, str]] = {
     "PL306": ("error", "clone-io"),
     "PL307": ("error", "op-mismatch"),
     "PL401": ("error", "deadline-precedes-start"),
+    "PL501": ("error", "representation-mismatch"),
 }
 
 #: Relocation clone family: reads are bulk moves of whatever the row
@@ -700,6 +711,46 @@ def serving_admission_diags(records) -> list[Diagnostic]:
             f"{who}: absolute deadline {deadline:.0f}ns precedes its "
             f"predicted batch start {start:.0f}ns -- admission should "
             "have shed this request, not scheduled it", group="serving"))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Pass 5: representation conformance
+# --------------------------------------------------------------------- #
+def representation_diags(engines, plans, group: str = "") -> list[Diagnostic]:
+    """``PL501``: each engine's encoded LUT layout must match the
+    :class:`~repro.core.encoding.ColumnPlan` declared for its column.
+
+    ``engines`` are the per-column :class:`~repro.core.clutch
+    .ClutchEngine`\\ s of one bank group, ``plans`` the session's
+    declared per-column plans (zipped positionally).  A mismatch in bit
+    width, chunk widths (and therefore LUT plane count), or complement-
+    plane presence is the signature of a stale representation: a
+    ``recode_column`` whose evict/reload rebuild was skipped, so the
+    banks still hold the OLD planes while the session prices and plans
+    against the new ones."""
+    out: list[Diagnostic] = []
+    for i, (eng, plan) in enumerate(zip(engines, plans)):
+        want = plan.chunk_plan
+        got = eng.layout.plan
+        if got != want:
+            out.append(Diagnostic(
+                "PL501", "error",
+                f"column {i}: encoded LUT layout has chunk widths "
+                f"{got.widths} ({got.rows_required} plane rows), but the "
+                f"declared ColumnPlan(n_bits={plan.n_bits}, num_chunks="
+                f"{plan.num_chunks}) requires widths {want.widths} "
+                f"({want.rows_required} plane rows) -- stale planes from "
+                "a recode that skipped the rebuild?", group))
+            continue
+        lc = getattr(eng, "layout_c", None)
+        if lc is not None and lc.plan != want:
+            out.append(Diagnostic(
+                "PL501", "error",
+                f"column {i}: complement LUT layout has chunk widths "
+                f"{lc.plan.widths}, but the declared ColumnPlan requires "
+                f"{want.widths} -- native and complement planes disagree "
+                "after a partial re-encode", group))
     return out
 
 

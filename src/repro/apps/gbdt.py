@@ -183,7 +183,14 @@ class GbdtPudEngine:
                  num_banks: int = 1, device=None,
                  cols_per_bank: int = 65536, channels=None,
                  label: str = "gbdt",
-                 clone_source: "GbdtPudEngine | None" = None) -> None:
+                 clone_source: "GbdtPudEngine | None" = None,
+                 plan=None) -> None:
+        """``plan`` optionally narrows the threshold representation to a
+        :class:`~repro.core.encoding.ColumnPlan` (storage width inferred
+        from the observed threshold range + chunk count picked by the
+        representation optimizer).  Instance feature values are then
+        clamped to the plan's range -- every threshold fits it, so
+        ``v < threshold`` keeps its exact truth value."""
         if device is not None:
             if device.arch is not arch:
                 raise ValueError(
@@ -215,7 +222,12 @@ class GbdtPudEngine:
             self.sub = BankedSubarray(num_banks=num_banks, num_rows=num_rows,
                                       num_cols=n_cols, arch=arch)
         self.label = label
-        chunks = num_chunks or PAPER_GBDT_CHUNKS[forest.n_bits]
+        if plan is not None and \
+                int(forest.thresholds.max()) > plan.max_value:
+            raise ValueError(
+                f"threshold max {int(forest.thresholds.max())} overflows "
+                f"the {plan.n_bits}-bit column plan")
+        self.plan = plan
         if clone_source is not None and (
                 clone_source.col_shards != self.col_shards
                 or clone_source.sub.num_banks != num_banks
@@ -224,11 +236,19 @@ class GbdtPudEngine:
         # Only the native `<` is used => no complement planes needed.
         thresholds = self._shard_cols(
             forest.thresholds.reshape(-1).astype(np.uint64))
-        self.engine = ClutchEngine(
-            self.sub, thresholds, forest.n_bits,
-            num_chunks=chunks, support_negated=False,
-            clone_from=None if clone_source is None
-            else clone_source.engine)
+        if plan is not None:
+            self.engine = ClutchEngine(
+                self.sub, thresholds, forest.n_bits, plan=plan,
+                support_negated=False, clamp=True,
+                clone_from=None if clone_source is None
+                else clone_source.engine)
+        else:
+            chunks = num_chunks or PAPER_GBDT_CHUNKS[forest.n_bits]
+            self.engine = ClutchEngine(
+                self.sub, thresholds, forest.n_bits,
+                num_chunks=chunks, support_negated=False,
+                clone_from=None if clone_source is None
+                else clone_source.engine)
         self.num_chunks = self.engine.plan.num_chunks
         # One-hot feature mask rows (paper Fig. 12 layout).  First load
         # goes through the bulk host-write path (one vectorized store,

@@ -68,6 +68,22 @@ class Table:
     n_bits: int
     features: list[np.ndarray]
 
+    def __post_init__(self) -> None:
+        # Reject values the encoder would otherwise silently wrap: the
+        # chunk split masks to n_bits, so an overflowing ingest used to
+        # produce a wrong-but-plausible table.  Fail loudly instead.
+        limit = 1 << self.n_bits
+        for i, f in enumerate(self.features):
+            f = np.asarray(f)
+            if not f.size:
+                continue
+            mn, mx = int(f.min()), int(f.max())
+            if mn < 0 or mx >= limit:
+                raise ValueError(
+                    f"column {i}: values span [{mn}, {mx}], which "
+                    f"overflows the declared {self.n_bits}-bit width "
+                    f"(representable range [0, {limit - 1}])")
+
     @property
     def num_records(self) -> int:
         return int(self.features[0].shape[0])
@@ -118,7 +134,14 @@ class PudQueryEngine:
     def __init__(self, table: Table, arch: PuDArch, method: str = "clutch",
                  num_chunks: int | None = None, num_rows: int = 1024,
                  cols_per_bank: int = 65536, device=None, channels=None,
-                 label: str | None = None) -> None:
+                 label: str | None = None, plans=None) -> None:
+        """``plans`` (clutch only): one
+        :class:`~repro.core.encoding.ColumnPlan` per feature for
+        heterogeneous per-column representation -- narrow columns store
+        fewer LUT planes and engines clamp full-width query scalars to
+        each column's range.  ``None`` keeps today's uniform plan (the
+        degenerate case: every column at ``table.n_bits`` with one shared
+        chunk count)."""
         if device is not None:
             if device.arch is not arch:
                 raise ValueError(
@@ -146,7 +169,34 @@ class PudQueryEngine:
                                   num_rows=num_rows, num_cols=n_cols,
                                   arch=arch)
 
-        if method == "clutch":
+        self.plans = None
+        if method == "clutch" and plans is not None:
+            plans = tuple(plans)
+            if len(plans) != len(table.features):
+                raise ValueError(
+                    f"need one ColumnPlan per feature: got {len(plans)} "
+                    f"plans for {len(table.features)} features")
+            for i, (p, shard) in enumerate(zip(plans, self._shards)):
+                if p.n_bits > table.n_bits:
+                    raise ValueError(
+                        f"column {i}: plan width {p.n_bits} exceeds the "
+                        f"table's declared {table.n_bits} bits")
+                mx = int(shard.max()) if shard.size else 0
+                if mx > p.max_value:
+                    raise ValueError(
+                        f"column {i}: max value {mx} overflows the "
+                        f"{p.n_bits}-bit column plan")
+            self._check_plan_budget(plans, num_rows)
+            self.sub = make_sub()
+            shared = (self.sub.alloc(1), self.sub.alloc(1))
+            self.engines = [
+                ClutchEngine(self.sub, shard, table.n_bits, plan=p,
+                             scratch=shared, clamp=True)
+                for shard, p in zip(self._shards, plans)
+            ]
+            self.plans = plans
+            self.num_chunks = max(p.num_chunks for p in plans)
+        elif method == "clutch":
             chunks = num_chunks or PAPER_PREDICATE_CHUNKS[
                 (table.n_bits, arch)]
             # The paper's chunk counts assume shared scratch rows; if a
@@ -197,6 +247,22 @@ class PudQueryEngine:
                 raise MemoryError(
                     f"no chunking of {self.table.n_bits}-bit features fits "
                     f"{num_rows} rows for {n_feat} features")
+
+    def _check_plan_budget(self, plans, num_rows: int) -> None:
+        """Heterogeneous analog of :meth:`_fit_chunks`: the summed
+        per-column LUT footprints (+ complements on Unmodified, shared
+        scratch, save and park rows) must fit the row budget.  The
+        representation optimizer accounts with the same formula, so an
+        optimizer-produced plan set never trips this."""
+        from repro.core.machine import BankedSubarray as _B
+
+        budget = num_rows - _B.NUM_RESERVED
+        negated = self.arch is PuDArch.UNMODIFIED
+        need = 2 + 4 + 2 + sum(p.lut_rows(negated=negated) for p in plans)
+        if need > budget:
+            raise MemoryError(
+                f"per-column plans need {need} rows > budget {budget} "
+                f"({num_rows}-row subarray)")
 
     def _shard(self, feature: np.ndarray, n_cols: int) -> np.ndarray:
         """[records] -> [banks, n_cols] record-wise shards, zero-padded."""

@@ -11,7 +11,10 @@ from .machine import (  # noqa: F401
 )
 from .encoding import (  # noqa: F401
     ChunkPlan,
+    ColumnPlan,
     LutLayout,
+    column_footprint_rows,
+    infer_n_bits,
     load_binary_vector,
     load_vector,
     make_plan,

@@ -44,8 +44,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .encoding import ChunkPlan, LutLayout, clone_vector, load_vector, \
-    make_plan
+from .encoding import ChunkPlan, ColumnPlan, LutLayout, clone_vector, \
+    load_vector, make_plan
 from .machine import BankedSubarray, PuDArch, RowIdx, unpack_bits
 
 OPS = ("<", "<=", ">", ">=", "==")
@@ -160,10 +160,11 @@ class ClutchEngine:
         values: np.ndarray,
         n_bits: int,
         num_chunks: int | None = None,
-        plan: ChunkPlan | None = None,
+        plan: ChunkPlan | ColumnPlan | None = None,
         support_negated: bool = True,
         scratch: tuple[int, int] | None = None,
         clone_from: "ClutchEngine | None" = None,
+        clamp: bool = False,
     ) -> None:
         """``support_negated=False`` skips the complement planes on
         Unmodified PuD (halving the row footprint) when only the native
@@ -175,10 +176,24 @@ class ClutchEngine:
         ``values`` must be the same vector, and the source engine's
         group must span the same number of banks (the caller keeps both
         on one channel).  Zero host WRITE traffic after the first
-        load."""
+        load.
+
+        ``plan`` may be a :class:`~repro.core.encoding.ColumnPlan`, in
+        which case the column's storage width overrides ``n_bits`` -- a
+        narrow column stores fewer LUT planes than the table's declared
+        width.  ``clamp=True`` saturates out-of-range comparison scalars
+        to the column's range instead of raising: ``B <op> x`` for
+        ``x > MAX`` has a well-defined truth value (all-false for
+        ``>``/``>=``/``==``, all-true for ``<``/``<=``) since every
+        stored ``B <= MAX``, which is exactly what heterogeneous
+        per-column plans need when queries quote full-width scalars."""
+        if isinstance(plan, ColumnPlan):
+            n_bits = plan.n_bits
+            plan = plan.chunk_plan
         self.sub = sub
         self.n_bits = n_bits
         self.n = int(np.asarray(values).shape[-1])
+        self.clamp = clamp
         if plan is None:
             plan = make_plan(n_bits, num_chunks or 1)
         self.plan = plan
@@ -238,10 +253,17 @@ class ClutchEngine:
         vec = isinstance(x, np.ndarray)
         if vec:
             x = np.asarray(x, np.int64)
-            if (x < 0).any() or (x > self.max).any():
+            if (x < 0).any() or (not self.clamp and (x > self.max).any()):
                 raise ValueError("per-bank scalar out of range")
-        elif not 0 <= x <= self.max:
+        elif x < 0 or (not self.clamp and x > self.max):
             raise ValueError(f"scalar {x} out of range")
+        if self.clamp and op != "==":
+            # Saturate to the column range: MAX+1 keeps the exclusive
+            # bounds exact (B >= MAX+1 is all-false via run_lt(MAX);
+            # B < MAX+1 is all-true).  ``==`` clamps inside its recursive
+            # ``<=`` / ``>=`` calls.
+            hi = self.max + (1 if op in ("<", ">=") else 0)
+            x = np.minimum(x, hi) if vec else min(int(x), hi)
         before = self.sub.trace.pud_ops
         sub = self.sub
         if op == ">":        # B > x  <=>  x < B
@@ -256,6 +278,10 @@ class ClutchEngine:
         elif op == "<":      # B < x  <=>  NOT(B >= x)
             if not vec and x == 0:
                 row = sub.ROW_ZERO
+            elif not vec and x > self.max:
+                # clamped scalar saturated to MAX+1: every B <= MAX < x
+                # (the Unmodified rewrite MAX-x would go negative here)
+                row = sub.ROW_ONE
             elif sub.arch is PuDArch.MODIFIED:
                 # per-bank x-1 == -1 encodes always-true; NOT gives zeros
                 row = self._run_lt(x - 1, complement=False)

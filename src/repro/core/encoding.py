@@ -16,10 +16,33 @@ chunk (see :mod:`repro.core.clutch`).
 Row cost is ``sum_j (2^k_j - 1)``, minimized by splitting the n bits as
 evenly as possible.  The paper's example: n=32, C=5 -> widths (6,6,6,7,7)
 -> 63+63+63+127+127 = 443 rows.
+
+Representation as an optimizer input
+------------------------------------
+The chunk count is the paper's throughput/memory knob: more chunks shrink
+the LUT row footprint but add one MAJ3 merge per chunk.  This module keeps
+that tradeoff *closed-form* so a planner can search it without touching a
+simulator:
+
+* :class:`ChunkPlan` -- one column's chunk widths, with ``rows_required``
+  (the LUT footprint) and scalar/vector splitting.
+* :class:`ColumnPlan` -- a per-column *representation choice*: a storage
+  width ``n_bits`` (possibly narrower than the table's declared width)
+  plus a chunk count, with the closed-form footprint
+  :func:`column_footprint_rows` and the arch-aware ``lut_rows``.
+* :func:`infer_n_bits` -- the minimal storage width for a column's
+  observed value range, under an explicit headroom policy.
+* :func:`min_chunks_for_budget` -- smallest chunk count fitting a row
+  budget (memoized; plans are immutable).
+
+:func:`repro.pud.planner.choose_representation` prices candidate
+``(n_bits, num_chunks)`` pairs through the command scheduler and picks the
+per-column argmin; everything here is the vocabulary that search speaks.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -80,13 +103,90 @@ def make_plan(n_bits: int, num_chunks: int) -> ChunkPlan:
     return ChunkPlan(tuple(widths))
 
 
+@functools.lru_cache(maxsize=4096)
 def min_chunks_for_budget(n_bits: int, row_budget: int) -> ChunkPlan:
-    """Smallest chunk count whose LUTs fit within ``row_budget`` rows."""
+    """Smallest chunk count whose LUTs fit within ``row_budget`` rows.
+
+    Memoized: plans are immutable and the same ``(n_bits, budget)`` pair
+    is re-resolved on every engine construction (the fused kernels cache
+    :func:`repro.kernels.ops.resolve_indices` the same way).
+    """
     for c in range(1, n_bits + 1):
         plan = make_plan(n_bits, c)
         if plan.rows_required <= row_budget:
             return plan
     raise ValueError(f"no plan for {n_bits} bits fits {row_budget} rows")
+
+
+def column_footprint_rows(n_bits: int, num_chunks: int) -> int:
+    """Closed-form LUT row footprint of the even ``n_bits``/``num_chunks``
+    split: ``(C - r)(2^b - 1) + r(2^(b+1) - 1)`` with ``b, r = divmod``.
+
+    Equals ``make_plan(n_bits, num_chunks).rows_required`` without
+    materializing the plan -- cheap enough to sweep every candidate.
+    """
+    if not 1 <= num_chunks <= n_bits:
+        raise ValueError("need 1 <= num_chunks <= n_bits")
+    base, rem = divmod(n_bits, num_chunks)
+    return ((num_chunks - rem) * ((1 << base) - 1)
+            + rem * ((1 << (base + 1)) - 1))
+
+
+def infer_n_bits(values: np.ndarray, *, headroom: int = 0,
+                 min_bits: int = 1) -> int:
+    """Minimal storage width covering a column's observed value range.
+
+    Headroom policy (explicit, because it decides when a future ingest
+    forces a recode): ``headroom`` extra bits are granted ABOVE the
+    observed maximum's bit length, so any future value up to roughly
+    ``2^headroom`` times the observed max still fits without re-encoding.
+    The default ``headroom=0`` is an exact fit -- values overflowing the
+    inferred width are rejected at ingest by :class:`~repro.apps.predicate.
+    Table` validation rather than silently wrapped, and
+    ``recode_column`` widens on demand.
+    """
+    if headroom < 0:
+        raise ValueError("headroom must be >= 0")
+    v = np.asarray(values, dtype=np.uint64)
+    mx = int(v.max()) if v.size else 0
+    return max(mx.bit_length() + headroom, min_bits)
+
+
+@dataclass(frozen=True)
+class ColumnPlan:
+    """One column's representation choice: storage width + chunk count.
+
+    The uniform table-wide plan is the degenerate case (every column gets
+    the same ``ColumnPlan``); the representation optimizer emits one per
+    column.  Hashable/immutable on purpose: the tuple of per-column plans
+    is the fused backend's compile-cache key and the probe memo key.
+    """
+
+    n_bits: int
+    num_chunks: int
+
+    def __post_init__(self) -> None:
+        if not 1 <= self.num_chunks <= self.n_bits:
+            raise ValueError(
+                f"need 1 <= num_chunks <= n_bits, got "
+                f"({self.n_bits}, {self.num_chunks})")
+
+    @property
+    def max_value(self) -> int:
+        return (1 << self.n_bits) - 1
+
+    @property
+    def chunk_plan(self) -> ChunkPlan:
+        return make_plan(self.n_bits, self.num_chunks)
+
+    @property
+    def rows_required(self) -> int:
+        return column_footprint_rows(self.n_bits, self.num_chunks)
+
+    def lut_rows(self, *, negated: bool = False) -> int:
+        """Subarray rows the column occupies; ``negated=True`` doubles it
+        for the Unmodified-PuD complement planes (MAX - B)."""
+        return self.rows_required * (2 if negated else 1)
 
 
 def temporal_encode_planes(chunk_values: np.ndarray, k: int) -> np.ndarray:

@@ -20,6 +20,13 @@ with its internal AND/OR) folded through the connective chain in
 registers, one launch per compound -- the fused mirror of the machine
 path's in-bank Ambit AND/OR merge, bit-exact against it.
 
+The merge loop never reads ``le[0]`` and ``maj3(acc, zero_row,
+one_row) == acc``, so callers with heterogeneous per-column chunk
+counts (:class:`repro.kernels.fused_session.FusedTableExec` with
+``plans``) can pad a narrower column's index rows up to the static
+``num_chunks`` with ``(lt=zero_row, le=one_row)`` identity lanes --
+the kernels themselves are chunk-count-uniform and unchanged.
+
 ``gbdt_leafbits_banked`` is the GBDT counterpart: one grid over
 *(instance, word block)* folds every feature's per-instance threshold
 comparison (per-instance gather indices, like the banked machine's

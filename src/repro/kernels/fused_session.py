@@ -43,6 +43,24 @@ operands, so ONE compiled executable per ``(plan, table shape, query
 kind)`` serves every (feature, scalar) combination.  ``trace_counts``
 exposes the per-kind trace counter the zero-retrace regression test
 asserts on.
+
+Heterogeneous per-column plans: ``plans`` (one
+:class:`~repro.core.encoding.ColumnPlan` per feature) stacks RAGGED
+per-feature LUT blocks -- each feature's planes are exactly as tall as
+its own ``(n_bits, num_chunks)`` requires, and the recorded per-block
+base offsets replace the uniform ``f * r_pad`` arithmetic.  The
+kernels stay UNCHANGED and run at the static chunk count ``C_max =
+max(num_chunks)``: a narrower feature's index rows are padded from its
+own ``C_f`` up to ``C_max`` with identity lanes ``(lt=zero_row,
+le=one_row)`` -- ``maj3(acc, 0, 1) == acc``, and the kernel never
+reads ``le[0]`` -- inside that feature's own block, so every lane
+stays in-block and machine/fused bit-exactness is preserved.  Scalars
+beyond a narrow column's range clamp exactly like the machine path's
+``ClutchEngine(clamp=True)``: the gt-side scalar saturates to the
+column max, an lt-side bound past the max resolves every lane to the
+complement block's constant-one row (always true on valid columns).
+Uniform plans are the degenerate case: the stacked layout and index
+arithmetic reduce to the original byte-identical form.
 """
 
 from __future__ import annotations
@@ -55,7 +73,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.encoding import ChunkPlan, make_plan
+from repro.core.encoding import ChunkPlan, ColumnPlan, make_plan
 from repro.core.machine import pack_bits, unpack_bits
 from repro.dist.sharding import shard_mesh
 
@@ -65,7 +83,12 @@ from .fused_query import (
     fused_predicate_banked,
     gbdt_leafbits_banked,
 )
-from .ops import encode_lut, resolve_indices, resolve_indices_banked
+from .ops import (
+    encode_lut,
+    lut_offsets,
+    resolve_indices,
+    resolve_indices_banked,
+)
 
 
 class FusedTableExec:
@@ -82,32 +105,61 @@ class FusedTableExec:
     """
 
     def __init__(self, table, num_shards: int, num_chunks: int,
-                 mesh=None) -> None:
+                 mesh=None, plans=None) -> None:
         self.table = table
         self.plan: ChunkPlan = make_plan(table.n_bits, num_chunks)
-        self.num_chunks = self.plan.num_chunks
         self.num_features = len(table.features)
         self.num_shards = num_shards
         self.mx = (1 << table.n_bits) - 1
+        #: per-column plans; uniform `(table.n_bits, num_chunks)` for
+        #: every feature when none are supplied (the degenerate case --
+        #: layout and index math reduce to the original uniform form).
+        self.plans = (tuple(plans) if plans is not None else tuple(
+            ColumnPlan(table.n_bits, self.plan.num_chunks)
+            for _ in table.features))
+        if len(self.plans) != self.num_features:
+            raise ValueError(
+                f"need one ColumnPlan per feature: got {len(self.plans)} "
+                f"plans for {self.num_features} features")
+        if plans is not None:
+            for i, (p, f) in enumerate(zip(self.plans, table.features)):
+                arr = np.asarray(f, np.uint64)
+                if arr.size and int(arr.max()) > p.max_value:
+                    raise ValueError(
+                        f"column {i}: values reach {int(arr.max())}, "
+                        f"which overflows the plan's {p.n_bits}-bit "
+                        "width")
+        # kernels run at the static max chunk count; narrower features'
+        # index rows pad up to it with in-block identity lanes
+        self.num_chunks = max(p.num_chunks for p in self.plans)
+        self._cplans = [p.chunk_plan for p in self.plans]
         n = table.num_records
         self.per = math.ceil(n / num_shards)
         self.mesh = mesh if mesh is not None else shard_mesh(num_shards)
         # Per shard: every feature's normal LUT block, then every
-        # feature's complement block, all R_pad rows tall (encode_lut
-        # pads uniformly given a uniform shard length).
+        # feature's complement block.  Blocks are ragged -- each is as
+        # tall as its own plan's planes (+2 const rows, tile-padded) --
+        # and `base[(comp, f)]` records where each begins.
         shards = []
+        base: list[int] = []
         for s in range(num_shards):
             lo = s * self.per
             cols = []
+            off = 0
             for comp in (False, True):
-                for f in table.features:
+                for f, cp in zip(table.features, self._cplans):
                     v = np.zeros(self.per, np.uint32)
                     chunk = np.asarray(f[lo:lo + self.per], np.uint64)
                     v[:chunk.shape[0]] = chunk.astype(np.uint32)
-                    cols.append(encode_lut(jnp.asarray(v), self.plan,
-                                           complement=comp))
+                    blk = encode_lut(jnp.asarray(v), cp, complement=comp)
+                    if s == 0:
+                        base.append(off)
+                        off += int(blk.shape[0])
+                    cols.append(blk)
             shards.append(jnp.concatenate(cols, axis=0))
-        self.lut = jnp.stack(shards)               # [S, 2*F*R_pad, W]
+        self.lut = jnp.stack(shards)            # [S, sum(blocks), W]
+        self._base_n = base[:self.num_features]
+        self._base_c = base[self.num_features:]
         self.r_pad = int(shards[0].shape[0]) // (2 * self.num_features)
         #: traces per query kind -- the zero-retrace test's probe.
         self.trace_counts: dict[tuple, int] = {}
@@ -172,17 +224,37 @@ class FusedTableExec:
     def _range_idx(self, fi: int, x0: int, x1: int) -> np.ndarray:
         """Algorithm 1 row indices for ``x0 < f_fi < x1`` inside the
         stacked LUT: gt-side on feature ``fi``'s normal block, lt-side
-        on its complement block with scalar ``MAX - x1`` (the NOT-free
-        rewrite: ``B < x1  <=>  MAX-x1 < MAX-B``)."""
+        on its complement block with scalar ``MAX_f - x1`` (the NOT-free
+        rewrite: ``B < x1  <=>  MAX_f-x1 < MAX_f-B``), where ``MAX_f``
+        is feature ``fi``'s OWN plan max.  Scalars past a narrow
+        column's range clamp like the machine path: the gt scalar
+        saturates to ``MAX_f`` (``B > MAX_f`` is vacuously false --
+        same bitmap), and ``x1 > MAX_f`` resolves the whole lt-side to
+        the complement block's constant-one row (vacuously true).
+        Narrower features pad their ``C_f`` index rows up to the
+        kernel's static ``C_max`` with in-block identity lanes
+        ``(zero_row, one_row)``."""
         key = (fi, x0, x1)
         idx = self._idx_cache.get(key)
         if idx is None:
-            gt_lt, gt_le = resolve_indices(self.plan, x0)
-            lt_lt, lt_le = resolve_indices(self.plan, self.mx - x1)
-            bn = np.int32(fi * self.r_pad)
-            bc = np.int32((self.num_features + fi) * self.r_pad)
-            idx = np.concatenate([gt_lt + bn, gt_le + bn,
-                                  lt_lt + bc, lt_le + bc]).astype(np.int32)
+            plan = self._cplans[fi]
+            mx_f = self.plans[fi].max_value
+            pad = self.num_chunks - plan.num_chunks
+            _, zero, one = lut_offsets(plan)
+            bn, bc = self._base_n[fi], self._base_c[fi]
+
+            def lanes(lt, le, b):
+                lt = np.concatenate([lt, np.full(pad, zero, np.int32)])
+                le = np.concatenate([le, np.full(pad, one, np.int32)])
+                return [lt + np.int32(b), le + np.int32(b)]
+
+            gt = lanes(*resolve_indices(plan, min(x0, mx_f)), bn)
+            if x1 > mx_f:
+                allc = np.full(self.num_chunks, one, np.int32)
+                lt = [allc + np.int32(bc), allc + np.int32(bc)]
+            else:
+                lt = lanes(*resolve_indices(plan, mx_f - x1), bc)
+            idx = np.concatenate(gt + lt).astype(np.int32)
             self._idx_cache[key] = idx
         return idx
 
@@ -278,12 +350,28 @@ class FusedGbdtExec:
     :func:`repro.apps.gbdt.assemble_leaves` so predictions are
     bit-exact vs ``backend="machine"``."""
 
-    def __init__(self, forest, num_chunks: int, mesh=None) -> None:
+    def __init__(self, forest, num_chunks: int, mesh=None,
+                 plan=None) -> None:
         self.forest = forest
-        self.plan = make_plan(forest.n_bits, num_chunks)
+        thr = np.asarray(forest.thresholds, np.uint64).reshape(-1)
+        if plan is not None:
+            # adaptive threshold representation: LUT sized to the plan's
+            # own width; instance values clamp to the plan max (exactly
+            # the machine path's ClutchEngine(clamp=True) semantics --
+            # thr > x is vacuously false past the threshold range)
+            if thr.size and int(thr.max()) > plan.max_value:
+                raise ValueError(
+                    f"thresholds reach {int(thr.max())}, which overflows "
+                    f"the plan's {plan.n_bits}-bit width")
+            self.plan = plan.chunk_plan
+            self.mx = plan.max_value
+            self._clamp = True
+        else:
+            self.plan = make_plan(forest.n_bits, num_chunks)
+            self.mx = (1 << forest.n_bits) - 1
+            self._clamp = False
         self.num_chunks = self.plan.num_chunks
         self.n_nodes = forest.num_trees * forest.depth
-        thr = np.asarray(forest.thresholds, np.uint64).reshape(-1)
         self.lut = encode_lut(jnp.asarray(thr.astype(np.uint32)), self.plan)
         f = forest.num_features
         flat_feat = np.asarray(forest.feature_idx).reshape(-1)
@@ -320,6 +408,8 @@ class FusedGbdtExec:
         (exact; the whole device half of inference)."""
         forest, plan = self.forest, self.plan
         X = np.asarray(X)
+        if self._clamp:
+            X = np.minimum(X.astype(np.int64), self.mx)
         b = X.shape[0]
         d = self.mesh.shape["shards"]
         b_pad = round_up(max(b, 1), d)

@@ -223,7 +223,8 @@ class QueryBatchExecutor(_FederatedExecutor):
     def __init__(self, table, arch, devices, shards_per_device: int = 2,
                  method: str = "clutch", num_chunks: int | None = None,
                  cols_per_bank: int = 65536, channels="auto",
-                 hosts: str = "shared", merge_tree: bool = True) -> None:
+                 hosts: str = "shared", merge_tree: bool = True,
+                 plans=None) -> None:
         from repro.apps.predicate import PudQueryEngine, Table
 
         super().__init__(devices, hosts=hosts, merge_tree=merge_tree)
@@ -232,6 +233,10 @@ class QueryBatchExecutor(_FederatedExecutor):
         QueryBatchExecutor._uid += 1
         self._tag = f"query.p{QueryBatchExecutor._uid}"
         self.table = table
+        #: per-column ColumnPlans (heterogeneous representation) or None
+        #: for the uniform default; every shard engine gets the same
+        #: tuple, and the fused backend keys its compile cache on it.
+        self.plans = tuple(plans) if plans is not None else None
         num_shards = len(self.devices) * shards_per_device
         n = table.num_records
         per = math.ceil(n / num_shards)
@@ -248,7 +253,7 @@ class QueryBatchExecutor(_FederatedExecutor):
             eng = PudQueryEngine(
                 Table(table.n_bits, [f[lo:hi] for f in table.features]),
                 arch, method, num_chunks=num_chunks, device=dev,
-                channels=ch,
+                channels=ch, plans=self.plans,
                 label=f"{self._tag}.s{s}", cols_per_bank=cols_per_bank)
             self.engines.append(eng)
             self.placements.append((dev, eng.sub))
@@ -277,8 +282,11 @@ class QueryBatchExecutor(_FederatedExecutor):
             raise TypeError(
                 "the fused backend supports the clutch method only "
                 "(bit-serial tables have no chunk plan)")
-        return {"table": self.table, "num_shards": len(self.bounds),
-                "num_chunks": chunks}
+        cfg = {"table": self.table, "num_shards": len(self.bounds),
+               "num_chunks": chunks}
+        if self.plans is not None:
+            cfg["plans"] = self.plans
+        return cfg
 
     # ------------------------------------------------------------------ #
     def run(self, queries: list[tuple]) -> list:
@@ -532,7 +540,7 @@ class GbdtBatchExecutor(_FederatedExecutor):
                  banks_per_group: int = 4,
                  num_chunks: int | None = None, channels="auto",
                  hosts: str = "shared", merge_tree: bool = True,
-                 replicate: str = "rowclone") -> None:
+                 replicate: str = "rowclone", plan=None) -> None:
         from repro.apps.gbdt import GbdtPudEngine
         from repro.apps.pipeline import HostTimer
 
@@ -545,6 +553,9 @@ class GbdtBatchExecutor(_FederatedExecutor):
         GbdtBatchExecutor._uid += 1
         self._tag = f"gbdt.p{GbdtBatchExecutor._uid}"
         self.forest = forest
+        #: shared threshold ColumnPlan (adaptive representation) or None
+        #: for the uniform default; replicated onto every group engine.
+        self.plan = plan
         self.engines = []
         # first replica built on each (device, channel): the in-DRAM
         # clone source for later replicas on the same channel.  Clones
@@ -564,7 +575,7 @@ class GbdtBatchExecutor(_FederatedExecutor):
             src = first_on.get((id(dev), int(ch))) if cloneable else None
             eng = GbdtPudEngine(forest, arch, num_chunks=num_chunks,
                                 num_banks=banks_per_group, device=dev,
-                                channels=ch,
+                                channels=ch, plan=plan,
                                 label=f"{self._tag}.g{gi}",
                                 clone_source=src)
             if cloneable:
@@ -579,8 +590,11 @@ class GbdtBatchExecutor(_FederatedExecutor):
     def fused_config(self) -> dict:
         """Build recipe for the JAX-native fast path
         (:class:`repro.kernels.fused_session.FusedGbdtExec`)."""
-        return {"forest": self.forest,
-                "num_chunks": self.engines[0].num_chunks}
+        cfg = {"forest": self.forest,
+               "num_chunks": self.engines[0].num_chunks}
+        if self.plan is not None:
+            cfg["plan"] = self.plan
+        return cfg
 
     def infer(self, X: np.ndarray) -> np.ndarray:
         """Pipelined batch inference; functionally identical to the

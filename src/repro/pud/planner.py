@@ -31,10 +31,28 @@ leaving each caller to hand-place groups once and forever.
   (LUT planes and vectors are regenerated bit-exactly -- the host copy
   is authoritative, matching the paper's "conventional layout copy for
   value retrieval").
+
+Representation optimizer
+------------------------
+:func:`choose_representation` makes per-column data representation a
+planner decision (ROADMAP item 2, Proteus-style).  For each column it
+infers the minimal storage width from the observed value range, then
+prices every candidate ``(n_bits, num_chunks)`` pair by *executing a
+probe*: a tiny single-bank engine runs one representative range
+predicate, its recorded command stream is scheduled by
+:class:`~repro.core.scheduler.ChannelScheduler`, and the resulting
+makespan is the candidate's score (the same simulator-as-cost-oracle
+idiom the serving batcher uses).  Probes are memoized on
+``(n_bits, chunks, arch, sys_cfg)``.  The fixed table-wide default is
+always in the candidate set, so the argmin is **never slower and never
+larger than the default by construction**; ties break toward the
+smaller row footprint.  :func:`choose_forest_plan` is the single-column
+variant for GBDT threshold tables.
 """
 
 from __future__ import annotations
 
+import functools
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
@@ -280,3 +298,206 @@ class Planner:
                 head.meta["error"] = repr(e)
                 continue
             self.queue.popleft()
+
+
+# ------------- representation optimizer (ROADMAP item 2) --------------- #
+#
+# The planner's cost oracle is the machine simulator itself: a candidate
+# representation is priced by recording a tiny probe engine's command
+# stream and scheduling it, never by a hand-derived formula that could
+# drift from the scheduler.  Probes run one representative predicate on
+# a single-bank group, so they are cheap, memoized, and lint-clean
+# (their traces pass through the same pudlint sweep as everything else).
+
+_PROBE_COLS = 64          # any multiple of 32; probes price commands,
+                          # not data, so the narrowest group suffices
+
+
+@functools.lru_cache(maxsize=4096)
+def _probe_makespan(n_bits: int, num_chunks: int, arch, sys_cfg,
+                    kind: str = "range") -> float:
+    """Scheduled makespan of one representative predicate under the
+    candidate ``(n_bits, num_chunks)`` representation.
+
+    ``kind="range"`` prices the query-table shape (one ``x0 < f < x1``
+    range: a native and a negated comparison, the in-bank AND, the park
+    copy, and the readout -- complement planes included on Unmodified
+    PuD).  ``kind="gt"`` prices the GBDT shape (a single native ``>``,
+    no complement planes).  Memoized: the candidate grid re-prices the
+    same pair for every column.
+    """
+    import numpy as np
+
+    from repro.core.clutch import ClutchEngine
+    from repro.core.encoding import make_plan
+    from repro.core.machine import BankedSubarray, PuDArch
+    from repro.core.scheduler import ChannelScheduler, GroupStream
+
+    plan = make_plan(n_bits, num_chunks)
+    negated = kind == "range" and arch is PuDArch.UNMODIFIED
+    rows = (plan.rows_required * (2 if negated else 1)
+            + BankedSubarray.NUM_RESERVED + 2 + 3 + 4)
+    sub = BankedSubarray(num_banks=1, num_rows=rows, num_cols=_PROBE_COLS,
+                         arch=arch)
+    vals = np.arange(min(16, 1 << n_bits), dtype=np.uint64)
+    eng = ClutchEngine(sub, vals, n_bits, plan=plan,
+                       support_negated=kind == "range")
+    save = sub.alloc(1)
+    park = sub.alloc(1)
+    mx = (1 << n_bits) - 1
+    # mid-range scalars so no boundary shortcut skews the op count
+    if kind == "range":
+        lo = eng.predicate(">", mx // 3, save_to=save).row
+        hi = eng.predicate("<", max(1, (2 * mx) // 3)).row
+        row = sub.maj3_into_acc(lo, hi, sub.ROW_ZERO)
+    else:
+        row = eng.predicate(">", mx // 3).row
+    sub.rowcopy(row, park)
+    sub.host_read_row(park)
+    stream = GroupStream.from_trace(
+        f"probe:{n_bits}b/{num_chunks}c/{kind}", sub.trace, {0: {0: 1}},
+        sub.num_cols, machine=sub)
+    tl = ChannelScheduler(sys_cfg).schedule([stream])
+    return float(tl.makespan_ns)
+
+
+def _shrink_to_budget(plans: list, candidates: dict, overhead: int,
+                      mult: int, budget: int) -> list:
+    """Bump chunk counts (largest-footprint column first) until the plan
+    set fits ``budget`` rows.  Only reachable when the caller's budget is
+    tighter than the subarray that sized the defaults."""
+    def total() -> int:
+        return overhead + mult * sum(p.rows_required for p in plans)
+
+    while total() > budget:
+        order = sorted(range(len(plans)),
+                       key=lambda i: -plans[i].rows_required)
+        for i in order:
+            cur = plans[i].rows_required
+            smaller = [c for c in candidates[i]
+                       if c[1] < cur]              # (makespan, rows, plan)
+            if smaller:
+                plans[i] = min(smaller)[2]
+                break
+        else:
+            raise MemoryError(
+                f"no per-column representation fits {budget} rows")
+    return plans
+
+
+def choose_representation(table, arch, *, num_rows: int = 1024,
+                          sys_cfg=None, headroom: int = 0,
+                          num_chunks: int | None = None,
+                          row_budget: int | None = None) -> list:
+    """Pick one :class:`~repro.core.encoding.ColumnPlan` per column of
+    ``table``, minimizing the probe-scheduled makespan subject to the
+    row budget.
+
+    Per column the candidate set is every chunking of the column's
+    *inferred* width (``infer_n_bits`` + ``headroom``, capped at the
+    declared width) whose footprint and probed makespan do not exceed
+    the fixed table-wide default's -- plus the default itself, so the
+    argmin is never slower and never larger than the default by
+    construction.  Ties break toward the smaller footprint, then the
+    larger chunk count (cheapest to shrink later).
+    """
+    from repro.core import cost
+    from repro.core.encoding import (ColumnPlan, column_footprint_rows,
+                                     infer_n_bits)
+    from repro.core.machine import BankedSubarray, PuDArch
+
+    sys_cfg = sys_cfg or cost.DESKTOP
+    n_decl = table.n_bits
+    n_feat = len(table.features)
+    mult = 2 if arch is PuDArch.UNMODIFIED else 1
+    overhead = 2 + 4 + 2                    # scratch + save + park rows
+    budget = num_rows - BankedSubarray.NUM_RESERVED
+    c_def = _default_uniform_chunks(n_decl, arch, n_feat, num_rows,
+                                    start=num_chunks)
+    def_rows = column_footprint_rows(n_decl, c_def)
+    def_make = _probe_makespan(n_decl, c_def, arch, sys_cfg)
+
+    plans: list = []
+    candidates: dict[int, list] = {}
+    for i, f in enumerate(table.features):
+        n_f = min(max(infer_n_bits(f, headroom=headroom), 1), n_decl)
+        cands = [(def_make, def_rows, ColumnPlan(n_decl, c_def))]
+        for c in range(1, n_f + 1):
+            rows = column_footprint_rows(n_f, c)
+            if rows > def_rows:
+                continue
+            make = _probe_makespan(n_f, c, arch, sys_cfg)
+            if make > def_make:
+                continue
+            cands.append((make, rows, ColumnPlan(n_f, c)))
+        # argmin makespan; ties -> smaller footprint -> more chunks
+        best = min(cands,
+                   key=lambda c: (c[0], c[1], -c[2].num_chunks))
+        candidates[i] = cands
+        plans.append(best[2])
+    budget = min(budget, row_budget) if row_budget is not None else budget
+    return _shrink_to_budget(plans, candidates, overhead, mult, budget)
+
+
+def choose_forest_plan(forest, arch, *, num_rows: int = 1024,
+                       sys_cfg=None, headroom: int = 0,
+                       num_chunks: int | None = None):
+    """Single-column variant of :func:`choose_representation` for GBDT
+    threshold tables (no complement planes; priced with the ``>``-only
+    probe the inference wave actually issues)."""
+    from repro.core import cost
+    from repro.core.encoding import (ColumnPlan, column_footprint_rows,
+                                     infer_n_bits)
+    from repro.core.machine import BankedSubarray
+
+    from repro.apps.gbdt import PAPER_GBDT_CHUNKS
+
+    sys_cfg = sys_cfg or cost.DESKTOP
+    n_decl = forest.n_bits
+    # thresholds LUT + shared scratch + masks + double-buffered acc
+    overhead = 2 + forest.num_features + 2
+    budget = num_rows - BankedSubarray.NUM_RESERVED
+    c_def = num_chunks or PAPER_GBDT_CHUNKS.get(n_decl, 1)
+    while overhead + column_footprint_rows(n_decl, c_def) > budget:
+        c_def += 1
+        if c_def > n_decl:
+            raise MemoryError(
+                f"no chunking of {n_decl}-bit thresholds fits "
+                f"{num_rows} rows")
+    def_rows = column_footprint_rows(n_decl, c_def)
+    def_make = _probe_makespan(n_decl, c_def, arch, sys_cfg, kind="gt")
+    n_f = min(max(infer_n_bits(forest.thresholds.reshape(-1),
+                               headroom=headroom), 1), n_decl)
+    cands = [(def_make, def_rows, ColumnPlan(n_decl, c_def))]
+    for c in range(1, n_f + 1):
+        rows = column_footprint_rows(n_f, c)
+        if rows > def_rows or overhead + rows > budget:
+            continue
+        make = _probe_makespan(n_f, c, arch, sys_cfg, kind="gt")
+        if make > def_make:
+            continue
+        cands.append((make, rows, ColumnPlan(n_f, c)))
+    return min(cands, key=lambda c: (c[0], c[1], -c[2].num_chunks))[2]
+
+
+def _default_uniform_chunks(n_bits: int, arch, n_feat: int, num_rows: int,
+                            start: int | None = None) -> int:
+    """The fixed table-wide default chunk count: the paper's §6.2 value
+    (or ``start``), bumped until the full engine set fits -- the same
+    rule :class:`repro.apps.predicate.PudQueryEngine` applies, so the
+    optimizer's baseline is exactly what the engine would have built."""
+    from repro.core.encoding import column_footprint_rows
+    from repro.core.machine import BankedSubarray, PuDArch
+
+    from repro.apps.predicate import PAPER_PREDICATE_CHUNKS
+
+    budget = num_rows - BankedSubarray.NUM_RESERVED - (2 + 4 + 2)
+    mult = 2 if arch is PuDArch.UNMODIFIED else 1
+    c = start or PAPER_PREDICATE_CHUNKS.get((n_bits, arch), 1)
+    while n_feat * mult * column_footprint_rows(n_bits, c) > budget:
+        c += 1
+        if c > n_bits:
+            raise MemoryError(
+                f"no chunking of {n_bits}-bit features fits {num_rows} "
+                f"rows for {n_feat} features")
+    return c

@@ -56,6 +56,21 @@ query kind)`` on the session resource -- scalars and feature indices
 are traced operands, so repeated jobs re-trace ZERO times (regression-
 tested); the cache is dropped with the resource.
 
+Adaptive representation
+-----------------------
+``create_table(..., representation="auto")`` (and ``load_forest``'s
+counterpart) runs the :func:`~repro.pud.planner.choose_representation`
+optimizer: per column it infers the minimal bit width actually needed
+by the data (plus ``headroom`` guard bits), prices every candidate
+chunking through the channel scheduler, and keeps the
+``(n_bits, num_chunks)`` pair minimizing predicted makespan -- never
+slower and never larger than the fixed default, which is always in the
+candidate set.  ``handle.representation`` reports the per-column
+:class:`~repro.core.encoding.ColumnPlan`s and the LUT-row savings;
+:meth:`recode_column` re-encodes one hot column in place by riding the
+evict/reload path (the rebuilt layout is audited by pudlint's PL501
+representation pass on the next verified job).
+
 In-DRAM data movement
 ---------------------
 Bulk data movement inside a session never round-trips the host when a
@@ -140,6 +155,15 @@ class TableHandle(ResourceHandle):
     num_records: int = 0
     n_bits: int = 0
 
+    @property
+    def representation(self) -> dict:
+        """Per-column representation report: the active
+        :class:`~repro.core.encoding.ColumnPlan`s (inferred widths and
+        chunk counts) and the LUT-row footprint versus the fixed
+        uniform default.  ``status`` stays the planner lifecycle
+        string; this is the representation view."""
+        return self.session.representation_report(self)
+
 
 @dataclass
 class ForestHandle(ResourceHandle):
@@ -214,6 +238,15 @@ class PudSession:
             raise ValueError("need at least one device")
         self.planner = Planner(self.devices)
         self._auto = 0
+        # Adaptive-representation state, keyed by resource name: the
+        # per-column ColumnPlans (mutable -- recode_column edits them
+        # in place) plus the source data the plans were derived from
+        # (recode validation re-checks value ranges against it).  Build
+        # closures read these LATE, so an evict/reload rebuild picks up
+        # recoded plans.
+        self._plans: dict[str, list] = {}
+        self._tables: dict[str, Any] = {}
+        self._forest_plans: dict[str, Any] = {}
 
     # ------------------------------------------------------------------ #
     # Declarative resources
@@ -228,6 +261,7 @@ class PudSession:
                      num_chunks: int | None = None,
                      cols_per_bank: int = 65536,
                      channels="auto",
+                     representation: str = "fixed", headroom: int = 0,
                      pinned: bool = False) -> TableHandle:
         """Register a table resource and (when capacity allows) load it
         across the fleet.  ``data`` is a
@@ -236,9 +270,21 @@ class PudSession:
         width.  Records shard across devices, then across
         ``shards_per_device`` channel-spread bank groups per device.
         Returns immediately with a handle; ``handle.status`` is
-        ``"queued"`` when the placement is waiting for capacity."""
+        ``"queued"`` when the placement is waiting for capacity.
+
+        ``representation="auto"`` (clutch only) runs the
+        :func:`~repro.pud.planner.choose_representation` optimizer:
+        each column gets the ``(n_bits, num_chunks)`` pair minimizing
+        predicted makespan given its observed value range (plus
+        ``headroom`` guard bits above the observed maximum), never
+        slower or larger than the fixed default.  ``"fixed"`` keeps the
+        declared uniform width/chunking."""
         from repro.apps.predicate import Table
 
+        if representation not in ("fixed", "auto"):
+            raise ValueError(
+                f"representation must be 'fixed' or 'auto', "
+                f"got {representation!r}")
         if not isinstance(data, Table):
             arr = np.asarray(data)
             if n_bits is None:
@@ -249,13 +295,30 @@ class PudSession:
                                                         dtype=np.uint64)
                                    for f in range(arr.shape[1])])
         name = name or self._auto_name("table")
+        self._tables[name] = data
+        if representation == "auto":
+            if method != "clutch":
+                raise ValueError(
+                    "representation='auto' requires method='clutch' "
+                    "(bit-serial tables have no chunk plan to optimize)")
+            from .planner import choose_representation
+
+            self._plans[name] = choose_representation(
+                data, self.arch,
+                num_rows=min(d.num_rows for d in self.devices),
+                sys_cfg=self.sys_cfg, headroom=headroom,
+                num_chunks=num_chunks)
 
         def build():
+            # read the plan set LATE: recode_column mutates it and
+            # rides this rebuild on the evict/reload path
+            plans = self._plans.get(name)
             return QueryBatchExecutor(
                 data, self.arch, self.devices,
                 shards_per_device=shards_per_device, method=method,
                 num_chunks=num_chunks, cols_per_bank=cols_per_bank,
-                channels=channels, hosts=self.hosts)
+                channels=channels, hosts=self.hosts,
+                plans=tuple(plans) if plans is not None else None)
 
         self.planner.admit(name, "table", build, pinned=pinned)
         return TableHandle(name=name, session=self,
@@ -266,6 +329,7 @@ class PudSession:
                     groups_per_device: int = 2, banks_per_group: int = 4,
                     num_chunks: int | None = None,
                     channels="auto", replicate: str = "rowclone",
+                    representation: str = "fixed", headroom: int = 0,
                     pinned: bool = False) -> ForestHandle:
         """Register an oblivious forest (thresholds + one-hot masks
         replicated into ``groups_per_device`` channel-spread groups on
@@ -274,8 +338,23 @@ class PudSession:
         only each channel's first replica and clones the rest in-DRAM
         (RowClone/MRACT waves, zero host bytes per extra replica);
         ``"host"`` re-loads every replica over the pins (the
-        baseline)."""
+        baseline).  ``representation="auto"`` sizes the threshold LUT
+        to the observed threshold range via
+        :func:`~repro.pud.planner.choose_forest_plan` (priced with the
+        ``>``-only probe inference actually issues)."""
+        if representation not in ("fixed", "auto"):
+            raise ValueError(
+                f"representation must be 'fixed' or 'auto', "
+                f"got {representation!r}")
         name = name or self._auto_name("forest")
+        if representation == "auto":
+            from .planner import choose_forest_plan
+
+            self._forest_plans[name] = choose_forest_plan(
+                forest, self.arch,
+                num_rows=min(d.num_rows for d in self.devices),
+                sys_cfg=self.sys_cfg, headroom=headroom,
+                num_chunks=num_chunks)
 
         def build():
             return GbdtBatchExecutor(
@@ -283,7 +362,8 @@ class PudSession:
                 groups_per_device=groups_per_device,
                 banks_per_group=banks_per_group, num_chunks=num_chunks,
                 channels=channels, hosts=self.hosts,
-                replicate=replicate)
+                replicate=replicate,
+                plan=self._forest_plans.get(name))
 
         self.planner.admit(name, "forest", build, pinned=pinned)
         return ForestHandle(name=name, session=self,
@@ -295,12 +375,123 @@ class PudSession:
         the admission queue drains FIFO."""
         self.planner.release(handle.name)
         self._fused.pop(handle.name, None)
+        self._plans.pop(handle.name, None)
+        self._tables.pop(handle.name, None)
+        self._forest_plans.pop(handle.name, None)
 
     def evict(self, handle: ResourceHandle) -> None:
         """Reclaim a resource's banks now; it reloads on next use.
         The fused cache is reclaimed with it."""
         self.planner.evict(handle.name)
         self._fused.pop(handle.name, None)
+
+    # ------------------------------------------------------------------ #
+    # Adaptive representation
+    # ------------------------------------------------------------------ #
+    def recode_column(self, handle: TableHandle, column: int,
+                      n_bits: int | None = None,
+                      num_chunks: int | None = None):
+        """Re-encode one table column under a new ``(n_bits,
+        num_chunks)`` representation, riding the existing evict/reload
+        path: the resource's banks are reclaimed now, and the next job
+        rebuilds every shard with the updated per-column plan (the
+        rebuilt layout is audited by pudlint's PL501 representation
+        pass).  Omitted arguments keep the column's current value.
+        Returns the new :class:`~repro.core.encoding.ColumnPlan`."""
+        from repro.core.encoding import ColumnPlan
+        from repro.core.machine import BankedSubarray, PuDArch
+
+        name = handle.name
+        table = self._tables.get(name)
+        if table is None:
+            raise KeyError(f"unknown table {handle.name!r} "
+                           "(dropped, or from another session?)")
+        n_feat = len(table.features)
+        if not 0 <= column < n_feat:
+            raise IndexError(
+                f"column {column} out of range for {n_feat}-feature table")
+        num_rows = min(d.num_rows for d in self.devices)
+        plans = self._plans.get(name)
+        if plans is None:
+            # fixed-representation table: seed declared-width plans so a
+            # single column can move without disturbing the others
+            from .planner import _default_uniform_chunks
+
+            c_def = _default_uniform_chunks(
+                table.n_bits, self.arch, n_feat, num_rows)
+            plans = [ColumnPlan(table.n_bits, c_def)
+                     for _ in range(n_feat)]
+            self._plans[name] = plans
+        old = plans[column]
+        bits = old.n_bits if n_bits is None else int(n_bits)
+        vals = table.features[column]
+        if vals.size and int(vals.max()) >= (1 << bits):
+            raise ValueError(
+                f"column {column}: values reach {int(vals.max())}, which "
+                f"overflows a {bits}-bit recode "
+                f"(representable range [0, {(1 << bits) - 1}])")
+        chunks = (min(old.num_chunks, bits) if num_chunks is None
+                  else int(num_chunks))
+        new = ColumnPlan(bits, chunks)
+        plans[column] = new
+        # pre-flight the budget the rebuild will check, so a bad recode
+        # fails HERE (state rolled back) instead of wedging the resource
+        mult = 2 if self.arch is PuDArch.UNMODIFIED else 1
+        need = 2 + 4 + 2 + mult * sum(p.rows_required for p in plans)
+        budget = num_rows - BankedSubarray.NUM_RESERVED
+        if need > budget:
+            plans[column] = old
+            raise MemoryError(
+                f"recode to {new} needs {need} rows > budget {budget} "
+                f"({num_rows}-row subarray); pick more chunks or fewer "
+                "bits")
+        r = self.planner.resources.get(name)
+        if r is not None and r.state == "ready":
+            self.planner.evict(name)
+        self._fused.pop(name, None)
+        return new
+
+    def representation_report(self, handle: TableHandle) -> dict:
+        """Per-column representation view of a table resource: the
+        active plans (``mode="auto"`` after the optimizer or a recode;
+        ``"fixed"`` otherwise) and the LUT-row footprint next to the
+        fixed uniform default -- ``saved_rows`` is the optimizer's
+        win."""
+        from repro.core.encoding import column_footprint_rows
+        from repro.core.machine import PuDArch
+        from .planner import _default_uniform_chunks
+
+        name = handle.name
+        table = self._tables.get(name)
+        if table is None:
+            raise KeyError(f"unknown table {handle.name!r} "
+                           "(dropped, or from another session?)")
+        n_feat = len(table.features)
+        num_rows = min(d.num_rows for d in self.devices)
+        mult = 2 if self.arch is PuDArch.UNMODIFIED else 1
+        c_def = _default_uniform_chunks(
+            table.n_bits, self.arch, n_feat, num_rows)
+        fixed_col = column_footprint_rows(table.n_bits, c_def) * mult
+        plans = self._plans.get(name)
+        columns = []
+        total = 0
+        for i in range(n_feat):
+            if plans is not None:
+                p = plans[i]
+                rows = p.rows_required * mult
+                columns.append({"column": i, "n_bits": p.n_bits,
+                                "num_chunks": p.num_chunks,
+                                "lut_rows": rows})
+            else:
+                rows = fixed_col
+                columns.append({"column": i, "n_bits": table.n_bits,
+                                "num_chunks": c_def, "lut_rows": rows})
+            total += rows
+        fixed_total = n_feat * fixed_col
+        return {"mode": "auto" if plans is not None else "fixed",
+                "columns": columns, "lut_rows": total,
+                "fixed_lut_rows": fixed_total,
+                "saved_rows": fixed_total - total}
 
     # ------------------------------------------------------------------ #
     # Serving hooks (autoscaler knobs)
@@ -370,6 +561,19 @@ class PudSession:
         for dev in dict.fromkeys(d for d, _ in ex.placements):
             report.diagnostics.extend(
                 pudlint.clone_confinement_diags(dev))
+        # PL501 representation audit: every shard's encoded LUT layouts
+        # must match the declared per-column plans (catches stale planes
+        # after a recode_column that skipped the rebuild)
+        plans = getattr(ex, "plans", None)
+        if plans is not None:
+            for eng in ex.engines:
+                report.diagnostics.extend(pudlint.representation_diags(
+                    eng.engines, plans, group=eng.label))
+        plan = getattr(ex, "plan", None)
+        if plan is not None:
+            for eng in ex.engines:
+                report.diagnostics.extend(pudlint.representation_diags(
+                    [eng.engine], [plan], group=eng.label))
         pudlint.enforce(report, self.verify, where="PudSession job")
 
     def query(self, table: TableHandle,
